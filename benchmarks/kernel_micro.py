@@ -1,0 +1,56 @@
+"""Pallas-kernel microbenchmarks (interpret mode on CPU: correctness +
+call overhead; real speed is a TPU property — see §Roofline)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import decode_attention, gram_matrix, risk_eval
+from repro.kernels import ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                     # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def kernel_micro() -> List[str]:
+    out = []
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (512, 256))
+    Z = jax.random.normal(jax.random.PRNGKey(1), (512, 256))
+    us_pal = _time(lambda a, b: gram_matrix(a, b, bm=128, bn=128, bk=128),
+                   X, Z)
+    us_ref = _time(jax.jit(lambda a, b: ref.gram_ref(a, b)), X, Z)
+    err = float(jnp.max(jnp.abs(
+        gram_matrix(X, Z, bm=128, bn=128, bk=128) - ref.gram_ref(X, Z))))
+    out.append(f"kernel_gram_512x512x256,{us_pal:.0f},"
+               f"ref_us={us_ref:.0f} maxerr={err:.2e}")
+
+    W = jax.random.normal(jax.random.PRNGKey(2), (16, 256))
+    b = jnp.zeros((16,))
+    y = jnp.sign(jax.random.normal(jax.random.PRNGKey(3), (512,)))
+    m = jnp.ones((512,))
+    us_pal = _time(lambda: risk_eval(X, W, b, y, m, bn=128))
+    l, _ = risk_eval(X, W, b, y, m, bn=128)
+    lr, _ = ref.hinge_scores_ref(X, W, b, y, m)
+    out.append(f"kernel_hinge_512x16,{us_pal:.0f},"
+               f"maxerr={float(jnp.max(jnp.abs(l - lr))):.2e}")
+
+    q = jax.random.normal(jax.random.PRNGKey(4), (4, 16, 64))
+    k = jax.random.normal(jax.random.PRNGKey(5), (4, 4, 1024, 64))
+    v = jax.random.normal(jax.random.PRNGKey(6), (4, 4, 1024, 64))
+    vlen = jnp.asarray(1000)
+    us_pal = _time(lambda: decode_attention(q, k, v, vlen, bs=256))
+    errd = float(jnp.max(jnp.abs(
+        decode_attention(q, k, v, vlen, bs=256) -
+        ref.decode_attention_ref(q, k, v, vlen))))
+    out.append(f"kernel_flashdecode_b4h16s1024,{us_pal:.0f},maxerr={errd:.2e}")
+    return out

@@ -1,0 +1,66 @@
+"""Aggregate dry-run artifacts into the §Roofline table.
+
+Reads benchmarks/artifacts/dryrun_*.json (produced by
+``python -m repro.launch.dryrun``) and emits one row per
+(arch × shape × mesh × rules): the three terms, the dominant
+bottleneck, MODEL_FLOPS ratio, and fit status.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+# prefer the post-hillclimb sweep (live framework state); the
+# pre-hillclimb baseline artifacts remain in artifacts/ for §Perf diffs
+_OPT = os.path.join(os.path.dirname(__file__), "artifacts_optimized")
+_BASE = os.path.join(os.path.dirname(__file__), "artifacts")
+ARTIFACTS = _OPT if os.path.isdir(_OPT) and os.listdir(_OPT) else _BASE
+HBM_PER_CHIP = 16e9     # v5e
+
+
+def load_records(pattern: str = "dryrun_*.json") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_rows(rules: str = None) -> List[str]:
+    out = []
+    for r in load_records():
+        if rules and r.get("rules") != rules:
+            continue
+        tag = f"{r['arch']}|{r.get('shape')}|{r['mesh']}|{r.get('rules')}"
+        if r["status"] == "skip":
+            out.append(f"roofline_{tag},0,SKIP")
+            continue
+        if r["status"] != "ok":
+            out.append(f"roofline_{tag},0,ERROR:{r.get('error', '')[:80]}")
+            continue
+        t = r["roofline"]
+        arg = r.get("argument_size_in_bytes", 0)
+        tmp = r.get("temp_size_in_bytes", 0)
+        fits = (arg + tmp) <= HBM_PER_CHIP
+        ratio = r.get("useful_flops_ratio")
+        useful = f"useful={ratio:.2f} " if ratio else ""
+        out.append(
+            f"roofline_{tag},{t['compute_s'] * 1e6:.1f},"
+            f"mem_s={t['memory_s']:.4g} coll_s={t['collective_s']:.4g} "
+            f"dom={r['dominant'].replace('_s', '')} {useful}"
+            f"hbm_args+temp={(arg + tmp) / 1e9:.1f}GB fits={fits}")
+    return out
+
+
+def summarize(rules: str = "baseline") -> List[str]:
+    recs = [r for r in load_records() if r.get("rules") == rules]
+    ok = [r for r in recs if r["status"] == "ok"]
+    skip = [r for r in recs if r["status"] == "skip"]
+    err = [r for r in recs if r["status"] == "error"]
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    return [f"roofline_summary,{len(recs)},"
+            f"ok={len(ok)} skip={len(skip)} error={len(err)} dominants={doms}"]

@@ -1,0 +1,55 @@
+"""Benchmark harness — one function per paper table/figure plus the
+hardware benches. Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--only tableX]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+
+    from benchmarks.tables import (table5_dataset, table6_confusion2,
+                                   table7_rank2, table8_confusion3,
+                                   table9_rank3)
+    from benchmarks.scaling import scaling_partitions
+    from benchmarks.kernel_micro import kernel_micro
+    from benchmarks.roofline import roofline_rows, summarize
+
+    benches = [
+        ("table5", table5_dataset),
+        ("table6", table6_confusion2),
+        ("table7", table7_rank2),
+        ("table8", table8_confusion3),
+        ("table9", table9_rank3),
+        ("scaling", scaling_partitions),
+        ("kernels", kernel_micro),
+        ("roofline", roofline_rows),
+        ("roofline_summary", summarize),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

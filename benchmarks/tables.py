@@ -1,0 +1,124 @@
+"""One benchmark per paper table (Tablo 5-9), on the synthetic corpus
+(DESIGN.md §6 — 2014 Twitter data unavailable offline; structure and
+metrics match; the paper's absolute numbers are printed alongside)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (MRSVMConfig, SVMConfig, confusion_matrix,
+                        fit_mapreduce, fit_one_vs_rest, predict)
+from repro.text import (CorpusConfig, fit_transform, generate, select_top_k,
+                        vectorize)
+
+# Paper reference numbers
+PAPER_TABLO6 = np.array([[40.61, 9.03], [5.04, 45.31]])
+PAPER_TABLO8 = np.array([[23.63, 6.24, 3.25],
+                         [3.44, 21.47, 8.06],
+                         [2.16, 8.46, 23.28]])
+
+_N_MSG = 3000
+_FEATURES = 4096
+_SELECTED = 1024     # paper pipeline includes a feature-selection stage
+
+
+def _pipeline(classes, seed=0, select=True):
+    cfg = CorpusConfig(num_messages=_N_MSG, classes=classes, seed=seed)
+    corpus = generate(cfg)
+    X, _ = fit_transform(jnp.asarray(vectorize(corpus.texts, _FEATURES)))
+    y = jnp.asarray(corpus.labels, jnp.float32)
+    if select:       # χ² top-k ("nitelik seçimi", Yang & Pedersen ref)
+        X, _ = select_top_k(X, y, list(classes), _SELECTED)
+    return corpus, X, y
+
+
+def table5_dataset() -> List[str]:
+    """Tablo 5: class distribution of the training corpora."""
+    out = []
+    t0 = time.time()
+    for classes, paper in (((-1, 1), (172489, 174669)),
+                           ((-1, 0, 1), (111779, 109853, 113438))):
+        corpus, _, y = _pipeline(classes)
+        counts = {c: int(np.sum(corpus.labels == c)) for c in classes}
+        out.append(f"table5_classes{len(classes)},"
+                   f"{(time.time() - t0) * 1e6 / _N_MSG:.2f},"
+                   f"counts={counts} paper={paper}")
+    return out
+
+
+def _fit2(X, y):
+    mcfg = MRSVMConfig(sv_capacity=256, gamma=1e-4, max_rounds=4,
+                       svm=SVMConfig(C=1.0, max_epochs=15))
+    return fit_mapreduce(X, y, num_partitions=8, cfg=mcfg), mcfg
+
+
+def table6_confusion2() -> List[str]:
+    """Tablo 6: 2-class confusion matrix (global %)."""
+    _, X, y = _pipeline((-1, 1))
+    t0 = time.time()
+    model, mcfg = _fit2(X, y)
+    train_us = (time.time() - t0) * 1e6
+    pred = predict(model, X, mcfg)
+    cm = confusion_matrix(y, pred, [-1, 1])
+    diag = np.trace(cm)
+    return [f"table6_confusion2,{train_us:.0f},"
+            f"diag={diag:.2f}% paper_diag={np.trace(PAPER_TABLO6):.2f}% "
+            f"cm={np.round(cm, 2).tolist()}"]
+
+
+def table7_rank2() -> List[str]:
+    """Tablo 7: top-10 universities by message count with polarity rates."""
+    corpus, X, y = _pipeline((-1, 1))
+    t0 = time.time()
+    model, mcfg = _fit2(X, y)
+    pred = np.asarray(predict(model, X, mcfg))
+    by_uni: Dict[int, Tuple[int, float]] = {}
+    for u in range(len(corpus.university_names)):
+        sel = corpus.universities == u
+        n = int(sel.sum())
+        if n:
+            by_uni[u] = (n, float((pred[sel] > 0).mean()))
+    top10 = sorted(by_uni.items(), key=lambda kv: -kv[1][0])[:10]
+    rows = [f"{corpus.university_names[u][:24]}:n={n}:pos={p:.2f}"
+            for u, (n, p) in top10]
+    return [f"table7_rank2,{(time.time() - t0) * 1e6:.0f},{'|'.join(rows)}"]
+
+
+def table8_confusion3() -> List[str]:
+    """Tablo 8: 3-class confusion matrix (global %)."""
+    _, X, y = _pipeline((-1, 0, 1))
+    t0 = time.time()
+    mcfg = MRSVMConfig(sv_capacity=256, gamma=1e-4, max_rounds=3,
+                       svm=SVMConfig(C=1.0, max_epochs=15))
+    ovr = fit_one_vs_rest(X, y, [-1, 0, 1], 8, mcfg)
+    train_us = (time.time() - t0) * 1e6
+    pred = ovr.predict(X)
+    cm = confusion_matrix(y, pred, [-1, 0, 1])
+    return [f"table8_confusion3,{train_us:.0f},"
+            f"diag={np.trace(cm):.2f}% paper_diag={np.trace(PAPER_TABLO8):.2f}% "
+            f"cm={np.round(cm, 2).tolist()}"]
+
+
+def table9_rank3() -> List[str]:
+    """Tablo 9: top-10 universities, 3-class rates."""
+    corpus, X, y = _pipeline((-1, 0, 1), seed=1)
+    t0 = time.time()
+    mcfg = MRSVMConfig(sv_capacity=256, max_rounds=3,
+                       svm=SVMConfig(C=1.0, max_epochs=15))
+    ovr = fit_one_vs_rest(X, y, [-1, 0, 1], 8, mcfg)
+    pred = np.asarray(ovr.predict(X))
+    by_uni = {}
+    for u in range(len(corpus.university_names)):
+        sel = corpus.universities == u
+        n = int(sel.sum())
+        if n:
+            by_uni[u] = (n, float((pred[sel] > 0).mean()),
+                         float((pred[sel] == 0).mean()),
+                         float((pred[sel] < 0).mean()))
+    top10 = sorted(by_uni.items(), key=lambda kv: -kv[1][0])[:10]
+    rows = [f"{corpus.university_names[u][:20]}:n={n}:+{p:.2f}/0{z:.2f}/-{m:.2f}"
+            for u, (n, p, z, m) in top10]
+    return [f"table9_rank3,{(time.time() - t0) * 1e6:.0f},{'|'.join(rows)}"]

@@ -1,0 +1,51 @@
+"""The paper's system in its production form: MapReduce-SVM rounds
+executed under shard_map, with dataset rows sharded across devices and
+the SV merge as an all-gather (the ICI 'shuffle').
+
+Runs on 8 faked host devices (set before jax import):
+
+    PYTHONPATH=src python examples/distributed_svm.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MRSVMConfig, SVMConfig
+from repro.core.mapreduce_svm import build_sharded_round, init_sv_buffer
+from repro.text import CorpusConfig, fit_transform, generate, vectorize
+
+
+def main():
+    corpus = generate(CorpusConfig(num_messages=2048, classes=(-1, 1)))
+    X, _ = fit_transform(jnp.asarray(vectorize(corpus.texts, 2048)))
+    y = jnp.asarray(corpus.labels, jnp.float32)
+    n, d = X.shape
+    ndev = len(jax.devices())
+    print(f"{n} rows × {d} features over {ndev} devices "
+          f"({n // ndev} rows/device)")
+
+    mesh = jax.make_mesh((ndev,), ("data",))
+    cfg = MRSVMConfig(sv_capacity=256, gamma=1e-4,
+                      svm=SVMConfig(C=1.0, max_epochs=15))
+    round_fn = build_sharded_round(mesh, ("data",), cfg, n // ndev)
+
+    sv = init_sv_buffer(cfg.sv_capacity, d)
+    mask = jnp.ones((n,))
+    prev = float("inf")
+    for t in range(6):
+        sv, risks, w, b = round_fn(X, y, mask, sv)
+        r = float(jnp.min(risks))
+        print(f"round {t}: R_emp={r:.4f} |SV|={int(jnp.sum(sv.mask))} "
+              f"(all-gather merged {ndev} reducers)")
+        if t > 0 and abs(prev - r) <= cfg.gamma:       # eq. 8
+            print("eq. 8 convergence")
+            break
+        prev = r
+    acc = float(jnp.mean(jnp.sign(X @ w + b) == y))
+    print(f"best-reducer hypothesis accuracy: {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

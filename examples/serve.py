@@ -1,0 +1,68 @@
+"""Batched serving demo: prefill a batch of prompts, then decode with
+the KV-cache serve path (greedy), reporting tokens/s.
+
+    PYTHONPATH=src python examples/serve.py --arch tinyllama-1.1b --tokens 32
+(archs run as REDUCED smoke variants on CPU; full configs are for TPU.)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.config import smoke_variant
+from repro.models.transformer import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--cache-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = smoke_variant(get_config(args.arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B = args.batch
+    print(f"serving {cfg.name} (reduced) batch={B} "
+          f"cache={args.cache_len}")
+
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(key, (B, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    if cfg.family == "audio":
+        frames = jax.random.normal(jax.random.PRNGKey(2),
+                                   (B, cfg.encoder_seq, cfg.d_model))
+        state = model.init_decode_state(B, args.cache_len, frames=frames,
+                                        params=params)
+    else:
+        state = model.init_decode_state(B, args.cache_len)
+
+    step = jax.jit(model.decode_step)
+    # teacher-forced prefill through the decode path (prefill_32k-style
+    # bulk prefill is the dryrun's prefill_step; here we stream)
+    for t in range(args.prompt_len):
+        logits, state = step(params, state, prompts[:, t:t + 1])
+
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.tokens - 1):
+        logits, state = step(params, state, tok)
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"generated {args.tokens} tokens × {B} seqs in {dt:.2f}s "
+          f"→ {args.tokens * B / dt:,.0f} tok/s")
+    print("sample token ids:", gen[0, :16].tolist())
+    assert int(state.pos) == args.prompt_len + args.tokens - 1
+
+
+if __name__ == "__main__":
+    main()

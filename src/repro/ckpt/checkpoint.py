@@ -1,0 +1,69 @@
+"""Flat-npz pytree checkpointing (the framework's fault-tolerance layer;
+stands in for HDFS durability in the paper's Hadoop deployment)."""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "||"
+
+
+_BF16 = "__bf16__"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:     # npz can't store bf16: view u16
+            key += _BF16
+            arr = arr.view(np.uint16)
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, tree: Any, step: Optional[int] = None) -> None:
+    """Atomic save (write tmp → rename)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    if step is not None:
+        meta = os.path.join(os.path.dirname(path) or ".", "ckpt_meta.json")
+        with open(meta, "w") as f:
+            json.dump({"latest_step": step, "file": os.path.basename(path)}, f)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (validates shapes/dtypes)."""
+    data = np.load(path, allow_pickle=False)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_elems, leaf in paths:
+        key = _SEP.join(str(p) for p in path_elems)
+        if key + _BF16 in data:
+            arr = data[key + _BF16].view(jnp.bfloat16)
+        elif key in data:
+            arr = data[key]
+        else:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    meta = os.path.join(ckpt_dir, "ckpt_meta.json")
+    if not os.path.exists(meta):
+        return None
+    with open(meta) as f:
+        return json.load(f).get("latest_step")

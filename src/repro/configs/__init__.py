@@ -1,0 +1,53 @@
+"""Assigned-architecture registry: ``get_config(arch_id)``.
+
+Every config cites its source (model card / paper) and carries the
+exact dimensions from the assignment table.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "qwen3_moe_235b_a22b",
+    "tinyllama_1_1b",
+    "rwkv6_7b",
+    "llava_next_34b",
+    "mixtral_8x22b",
+    "llama3_8b",
+    "whisper_base",
+    "qwen2_1_5b",
+    "chatglm3_6b",
+    "zamba2_1_2b",
+    # the paper's own workload (not in the assigned 10; extra)
+    "svm_tfidf",
+]
+
+_ALIASES = {
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "rwkv6-7b": "rwkv6_7b",
+    "llava-next-34b": "llava_next_34b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "llama3-8b": "llama3_8b",
+    "whisper-base": "whisper_base",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "chatglm3-6b": "chatglm3_6b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "svm-tfidf": "svm_tfidf",
+}
+
+
+def canonical(arch: str) -> str:
+    return _ALIASES.get(arch, arch.replace("-", "_").replace(".", "_"))
+
+
+def get_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, object]:
+    return {a: get_config(a) for a in ARCH_IDS}

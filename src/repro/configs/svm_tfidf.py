@@ -1,0 +1,20 @@
+"""svm-tfidf — the paper's own workload: distributed MapReduce SVM on a
+TF×IDF matrix (Çatak 2014). Not one of the assigned 10; used by the
+paper-table benchmarks and the MapReduce-SVM dry-run."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SVMTfidfConfig:
+    name: str = "svm-tfidf"
+    family: str = "svm"
+    num_features: int = 131072       # hashed TF×IDF space (2^17)
+    sv_capacity: int = 2048
+    rows_per_device: int = 8192      # training rows resident per device
+    C: float = 1.0
+    max_epochs: int = 10
+    dtype: str = "bfloat16"   # §Perf it.5: bf16 feature stream, f32 solver state
+    citation: str = "Çatak 2014 (the reproduced paper)"
+
+
+CONFIG = SVMTfidfConfig()

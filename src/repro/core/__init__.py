@@ -1,0 +1,25 @@
+"""Core library: the paper's MapReduce SVM contribution in JAX."""
+from repro.core.kernel_fns import KernelConfig, apply_kernel
+from repro.core.svm import (BinarySVM, SVMConfig, decision_kernel,
+                            decision_linear, fit_binary, support_mask)
+from repro.core.mapreduce_svm import (MapReduceSVM, MRSVMConfig, RoundResult,
+                                      SVBuffer, decision_values,
+                                      fit_mapreduce, init_sv_buffer,
+                                      make_sharded_round, mapreduce_round,
+                                      predict, update_mapreduce)
+from repro.core.multiclass import (OneVsOneSVM, OneVsRestSVM,
+                                   confusion_matrix, fit_one_vs_one,
+                                   fit_one_vs_rest)
+from repro.core.risk import converged, empirical_risk, hinge_loss, zero_one_loss
+
+__all__ = [
+    "KernelConfig", "apply_kernel", "BinarySVM", "SVMConfig",
+    "decision_kernel", "decision_linear", "fit_binary", "support_mask",
+    "MapReduceSVM", "MRSVMConfig", "RoundResult", "SVBuffer",
+    "decision_values", "fit_mapreduce", "init_sv_buffer",
+    "make_sharded_round", "mapreduce_round", "predict",
+    "update_mapreduce",
+    "OneVsOneSVM", "OneVsRestSVM", "confusion_matrix", "fit_one_vs_one",
+    "fit_one_vs_rest", "converged", "empirical_risk", "hinge_loss",
+    "zero_one_loss",
+]

@@ -1,0 +1,57 @@
+"""Kernel functions for the (soft-margin) SVM dual.
+
+The paper (Çatak 2014) trains soft-margin SVMs (eq. 1-2) on TF×IDF
+features; linear kernels dominate in text classification, but the
+dual solver in :mod:`repro.core.svm` is kernelized so rbf/poly are
+first-class too.
+
+All kernels take ``X (n, d)`` and ``Z (m, d)`` and return ``K (n, m)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+KernelName = Literal["linear", "rbf", "poly"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    name: KernelName = "linear"
+    gamma: float = 1.0      # rbf / poly scale
+    degree: int = 3         # poly
+    coef0: float = 0.0      # poly
+
+    def fn(self):
+        return functools.partial(apply_kernel, cfg=self)
+
+
+def linear_kernel(X: jax.Array, Z: jax.Array) -> jax.Array:
+    return X @ Z.T
+
+
+def rbf_kernel(X: jax.Array, Z: jax.Array, gamma: float) -> jax.Array:
+    # ||x - z||^2 = ||x||^2 + ||z||^2 - 2 x.z ; numerically clamped at 0.
+    xx = jnp.sum(X * X, axis=-1, keepdims=True)
+    zz = jnp.sum(Z * Z, axis=-1, keepdims=True)
+    sq = jnp.maximum(xx + zz.T - 2.0 * (X @ Z.T), 0.0)
+    return jnp.exp(-gamma * sq)
+
+
+def poly_kernel(X: jax.Array, Z: jax.Array, gamma: float, degree: int,
+                coef0: float) -> jax.Array:
+    return (gamma * (X @ Z.T) + coef0) ** degree
+
+
+def apply_kernel(X: jax.Array, Z: jax.Array, *, cfg: KernelConfig) -> jax.Array:
+    if cfg.name == "linear":
+        return linear_kernel(X, Z)
+    if cfg.name == "rbf":
+        return rbf_kernel(X, Z, cfg.gamma)
+    if cfg.name == "poly":
+        return poly_kernel(X, Z, cfg.gamma, cfg.degree, cfg.coef0)
+    raise ValueError(f"unknown kernel {cfg.name!r}")

@@ -1,0 +1,33 @@
+"""Empirical risk, losses, and the paper's stopping rule (eq. 6-8)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def hinge_loss(scores: jax.Array, y: jax.Array) -> jax.Array:
+    """ℓ(h(x), y) = max(0, 1 - y·f(x)) per example."""
+    return jnp.maximum(0.0, 1.0 - y * scores)
+
+
+def zero_one_loss(scores: jax.Array, y: jax.Array) -> jax.Array:
+    return (jnp.sign(scores) != jnp.sign(y)).astype(scores.dtype)
+
+
+def empirical_risk(scores: jax.Array, y: jax.Array,
+                   mask: Optional[jax.Array] = None,
+                   loss: str = "hinge") -> jax.Array:
+    """R_emp(h) = (1/n) Σ ℓ(h(x_i), y_i)  (paper eq. 6)."""
+    per_ex = hinge_loss(scores, y) if loss == "hinge" else zero_one_loss(scores, y)
+    if mask is None:
+        return jnp.mean(per_ex)
+    m = mask.astype(per_ex.dtype)
+    return jnp.sum(per_ex * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def converged(risk_prev: jax.Array, risk_curr: jax.Array,
+              gamma: float) -> jax.Array:
+    """|R_emp(h^{t-1}) - R_emp(h^t)| <= γ  (paper eq. 8)."""
+    return jnp.abs(risk_prev - risk_curr) <= gamma

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, lm_batch_at, lm_batches, svm_rows

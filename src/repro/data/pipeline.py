@@ -1,0 +1,101 @@
+"""Deterministic synthetic data pipeline.
+
+Two producers:
+* token streams for backbone LM training (Zipf-distributed tokens with
+  a planted n-gram structure so loss visibly decreases);
+* the TF×IDF row stream for the MapReduce SVM (delegates to
+  repro.text.corpus + tokenizer at small scale; direct synthetic
+  feature rows at dry-run scale).
+
+Batches are host-generated numpy, then device_put with the step's
+input sharding by the launcher. Iterators are stateless-seeded
+(seed, step) → reproducible and resumable from any checkpoint step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    batch_size: int = 8
+    seq_len: int = 128
+    seed: int = 0
+
+
+def _tokens_for_step(cfg: DataConfig, vocab: int, step: int,
+                     structure: int = 97) -> np.ndarray:
+    """Zipfian tokens with a deterministic bigram rule planted:
+    after token t comes (t * 31 + 7) % structure with prob ~0.5 —
+    learnable signal for smoke-training."""
+    rng = np.random.default_rng((cfg.seed, step))
+    B, S = cfg.batch_size, cfg.seq_len
+    base = rng.zipf(1.3, size=(B, S)).clip(1, vocab - 1)
+    follow = (base * 31 + 7) % min(structure, vocab)
+    use_follow = rng.random((B, S)) < 0.5
+    out = base.copy()
+    out[:, 1:] = np.where(use_follow[:, 1:], follow[:, :-1], base[:, 1:])
+    return out.astype(np.int32)
+
+
+def lm_batches(cfg: DataConfig, model_cfg: ModelConfig,
+               start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    """Next-token LM batches: {tokens, labels} (+ frontend stubs)."""
+    step = start_step
+    while True:
+        yield lm_batch_at(cfg, model_cfg, step)
+        step += 1
+
+
+def lm_batch_at(cfg: DataConfig, model_cfg: ModelConfig,
+                step: int) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng((cfg.seed, step, 1))
+    S = cfg.seq_len
+    P = model_cfg.num_prefix_tokens if model_cfg.frontend == "vision" else 0
+    toks = _tokens_for_step(cfg, model_cfg.vocab_size, step)
+    batch: Dict[str, np.ndarray] = {}
+    if model_cfg.is_encoder_decoder:
+        batch["frames"] = rng.normal(
+            0, 1, (cfg.batch_size, model_cfg.encoder_seq,
+                   model_cfg.d_model)).astype(np.float32)
+        batch["tokens"] = toks[:, :S]
+        batch["labels"] = np.concatenate(
+            [toks[:, 1:S], toks[:, :1]], axis=1).astype(np.int32)
+    elif P > 0:
+        batch["prefix_embeds"] = rng.normal(
+            0, 1, (cfg.batch_size, P, model_cfg.d_model)).astype(np.float32)
+        text = toks[:, :S - P]
+        batch["tokens"] = text[:, :-1] if text.shape[1] > 1 else text
+        batch["labels"] = text[:, 1:] if text.shape[1] > 1 else text
+        # keep tokens/labels same length
+        batch["tokens"] = text
+        batch["labels"] = np.concatenate(
+            [text[:, 1:], text[:, :1]], axis=1).astype(np.int32)
+    else:
+        batch["tokens"] = toks
+        batch["labels"] = np.concatenate(
+            [toks[:, 1:], toks[:, :1]], axis=1).astype(np.int32)
+    return batch
+
+
+def svm_rows(num_rows: int, num_features: int, seed: int = 0,
+             signal_dims: int = 64) -> Tuple[np.ndarray, np.ndarray]:
+    """Synthetic sparse-ish TF×IDF-like rows with a linear signal."""
+    rng = np.random.default_rng(seed)
+    w = np.zeros(num_features, np.float32)
+    idx = rng.choice(num_features, signal_dims, replace=False)
+    w[idx] = rng.normal(0, 1, signal_dims)
+    X = np.zeros((num_rows, num_features), np.float32)
+    nnz = max(4, num_features // 256)
+    for i in range(num_rows):
+        cols = rng.choice(num_features, nnz, replace=False)
+        X[i, cols] = rng.random(nnz).astype(np.float32)
+    norm = np.linalg.norm(X, axis=1, keepdims=True)
+    X /= np.maximum(norm, 1e-9)
+    y = np.sign(X @ w + 1e-3).astype(np.float32)
+    return X, y

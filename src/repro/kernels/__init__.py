@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot spots + serving.
+
+Each kernel ships: <name>.py (pl.pallas_call + BlockSpec), an oracle in
+ref.py, a wrapper in ops.py, and a shape/dtype sweep in tests/.
+"""
+from repro.kernels.ops import (decode_attention, gram_matrix,
+                               risk_eval, svm_cd_epoch)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: flash-decode single-token GQA attention.
+
+The serving hot path (decode_32k / long_500k) is one query token
+against a deep KV cache — memory-bound streaming of K/V. This kernel
+tiles the cache's sequence axis; each grid step loads a (bs, hd) K/V
+block into VMEM and maintains the online-softmax running (max, sum,
+acc) in the output block, so the (S,) score row never materializes in
+HBM. Beyond-paper: the jnp path materializes (B, H, S) scores.
+
+Grid: (B, KV, S/bs). Blocks: q (G, hd); k/v (bs, hd);
+out (G, hd) f32 accumulated in-place + (G, 1) running max/sum buffers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flash_decode_kernel(q_ref, k_ref, v_ref, vlen_ref, o_ref, m_ref, l_ref,
+                         *, s_steps: int, bs: int, scale: float):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale         # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bs, hd)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (bs, hd)
+    scores = jax.lax.dot_general(                       # (G, bs)
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    base = s_idx * bs
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(pos < vlen_ref[0, 0], scores, -1e30)
+
+    m_prev = m_ref[0, 0]                                # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    p = jnp.exp(scores - m_new)                         # (G, bs)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[0, 0] = l_ref[0, 0] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    o_ref[0, 0] = o_ref[0, 0] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[0, 0] = m_new
+
+    @pl.when(s_idx == s_steps - 1)
+    def _final():
+        o_ref[0, 0] = o_ref[0, 0] / jnp.maximum(l_ref[0, 0], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 valid_len: jax.Array, *, bs: int = 512,
+                 interpret: bool = True) -> jax.Array:
+    """q (B, H, hd); k/v (B, KV, S, hd); valid_len () → (B, H, hd)."""
+    B, H, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    bs_ = min(bs, S)
+    assert S % bs_ == 0, f"cache len {S} must divide block {bs_}"
+    s_steps = S // bs_
+    qg = q.reshape(B, KV, G, hd)
+    vlen = jnp.broadcast_to(valid_len.astype(jnp.int32), (1, 1))
+
+    out, m, l = pl.pallas_call(
+        functools.partial(_flash_decode_kernel, s_steps=s_steps, bs=bs_,
+                          scale=1.0 / (hd ** 0.5)),
+        grid=(B, KV, s_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs_, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs_, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, s: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, h, s: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, vlen)
+    return out.reshape(B, H, hd).astype(q.dtype)

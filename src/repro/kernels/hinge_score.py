@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: fused hypothesis scoring + hinge-risk reduction.
+
+The MapReduce-SVM driver evaluates EVERY reducer hypothesis on the
+full dataset each round (paper eq. 6-7) — an (n, d) × (d, L) matmul
+followed by hinge loss and a masked reduction. Unfused, the (n, L)
+score matrix round-trips HBM; this kernel keeps each (bn, L) score
+tile in VMEM, applies the hinge, and accumulates the per-hypothesis
+partial sums in-place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hinge_kernel(x_ref, w_ref, b_ref, y_ref, m_ref, loss_ref, cnt_ref, *,
+                  n_steps: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    x = x_ref[...].astype(jnp.float32)           # (bn, d)
+    w = w_ref[...].astype(jnp.float32)           # (L, d)
+    scores = jax.lax.dot_general(                # (bn, L)
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) + b_ref[...]
+    y = y_ref[...].astype(jnp.float32)           # (1, bn)
+    m = m_ref[...].astype(jnp.float32)
+    hinge = jnp.maximum(0.0, 1.0 - y.T * scores) * m.T
+    loss_ref[...] += jnp.sum(hinge, axis=0, keepdims=True)
+    cnt_ref[...] += jnp.sum(m, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def hinge_scores(X: jax.Array, W: jax.Array, b: jax.Array, y: jax.Array,
+                 mask: jax.Array, *, bn: int = 1024,
+                 interpret: bool = True):
+    """→ (losses (L,), count ()). X (n,d), W (L,d), b (L,)."""
+    n, d = X.shape
+    L = W.shape[0]
+    bn_ = min(bn, max(128, (n + 127) // 128 * 128))
+    n_p = (n + bn_ - 1) // bn_ * bn_
+    Xp = jnp.pad(X, ((0, n_p - n), (0, 0)))
+    yp = jnp.pad(y, (0, n_p - n))[None, :]
+    mp = jnp.pad(mask, (0, n_p - n))[None, :]
+    n_steps = n_p // bn_
+
+    loss, cnt = pl.pallas_call(
+        functools.partial(_hinge_kernel, n_steps=n_steps),
+        grid=(n_steps,),
+        in_specs=[
+            pl.BlockSpec((bn_, d), lambda i: (i, 0)),
+            pl.BlockSpec((L, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, L), lambda i: (0, 0)),
+            pl.BlockSpec((1, bn_), lambda i: (0, i)),
+            pl.BlockSpec((1, bn_), lambda i: (0, i)),
+        ],
+        out_specs=[pl.BlockSpec((1, L), lambda i: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, L), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(Xp, W, b[None, :], yp, mp)
+    return loss[0], cnt[0, 0]

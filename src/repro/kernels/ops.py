@@ -1,0 +1,42 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret=True`` (default here) executes the kernel body in Python on
+CPU — the validation mode for this container; on real TPU hardware pass
+``interpret=False`` (the launcher does, keyed on backend).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.gram import gram
+from repro.kernels.hinge_score import hinge_scores
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.svm_step import cd_epoch
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gram_matrix(X, Z, kind="linear", **kw):
+    """Tiled Gram matrix; drop-in ``gram_fn`` for core.svm.fit_binary."""
+    kw.setdefault("interpret", not on_tpu())
+    return gram(X, Z, kind=kind, **kw)
+
+
+def risk_eval(X, W, b, y, mask, **kw):
+    """Fused hinge risk of L hypotheses; → (losses (L,), count ())."""
+    kw.setdefault("interpret", not on_tpu())
+    return hinge_scores(X, W, b, y, mask, **kw)
+
+
+def decode_attention(q, k, v, valid_len, **kw):
+    """Flash-decode attention for the serving path."""
+    kw.setdefault("interpret", not on_tpu())
+    return flash_decode(q, k, v, valid_len, **kw)
+
+
+def svm_cd_epoch(X, y, alpha, w, b, mask, C=1.0, **kw):
+    """VMEM-resident dual-CD epoch (the paper's reducer hot loop)."""
+    kw.setdefault("interpret", not on_tpu())
+    return cd_epoch(X, y, alpha, w, b, mask, C=C, **kw)

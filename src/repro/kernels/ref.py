@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_ref(X: jax.Array, Z: jax.Array, kind: str = "linear",
+             gamma: float = 1.0, coef0: float = 0.0,
+             degree: int = 3) -> jax.Array:
+    """K = k(X, Z): (n, d) × (m, d) → (n, m)."""
+    G = X @ Z.T
+    if kind == "linear":
+        return G
+    if kind == "poly":
+        return (gamma * G + coef0) ** degree
+    if kind == "rbf":
+        xx = jnp.sum(X * X, axis=-1, keepdims=True)
+        zz = jnp.sum(Z * Z, axis=-1, keepdims=True)
+        return jnp.exp(-gamma * jnp.maximum(xx + zz.T - 2.0 * G, 0.0))
+    raise ValueError(kind)
+
+
+def hinge_scores_ref(X: jax.Array, W: jax.Array, b: jax.Array,
+                     y: jax.Array, mask: jax.Array):
+    """Fused risk evaluation (paper eq. 6/7 hot path).
+
+    X (n, d), W (L, d), b (L,), y (n,), mask (n,) →
+      losses (L,): Σ_i mask_i · max(0, 1 − y_i·(x_i·w_l + b_l))
+      counts (): Σ mask
+    """
+    scores = X @ W.T + b[None, :]
+    hinge = jnp.maximum(0.0, 1.0 - y[:, None] * scores)
+    return jnp.sum(hinge * mask[:, None], axis=0), jnp.sum(mask)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         valid_len: jax.Array) -> jax.Array:
+    """Single-token GQA decode attention.
+
+    q (B, H, hd), k/v (B, KV, S, hd), valid_len () → out (B, H, hd).
+    Positions ≥ valid_len are masked.
+    """
+    B, H, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    scores = jnp.einsum("bkgh,bkth->bkgt", qg, k) / jnp.sqrt(hd)
+    pos = jnp.arange(S)
+    scores = jnp.where(pos[None, None, None, :] < valid_len,
+                       scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgt,bkth->bkgh", probs.astype(v.dtype), v)
+    return out.reshape(B, H, hd)
+
+
+def cd_epoch_ref(X, W_unused=None, *, alpha, w, b, y, mask, C=1.0):
+    """Sequential dual-CD epoch — mirrors core.svm.fit_binary_linear."""
+    import numpy as np
+    Xn = np.asarray(X, np.float32)
+    a = np.asarray(alpha, np.float32).copy()
+    wv = np.asarray(w, np.float32).copy()
+    bv = float(b)
+    yn = np.asarray(y, np.float32)
+    mn = np.asarray(mask, np.float32)
+    q = (Xn * Xn).sum(1) + 1.0
+    q = np.where(mn > 0, q, 1.0)
+    for i in range(Xn.shape[0]):
+        g = yn[i] * (wv @ Xn[i] + bv) - 1.0
+        a_new = min(max(a[i] - g / q[i], 0.0), C)
+        delta = (a_new - a[i]) * mn[i]
+        a[i] += delta
+        wv += delta * yn[i] * Xn[i]
+        bv += delta * yn[i]
+    return a, wv, bv

@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST run before any other import (jax locks the device count on first
+#   backend init). 512 host devices exist ONLY inside this program.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For a given (arch × input-shape × mesh), builds the step program,
+``jit(...).lower(...).compile()``s it against the production mesh, and
+records memory_analysis / cost_analysis / collective stats as a JSON
+artifact for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    python -m repro.launch.dryrun --arch llama3-8b --shape decode_32k --multi-pod
+    python -m repro.launch.dryrun --all            # every pair, single-pod
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            rules_name: str = "baseline", out_dir: str = "benchmarks/artifacts",
+            verbose: bool = True, measure_layers: bool = True) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.launch import steps as steps_lib
+    from repro.launch.costs import analytic_costs
+    from repro.launch.hlo_analysis import (collective_stats,
+                                           combine_with_layer, dominant_term,
+                                           roofline_terms,
+                                           total_collective_bytes)
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.rules import get_rules
+
+    from repro.configs import canonical
+    cfg = get_config(arch)
+    arch = canonical(arch)          # one artifact name per arch
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "chips": chips, "rules": rules_name, "status": "ok"}
+
+    t0 = time.time()
+    try:
+        if getattr(cfg, "family", None) == "svm":
+            bundle = steps_lib.build_svm_round_step(cfg, mesh)
+            shape = None
+        else:
+            shape = steps_lib.INPUT_SHAPES[shape_name]
+            skip = steps_lib.applicability(cfg, shape)
+            if skip:
+                record.update(status="skip", reason=skip)
+                _write(record, out_dir)
+                if verbose:
+                    print(json.dumps(record, indent=2))
+                return record
+            bundle = steps_lib.build_step(cfg, mesh, shape,
+                                          rules=get_rules(rules_name))
+
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(bundle.fn,
+                             in_shardings=bundle.in_shardings,
+                             out_shardings=bundle.out_shardings,
+                             donate_argnums=bundle.donate_argnums)
+            lowered = jitted.lower(*bundle.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+
+        # scan-trip correction: standalone single-layer probes recover the
+        # collectives hidden inside while-loop bodies (counted once in text)
+        if measure_layers and getattr(cfg, "family", None) != "svm":
+            try:
+                from repro.launch.probes import build_probes, measure_probes
+                probes = build_probes(cfg, mesh, shape, get_rules(rules_name))
+                pm = measure_probes(probes, mesh)
+                record["probes"] = {
+                    k: {"extra_trips": v["extra_trips"],
+                        "collectives": v["collectives"]}
+                    for k, v in pm.items()}
+                for v in pm.values():
+                    coll = combine_with_layer(coll, v["collectives"],
+                                              v["extra_trips"])
+            except Exception as e:          # probes are best-effort
+                record["probe_error"] = f"{type(e).__name__}: {e}"
+        coll_bytes = total_collective_bytes(coll)
+        wire_bytes = total_collective_bytes(coll, "wire_bytes")
+
+        # raw XLA numbers (per-device module; loop bodies counted once)
+        flops_xla = float(cost.get("flops", 0.0)) if cost else 0.0
+        bytes_xla = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+
+        if getattr(cfg, "family", None) == "svm":
+            # no scan-over-layers: XLA numbers usable directly (×chips)
+            flops_glob, hbm_glob = flops_xla * chips, bytes_xla * chips
+        else:
+            ac = analytic_costs(cfg, shape)
+            flops_glob, hbm_glob = ac.flops, ac.hbm_bytes
+        terms = roofline_terms(flops_glob, hbm_glob, coll_bytes, chips)
+        terms_wire = roofline_terms(flops_glob, hbm_glob, wire_bytes, chips)
+        record.update(
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            flops_global=flops_glob, hbm_bytes_global=hbm_glob,
+            xla_per_device_flops=flops_xla, xla_per_device_bytes=bytes_xla,
+            collective_bytes_per_device=coll_bytes,
+            collective_wire_bytes_per_device=wire_bytes,
+            collectives=coll,
+            roofline=terms, collective_s_wire=terms_wire["collective_s"],
+            dominant=dominant_term(terms))
+        if mem is not None:
+            for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    record[k] = int(v)
+        if getattr(cfg, "family", None) != "svm":
+            record["model_flops_analytic"] = _model_flops(cfg, shape)
+            record["useful_flops_ratio"] = (
+                record["model_flops_analytic"] / max(flops_glob, 1.0))
+    except Exception as e:
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+    _write(record, out_dir)
+    if verbose:
+        slim = {k: v for k, v in record.items() if k != "traceback"}
+        print(json.dumps(slim, indent=2, default=str))
+    return record
+
+
+def _model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D for the step's tokens.
+    Training counts fwd+bwd (6·N per token); prefill/decode fwd only (2·N)."""
+    n_active = cfg.active_param_count()
+    S = shape.seq_len
+    if cfg.is_encoder_decoder:
+        S = min(S, cfg.max_decoder_len)   # decoder-context cap
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * S
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * S
+    return 2.0 * n_active * shape.global_batch     # decode: 1 token/seq
+
+
+def _write(record: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    name = (f"dryrun_{record['arch']}_{record.get('shape')}"
+            f"_{record['mesh']}_{record.get('rules', 'baseline')}.json")
+    with open(os.path.join(out_dir, name.replace("/", "_")), "w") as f:
+        json.dump(record, f, indent=2, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default="train_4k",
+                    choices=list(("train_4k", "prefill_32k", "decode_32k",
+                                  "long_500k", "svm")))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default="baseline")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (assigned arch × shape) on this mesh")
+    ap.add_argument("--out", default="benchmarks/artifacts")
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.configs import ARCH_IDS
+        ok = True
+        for arch in ARCH_IDS:
+            if arch == "svm_tfidf":
+                rec = run_one(arch, "svm", args.multi_pod, args.rules,
+                              args.out)
+                ok &= rec["status"] in ("ok", "skip")
+                continue
+            for shape in ("train_4k", "prefill_32k", "decode_32k",
+                          "long_500k"):
+                rec = run_one(arch, shape, args.multi_pod, args.rules,
+                              args.out)
+                ok &= rec["status"] in ("ok", "skip")
+        sys.exit(0 if ok else 1)
+
+    rec = run_one(args.arch, args.shape, args.multi_pod, args.rules, args.out)
+    sys.exit(0 if rec["status"] in ("ok", "skip") else 1)
+
+
+if __name__ == "__main__":
+    main()

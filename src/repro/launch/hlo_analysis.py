@@ -1,0 +1,138 @@
+"""Roofline-term extraction from a lowered/compiled XLA program.
+
+compute term    = FLOPs / (chips × peak)
+memory term     = HBM bytes / (chips × HBM bw)
+collective term = collective bytes / ICI bw   (per-device program)
+
+Collective bytes are NOT in cost_analysis — we parse the
+post-SPMD-partitioning HLO text. Post-optimization HLO prints operand
+NAMES without types, so sizes are derived from the op's output type and
+its replica_groups:
+
+    all-gather          operand = out/g      wire ≈ out·(g-1)/g
+    reduce-scatter      operand = out·g      wire ≈ out·(g-1)   (=op·(g-1)/g)
+    all-reduce          operand = out        wire ≈ 2·out·(g-1)/g
+    all-to-all          operand = out        wire ≈ out·(g-1)/g
+    collective-permute  operand = out        wire = out
+
+Caveat recorded in EXPERIMENTS.md: ops inside while-loop (scan) bodies
+appear ONCE in the text; dryrun's --measure pass compiles a standalone
+single layer to recover per-trip counts (collective_total =
+full + (L-1)·layer).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<out>\([^=]*?\)|[\w.\-]+\[[\d,]*\]"
+    r"(?:\{[\d,]*\})?)\s+(?P<op>[\w\-]+)\(", re.M)
+
+
+def _tensor_sizes(type_str: str) -> List[int]:
+    out = []
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append(n * _DTYPE_BYTES[dt])
+    return out
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-kind {count, operand_bytes, output_bytes, wire_bytes}."""
+    stats: Dict[str, Dict[str, float]] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        base = next((c for c in _COLLECTIVES
+                     if op == c or op == c + "-start"), None)
+        if base is None:
+            continue
+        sizes = _tensor_sizes(m.group("out"))
+        if not sizes:
+            continue
+        biggest = max(sizes)
+        g = max(_group_size(line), 1)
+        if base == "all-gather":
+            operand, wire = biggest / g, biggest * (g - 1) / g
+        elif base == "reduce-scatter":
+            operand, wire = float(biggest), biggest * (g - 1) / g
+        elif base == "all-reduce":
+            operand, wire = float(biggest), 2.0 * biggest * (g - 1) / g
+        elif base == "all-to-all":
+            operand, wire = float(biggest), biggest * (g - 1) / g
+        else:                                   # collective-permute
+            operand, wire = float(biggest), float(biggest)
+        s = stats.setdefault(base, {"count": 0, "operand_bytes": 0.0,
+                                    "output_bytes": 0.0, "wire_bytes": 0.0})
+        s["count"] += 1
+        s["operand_bytes"] += operand
+        s["output_bytes"] += biggest
+        s["wire_bytes"] += wire
+    return stats
+
+
+def total_collective_bytes(stats: Dict[str, Dict[str, float]],
+                           key: str = "operand_bytes") -> float:
+    """Spec convention: sum of operand sizes over every collective op.
+    ``wire_bytes`` available as the physically-motivated alternative."""
+    return float(sum(s[key] for s in stats.values()))
+
+
+def combine_with_layer(full: Dict, layer: Dict, extra_trips: int) -> Dict:
+    """collective_total = full + extra_trips × standalone-layer (scan fix)."""
+    out = {k: dict(v) for k, v in full.items()}
+    for kind, s in layer.items():
+        t = out.setdefault(kind, {"count": 0, "operand_bytes": 0.0,
+                                  "output_bytes": 0.0, "wire_bytes": 0.0})
+        for key in ("count", "operand_bytes", "output_bytes", "wire_bytes"):
+            t[key] = t.get(key, 0) + extra_trips * s.get(key, 0)
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float, collective_bytes: float,
+                   chips: int) -> Dict[str, float]:
+    """Terms in seconds. flops/hbm_bytes are GLOBAL; collective_bytes is
+    the per-device program's traffic (post-partition HLO)."""
+    return {
+        "compute_s": flops / (chips * PEAK_FLOPS_BF16),
+        "memory_s": hbm_bytes / (chips * HBM_BW),
+        "collective_s": collective_bytes / ICI_BW,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k])

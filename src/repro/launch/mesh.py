@@ -1,0 +1,46 @@
+"""Production mesh construction (DESIGN.md §5).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — jax locks the device count at first backend init, and only
+``dryrun.py`` (which sets XLA_FLAGS first) may see 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e target: 16×16 = 256 chips per pod; 2 pods multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // max(data, 1)))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the batch dim shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_parallel_size(mesh) -> int:
+    size = 1
+    for a in batch_axes(mesh):
+        size *= mesh.shape[a]
+    return size
+
+
+def model_parallel_size(mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+# Hardware constants for the roofline (TPU v5e, per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link

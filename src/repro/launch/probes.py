@@ -1,0 +1,318 @@
+"""Standalone single-layer probes.
+
+XLA counts scan bodies once, so the full-program HLO text shows ONE
+layer's collectives. Compiling the SAME layer standalone recovers the
+per-trip contribution:
+
+    collective_total = full_program + Σ_probe (trips_probe − 1) × probe
+
+Each probe returns a StepBundle-compatible (fn, args, in_shardings)
+plus its extra-trip multiplier for the given architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as shd
+from repro.launch.steps import InputShape
+from repro.models.config import ModelConfig
+from repro.models.layers import template_abstract
+from repro.models.transformer import build_model
+
+
+class Probe(NamedTuple):
+    name: str
+    fn: Any
+    args: Tuple
+    in_shardings: Tuple
+    extra_trips: int      # multiplier applied to this probe's collectives
+
+
+def _hidden_abstract(cfg, B, S):
+    return jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.jdtype)
+
+
+def _hidden_spec(mesh, B):
+    bp = shd.batch_pspec(mesh, B)
+    b = tuple(bp) if bp != P(None) else (None,)
+    return P(*(b + (None, None)))
+
+
+def _layer_pspecs(tpl, mesh, rules):
+    from repro.models.layers import template_axes
+    abstract = template_abstract(tpl, jnp.float32)
+    axes = template_axes(tpl)
+    return jax.tree.map(
+        lambda a, ax: shd.pspec_for(a.shape, ax, mesh, rules),
+        abstract, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def build_probes(cfg: ModelConfig, mesh, shape: InputShape,
+                 rules: Optional[dict] = None) -> List[Probe]:
+    kv_r = shd.kv_repeat_for(cfg, mesh)
+    model = build_model(cfg, kv_repeat=kv_r, mesh=mesh)
+    B = shape.global_batch
+    S = shape.seq_len
+    if cfg.is_encoder_decoder and shape.kind != "decode":
+        S = min(S, cfg.max_decoder_len)
+    probes: List[Probe] = []
+    hs = _hidden_spec(mesh, B)
+
+    def fwd_probe(name, layer_fn, tpl, trips, seq=S, grad=(shape.kind == "train")):
+        lspec = _layer_pspecs(tpl, mesh, rules)
+        labs = template_abstract(tpl, cfg.jdtype)
+        h = _hidden_abstract(cfg, B, seq)
+
+        if grad:
+            def fn(h, lp):
+                def obj(h, lp):
+                    # keep the objective in the native activation dtype —
+                    # an f32 upcast here would poison the cotangent stream
+                    # and overstate backward collective bytes 2×
+                    return jnp.sum(layer_fn(lp, h)).astype(jnp.float32)
+                return jax.grad(obj, argnums=(0, 1))(h, lp)
+        else:
+            def fn(h, lp):
+                return layer_fn(lp, h)
+        probes.append(Probe(name, fn, (h, labs), (hs, lspec), trips))
+
+    if shape.kind in ("train", "prefill"):
+        positions = None
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            def layer_fn(lp, h):
+                Bs, Ss, _ = h.shape
+                pos = jnp.broadcast_to(jnp.arange(Ss)[None, :], (Bs, Ss))
+                out, _ = model._layer_fwd(lp, h, pos)
+                return out
+            fwd_probe("layer", layer_fn, model.layer_template(),
+                      cfg.num_layers - 1)
+        elif cfg.attn_free:
+            from repro.models import rwkv6
+            from repro.models.layers import apply_norm
+
+            def layer_fn(lp, h):
+                zp = jnp.zeros((h.shape[0], 1, cfg.d_model), h.dtype)
+                x = apply_norm(h, lp["ln1"], "layernorm", cfg.norm_eps)
+                h = h + rwkv6.apply_rwkv_time(lp["time"], x, cfg, zp)
+                x = apply_norm(h, lp["ln2"], "layernorm", cfg.norm_eps)
+                return h + rwkv6.apply_rwkv_channel(lp["channel"], x, zp)
+            fwd_probe("layer", layer_fn, model.layer_template(),
+                      cfg.num_layers - 1)
+        elif cfg.family == "hybrid":
+            from repro.models import mamba2
+            from repro.models.layers import apply_norm, mlp_template, norm_template
+
+            def mamba_fn(lp, h):
+                x = apply_norm(h, lp["norm"], cfg.norm_style, cfg.norm_eps)
+                return h + mamba2.apply_mamba2(lp["mamba"], x, cfg)
+            mamba_tpl = {"norm": norm_template(cfg.d_model, cfg.norm_style),
+                         "mamba": mamba2.mamba2_template(cfg)}
+            fwd_probe("mamba_layer", mamba_fn, mamba_tpl, cfg.num_layers - 1)
+
+            def shared_fn(sp, h):
+                Bs, Ss, _ = h.shape
+                pos = jnp.broadcast_to(jnp.arange(Ss)[None, :], (Bs, Ss))
+                return model._shared_block(sp, h, pos)
+            n_shared = cfg.num_layers // cfg.attn_every
+            fwd_probe("shared_block", shared_fn,
+                      model.template()["shared"], n_shared - 1)
+        elif cfg.is_encoder_decoder:
+            from repro.models import attention as attn_lib
+            from repro.models.layers import apply_mlp, apply_norm
+
+            def enc_fn(lp, h):
+                Bs, Ss, _ = h.shape
+                pos = jnp.broadcast_to(jnp.arange(Ss)[None, :], (Bs, Ss))
+                a = apply_norm(h, lp["attn_norm"], "layernorm", cfg.norm_eps)
+                h = h + attn_lib.attention(lp["attn"], a, cfg, positions=pos,
+                                           causal=False, kv_repeat=kv_r)
+                m = apply_norm(h, lp["mlp_norm"], "layernorm", cfg.norm_eps)
+                return h + apply_mlp(m, lp["mlp"], "gelu")
+            # un-stack: rebuild the unstacked encoder layer template
+            from repro.models.layers import mlp_template as _mlp, norm_template as _norm
+            enc_layer_tpl = {
+                "attn_norm": _norm(cfg.d_model, "layernorm"),
+                "attn": attn_lib.attn_template(cfg),
+                "mlp_norm": _norm(cfg.d_model, "layernorm"),
+                "mlp": _mlp(cfg.d_model, cfg.d_ff, "gelu"),
+            }
+            fwd_probe("enc_layer", enc_fn, enc_layer_tpl,
+                      cfg.encoder_layers - 1, seq=min(cfg.encoder_seq, 1536))
+
+            def dec_fn(lp, h):
+                Bs, Ss, _ = h.shape
+                pos = jnp.broadcast_to(jnp.arange(Ss)[None, :], (Bs, Ss))
+                enc_pos = pos
+                a = apply_norm(h, lp["self_norm"], "layernorm", cfg.norm_eps)
+                h = h + attn_lib.attention(lp["self_attn"], a, cfg,
+                                           positions=pos, kv_repeat=kv_r)
+                c = apply_norm(h, lp["cross_norm"], "layernorm", cfg.norm_eps)
+                h = h + attn_lib.attention(lp["cross_attn"], c, cfg,
+                                           positions=pos, causal=False,
+                                           kv_x=h, kv_positions=enc_pos,
+                                           kv_repeat=kv_r)
+                m = apply_norm(h, lp["mlp_norm"], "layernorm", cfg.norm_eps)
+                return h + apply_mlp(m, lp["mlp"], "gelu")
+            dec_layer_tpl = {
+                "self_norm": _norm(cfg.d_model, "layernorm"),
+                "self_attn": attn_lib.attn_template(cfg),
+                "cross_norm": _norm(cfg.d_model, "layernorm"),
+                "cross_attn": attn_lib.attn_template(cfg),
+                "mlp_norm": _norm(cfg.d_model, "layernorm"),
+                "mlp": _mlp(cfg.d_model, cfg.d_ff, "gelu"),
+            }
+            fwd_probe("dec_layer", dec_fn, dec_layer_tpl, cfg.num_layers - 1)
+        return probes
+
+    # ---- decode probes ------------------------------------------------------
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    h1 = _hidden_abstract(cfg, B, 1)
+
+    if cfg.family in ("dense", "moe", "vlm") or cfg.is_encoder_decoder:
+        from repro.models import attention as attn_lib
+        cache_len = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        KVr = cfg.num_kv_heads * kv_r
+        kv_abs = jax.ShapeDtypeStruct((B, KVr, cache_len, cfg.hd), cfg.jdtype)
+        cache_abs = attn_lib.LayerKVCache(k=kv_abs, v=kv_abs)
+        bp = shd.batch_pspec(mesh, B)
+        b = tuple(bp) if bp != P(None) else (None,)
+        kv_spec = P(*b, shd._axis_if_divisible(mesh, "model", KVr),
+                    None, None)
+        cache_spec = attn_lib.LayerKVCache(k=kv_spec, v=kv_spec)
+        if cfg.is_encoder_decoder:
+            # decode probe: self-attention step only (cross uses static enc KV)
+            from repro.models.layers import norm_template as _norm
+            tpl = {"attn_norm": _norm(cfg.d_model, "layernorm"),
+                   "attn": attn_lib.attn_template(cfg)}
+
+            def fn(h, lp, cache, pos):
+                from repro.models.layers import apply_norm
+                a = apply_norm(h, lp["attn_norm"], "layernorm", cfg.norm_eps)
+                out, cache = attn_lib.attention_decode_step(
+                    lp["attn"], a, cache, pos, cfg, kv_r)
+                return h + out, cache
+        else:
+            tpl = model.layer_template()
+
+            def fn(h, lp, cache, pos):
+                from repro.models.layers import apply_norm, apply_mlp
+                from repro.models import moe as moe_lib
+                a = apply_norm(h, lp["attn_norm"], cfg.norm_style,
+                               cfg.norm_eps)
+                out, cache = attn_lib.attention_decode_step(
+                    lp["attn"], a, cache, pos, cfg, kv_r)
+                h = h + out
+                m = apply_norm(h, lp["mlp_norm"], cfg.norm_style, cfg.norm_eps)
+                if cfg.is_moe:
+                    y, _ = moe_lib.apply_moe(lp["mlp"], m, cfg)
+                else:
+                    y = apply_mlp(m, lp["mlp"], cfg.mlp_style)
+                return h + y, cache
+        lspec = _layer_pspecs(tpl, mesh, rules)
+        labs = template_abstract(tpl, cfg.jdtype)
+        probes.append(Probe("layer_decode", fn,
+                            (h1, labs, cache_abs, pos_abs),
+                            (_hidden_spec(mesh, B), lspec, cache_spec, P()),
+                            cfg.num_layers - 1))
+    elif cfg.attn_free:
+        from repro.models import rwkv6
+        from repro.models.layers import apply_norm, norm_template as _norm
+        H = rwkv6.rwkv_heads(cfg)
+        S_abs = jax.ShapeDtypeStruct((B, H, rwkv6.HEADDIM, rwkv6.HEADDIM),
+                                     jnp.float32)
+        xp = jax.ShapeDtypeStruct((B, 1, cfg.d_model), cfg.jdtype)
+        tpl = model.layer_template()
+
+        def fn(h, lp, Swk, xpt, xpc):
+            x = apply_norm(h, lp["ln1"], "layernorm", cfg.norm_eps)
+            y, S_new = rwkv6.rwkv_time_decode_step(lp["time"], x, Swk, xpt,
+                                                   cfg)
+            h = h + y
+            x2 = apply_norm(h, lp["ln2"], "layernorm", cfg.norm_eps)
+            h = h + rwkv6.apply_rwkv_channel(lp["channel"], x2, xpc)
+            return h, S_new
+        bp = shd.batch_pspec(mesh, B)
+        b = tuple(bp) if bp != P(None) else (None,)
+        S_spec = P(*b, shd._axis_if_divisible(mesh, "model", H), None, None)
+        xp_spec = P(*b, None, None)
+        lspec = _layer_pspecs(tpl, mesh, rules)
+        labs = template_abstract(tpl, cfg.jdtype)
+        probes.append(Probe("layer_decode", fn, (h1, labs, S_abs, xp, xp),
+                            (_hidden_spec(mesh, B), lspec, S_spec, xp_spec,
+                             xp_spec), cfg.num_layers - 1))
+    elif cfg.family == "hybrid":
+        from repro.models import mamba2
+        from repro.models.layers import apply_norm, norm_template as _norm
+        d_inner, nh, N = mamba2.ssm_dims(cfg)
+        tpl = {"norm": _norm(cfg.d_model, cfg.norm_style),
+               "mamba": mamba2.mamba2_template(cfg)}
+        hst = jax.ShapeDtypeStruct((B, nh, mamba2.HEADDIM, N), jnp.float32)
+        cb = jax.ShapeDtypeStruct((B, cfg.ssm_conv - 1, d_inner + 2 * N),
+                                  cfg.jdtype)
+
+        def fn(h, lp, st_h, st_c):
+            st = mamba2.Mamba2State(h=st_h, conv_buf=st_c)
+            x = apply_norm(h, lp["norm"], cfg.norm_style, cfg.norm_eps)
+            y, st = mamba2.mamba2_decode_step(lp["mamba"], x, st, cfg)
+            return h + y, st
+        bp = shd.batch_pspec(mesh, B)
+        b = tuple(bp) if bp != P(None) else (None,)
+        h_spec = P(*b, shd._axis_if_divisible(mesh, "model", nh), None, None)
+        c_spec = P(*b, None,
+                   shd._axis_if_divisible(mesh, "model", d_inner + 2 * N))
+        lspec = _layer_pspecs(tpl, mesh, rules)
+        labs = template_abstract(tpl, cfg.jdtype)
+        probes.append(Probe("mamba_decode", fn, (h1, labs, hst, cb),
+                            (_hidden_spec(mesh, B), lspec, h_spec, c_spec),
+                            cfg.num_layers - 1))
+        # shared attention decode probe
+        from repro.models import attention as attn_lib
+        cache_len = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        KVr = cfg.num_kv_heads * kv_r
+        kv_abs = jax.ShapeDtypeStruct((B, KVr, cache_len, cfg.hd), cfg.jdtype)
+        cache_abs = attn_lib.LayerKVCache(k=kv_abs, v=kv_abs)
+        kv_spec = P(*b, shd._axis_if_divisible(mesh, "model", KVr), None,
+                    None)
+
+        def sfn(h, sp, cache, pos):
+            from repro.models.layers import apply_mlp
+            a = apply_norm(h, sp["attn_norm"], cfg.norm_style, cfg.norm_eps)
+            out, cache = attn_lib.attention_decode_step(
+                sp["attn"], a, cache, pos, cfg, kv_r)
+            h = h + out
+            m = apply_norm(h, sp["mlp_norm"], cfg.norm_style, cfg.norm_eps)
+            return h + apply_mlp(m, sp["mlp"], cfg.mlp_style), cache
+        stpl = model.template()["shared"]
+        n_shared = cfg.num_layers // cfg.attn_every
+        probes.append(Probe(
+            "shared_decode", sfn,
+            (h1, template_abstract(stpl, cfg.jdtype), cache_abs, pos_abs),
+            (_hidden_spec(mesh, B), _layer_pspecs(stpl, mesh, rules),
+             attn_lib.LayerKVCache(k=kv_spec, v=kv_spec), P()),
+            n_shared - 1))
+    return probes
+
+
+def measure_probes(probes: List[Probe], mesh) -> Dict[str, dict]:
+    """Compile each probe, return its collective stats + multiplier."""
+    from repro.launch.hlo_analysis import collective_stats
+    out = {}
+    for p in probes:
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(p.fn, in_shardings=p.in_shardings).lower(*p.args)
+            compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        out[p.name] = {
+            "extra_trips": p.extra_trips,
+            "collectives": collective_stats(compiled.as_text()),
+            "per_device_flops": float(cost.get("flops", 0.0)),
+            "per_device_bytes": float(cost.get("bytes accessed", 0.0)),
+        }
+    return out

@@ -1,0 +1,30 @@
+"""Named sharding-rule sets for §Perf experiments.
+
+``baseline`` is the paper-faithful-era standard (megatron TP + fsdp);
+the others are beyond-paper hillclimb variants toggled per experiment
+via ``--rules`` without touching model code.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from repro.launch.sharding import DEFAULT_RULES
+
+RULE_SETS: Dict[str, Dict[Optional[str], Tuple[str, ...]]] = {
+    "baseline": DEFAULT_RULES,
+    # TP-only: params replicated over data (no fsdp all-gathers; only
+    # valid for models that fit replicated — small archs).
+    "tp_only": {**DEFAULT_RULES, "embed": ()},
+    # fsdp-heavier: push ffn to data first (reduces model-axis traffic,
+    # increases data-axis gathers).
+    "fsdp_ffn": {**DEFAULT_RULES, "ffn": ("data", "model")},
+    # expert-first: for MoE, prefer experts on model and ffn on data.
+    "expert_first": {**DEFAULT_RULES, "ffn": ("data", "model"),
+                     "experts": ("model",)},
+}
+
+
+def get_rules(name: str):
+    if name not in RULE_SETS:
+        raise KeyError(f"unknown rule set {name!r}; have {list(RULE_SETS)}")
+    return RULE_SETS[name]

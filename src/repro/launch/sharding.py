@@ -1,0 +1,155 @@
+"""Logical-axis → mesh sharding rules with divisibility fallbacks.
+
+Baseline policy (recorded in EXPERIMENTS.md §Perf as "paper-faithful +
+standard megatron/fsdp"; beyond-paper variants toggle these rules):
+
+  vocab     → model      (vocab-parallel embedding + logits)
+  ffn       → model      (megatron column/row)
+  heads     → model      (attention head parallel)
+  experts   → model      (expert parallel; falls back when E < 16)
+  embed     → data       (ZeRO/FSDP: params+opt sharded over data)
+  kv_heads  → replicated (cache sharding handled via kv_repeat)
+  batch     → (pod, data)
+
+A rule is skipped when the dim doesn't divide the mesh axis or the axis
+is already used by another dim of the same tensor — the fallback chain
+picks the next candidate, ending at replication.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# Ordered mesh-axis candidates per logical axis.
+DEFAULT_RULES: Dict[Optional[str], Tuple[str, ...]] = {
+    "vocab": ("model",),
+    "embed": ("data",),
+    "embed_out": ("model",),
+    "ffn": ("model", "data"),
+    "heads": ("model",),
+    "heads_flat": ("model",),
+    "kv_heads": (),
+    "head_dim": (),
+    "experts": ("model",),
+    "layers": (),
+    None: (),
+}
+
+
+def pspec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+              mesh, rules: Optional[Dict] = None) -> P:
+    """Pick a PartitionSpec for one tensor, honoring divisibility and
+    one-mesh-axis-per-tensor constraints."""
+    rules = rules or DEFAULT_RULES
+    used = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        choice = None
+        for cand in rules.get(ax, ()):  # ordered candidates
+            if cand in mesh.axis_names and cand not in used \
+                    and dim % mesh.shape[cand] == 0:
+                choice = cand
+                break
+        if choice:
+            used.add(choice)
+        out.append(choice)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_pspecs(model, mesh, rules: Optional[Dict] = None):
+    """Walk the model's template → pytree of PartitionSpecs."""
+    abstract = model.abstract()
+    logical = model.logical_axes()
+    return jax.tree.map(
+        lambda a, ax: pspec_for(a.shape, ax, mesh, rules),
+        abstract, logical,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def kv_repeat_for(cfg: ModelConfig, mesh) -> int:
+    """Duplicate KV heads so the KV cache shards over ``model``.
+
+    r is the smallest factor with (KV·r) % model == 0 and (KV·r) | H;
+    r = 1 when impossible (cache replicated over model instead)."""
+    m = mesh.shape.get("model", 1)
+    KV, H = cfg.num_kv_heads, cfg.num_heads
+    if cfg.attn_free or m == 1 or KV % m == 0:
+        return 1
+    r = m // math.gcd(KV, m)
+    if (KV * r) % m == 0 and H % (KV * r) == 0:
+        return r
+    return 1
+
+
+def batch_pspec(mesh, batch_size: int) -> P:
+    """Shard batch over (pod, data) when divisible, else replicate."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and batch_size % dp == 0:
+        return P(axes if len(axes) > 1 else axes[0])
+    return P(None)
+
+
+def leading_batch_specs(tree_abstract, mesh, batch_size: int):
+    """Shard dim0 (batch) of every input leaf; rest replicated."""
+    bp = batch_pspec(mesh, batch_size)
+    def spec(a):
+        rest = (None,) * (len(a.shape) - 1)
+        return P(*(tuple(bp) + rest)) if bp != P(None) else P()
+    return jax.tree.map(spec, tree_abstract,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ---------------------------------------------------------------------------
+# Decode-state PartitionSpecs (per state family, by construction).
+# ---------------------------------------------------------------------------
+
+def _axis_if_divisible(mesh, axis: str, dim: int) -> Optional[str]:
+    return axis if (axis in mesh.axis_names and dim % mesh.shape[axis] == 0) \
+        else None
+
+
+def decode_state_pspecs(model, state_abstract, mesh, batch_size: int):
+    """PartitionSpecs for a decode-state pytree, keyed on leaf NAMES
+    (NamedTuple fields), which are stable by construction:
+
+      caches.k/v, shared_cache.*, cross_k/v : (L|nseg, B, KVr, S, hd)
+                                               → B→batch, KVr→model
+      S (RWKV wkv state)   : (L, B, H, hd, hd) → B→batch, H→model
+      ssm.h (Mamba2)       : (nseg, slen, B, nh, P, N) → B→batch, nh→model
+      ssm.conv_buf         : (nseg, slen, B, K, C) → B→batch, C→model
+      x_prev_*             : (L, B, 1, D) → B→batch
+      pos                  : () replicated
+    """
+    bp = batch_pspec(mesh, batch_size)
+    b = tuple(bp) if bp != P(None) else (None,)
+    md = lambda dim: _axis_if_divisible(mesh, "model", dim)
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(state_abstract)
+    specs = []
+    for path, leaf in paths:
+        name = str(path[-1]).strip(".")
+        sh = leaf.shape
+        if len(sh) == 0:
+            specs.append(P())
+        elif name in ("k", "v", "cross_k", "cross_v"):
+            specs.append(P(None, *b, md(sh[2]), None, None))
+        elif name == "S":
+            specs.append(P(None, *b, md(sh[2]), None, None))
+        elif name == "h":                       # (nseg, slen, B, nh, P, N)
+            specs.append(P(None, None, *b, md(sh[3]), None, None))
+        elif name == "conv_buf":                # (nseg, slen, B, K, C)
+            specs.append(P(None, None, *b, None, md(sh[4])))
+        elif name.startswith("x_prev"):         # (L, B, 1, D)
+            specs.append(P(None, *b, None, None))
+        else:
+            specs.append(P())
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,242 @@
+"""Step builders: training, prefill and decode programs with their
+abstract inputs (ShapeDtypeStruct) and shardings — the unit the
+multi-pod dry-run lowers and the real launchers execute.
+
+Input-shape suite (assignment):
+    train_4k     seq=4096    global_batch=256   (training)
+    prefill_32k  seq=32768   global_batch=32    (inference-prefill)
+    decode_32k   seq=32768   global_batch=128   (decode: 1 token, KV=seq)
+    long_500k    seq=524288  global_batch=1     (long-context decode)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import optim
+from repro.launch import sharding as shd
+from repro.launch.mesh import batch_axes
+from repro.models.config import ModelConfig
+from repro.models.transformer import build_model
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str          # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+
+def applicability(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    """None if the (arch, shape) pair runs; else a skip reason (DESIGN.md §4)."""
+    if shape.name == "long_500k":
+        sub_quadratic = (cfg.attn_free or cfg.family == "hybrid"
+                         or cfg.sliding_window is not None)
+        if cfg.is_encoder_decoder:
+            return ("SKIP: encoder-decoder with architecturally capped "
+                    "decoder context (448) — long_500k out of family range")
+        if not sub_quadratic:
+            return ("SKIP: pure full-attention arch — long_500k requires "
+                    "sub-quadratic attention (no SWA variant in model card)")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Abstract batch construction
+# ---------------------------------------------------------------------------
+
+def train_batch_abstract(cfg: ModelConfig, shape: InputShape):
+    B, S = shape.global_batch, shape.seq_len
+    i32 = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+    f = lambda s: jax.ShapeDtypeStruct(s, cfg.jdtype)
+    if cfg.is_encoder_decoder:
+        S_dec = min(S, cfg.max_decoder_len)
+        return {"frames": f((B, cfg.encoder_seq, cfg.d_model)),
+                "tokens": i32((B, S_dec)), "labels": i32((B, S_dec))}
+    if cfg.frontend == "vision":
+        P_tok = cfg.num_prefix_tokens
+        return {"prefix_embeds": f((B, P_tok, cfg.d_model)),
+                "tokens": i32((B, S - P_tok)), "labels": i32((B, S - P_tok))}
+    return {"tokens": i32((B, S)), "labels": i32((B, S))}
+
+
+# ---------------------------------------------------------------------------
+# Step builders. Each returns (fn, args_abstract, in_shardings,
+# out_shardings, donate_argnums).
+# ---------------------------------------------------------------------------
+
+class StepBundle(NamedTuple):
+    fn: Callable
+    args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    model: Any
+
+
+def build_train_step(cfg: ModelConfig, mesh, shape: InputShape,
+                     opt_cfg: Optional[optim.OptConfig] = None,
+                     rules: Optional[dict] = None,
+                     remat: bool = True) -> StepBundle:
+    if remat and not cfg.remat:
+        cfg = dataclasses.replace(cfg, remat=True)
+    kv_r = shd.kv_repeat_for(cfg, mesh)
+    model = build_model(cfg, kv_repeat=kv_r, mesh=mesh)
+    opt_cfg = opt_cfg or optim.OptConfig()
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        params, opt_state, om = optim.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    params_abs = model.abstract()
+    opt_abs = optim.abstract_state(params_abs)
+    batch_abs = train_batch_abstract(cfg, shape)
+
+    pspecs = shd.param_pspecs(model, mesh, rules)
+    opt_specs = optim.OptState(mu=pspecs, nu=pspecs, step=P())
+    batch_specs = shd.leading_batch_specs(batch_abs, mesh, shape.global_batch)
+    metric_specs = {k: P() for k in
+                    ("loss", "ce", "aux", "lr", "grad_norm")}
+    return StepBundle(
+        fn=train_step,
+        args=(params_abs, opt_abs, batch_abs),
+        in_shardings=(pspecs, opt_specs, batch_specs),
+        out_shardings=(pspecs, opt_specs, metric_specs),
+        donate_argnums=(0, 1),
+        model=model)
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, shape: InputShape,
+                       rules: Optional[dict] = None) -> StepBundle:
+    kv_r = shd.kv_repeat_for(cfg, mesh)
+    model = build_model(cfg, kv_repeat=kv_r, mesh=mesh)
+
+    def prefill_step(params, batch):
+        """Full-context forward; emit last-position logits only (the
+        production prefill result; full logits would be B·S·V)."""
+        if cfg.is_encoder_decoder:
+            enc = model.encode(params, batch["frames"])
+            h, _ = model.hidden_states(params, batch["tokens"], enc)
+        else:
+            h, _ = model.hidden_states(params, batch["tokens"],
+                                       batch.get("prefix_embeds"))
+        from repro.models.layers import lm_logits
+        last = h[:, -1:, :]
+        return lm_logits(params["embed"], last, cfg.tie_embeddings)
+
+    batch_abs = train_batch_abstract(cfg, shape)
+    batch_abs.pop("labels")
+    params_abs = model.abstract()
+    pspecs = shd.param_pspecs(model, mesh, rules)
+    batch_specs = shd.leading_batch_specs(batch_abs, mesh, shape.global_batch)
+    out_spec = shd.batch_pspec(mesh, shape.global_batch)
+    out = P(*(tuple(out_spec) + (None, None))) if out_spec != P(None) else P()
+    return StepBundle(
+        fn=prefill_step,
+        args=(params_abs, batch_abs),
+        in_shardings=(pspecs, batch_specs),
+        out_shardings=out,
+        donate_argnums=(),
+        model=model)
+
+
+def build_serve_step(cfg: ModelConfig, mesh, shape: InputShape,
+                     rules: Optional[dict] = None) -> StepBundle:
+    """One decode step: new token given a seq_len-deep cache/state."""
+    kv_r = shd.kv_repeat_for(cfg, mesh)
+    model = build_model(cfg, kv_repeat=kv_r)
+    B = shape.global_batch
+
+    def serve_step(params, state, tokens):
+        logits, state = model.decode_step(params, state, tokens)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, state
+
+    params_abs = model.abstract()
+    state_abs = model.decode_state_abstract(B, shape.seq_len)
+    tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+
+    pspecs = shd.param_pspecs(model, mesh, rules)
+    state_specs = shd.decode_state_pspecs(model, state_abs, mesh, B)
+    bp = shd.batch_pspec(mesh, B)
+    tok_spec = P(*(tuple(bp) + (None,))) if bp != P(None) else P()
+    out_tok_spec = bp if bp != P(None) else P()
+    return StepBundle(
+        fn=serve_step,
+        args=(params_abs, state_abs, tok_abs),
+        in_shardings=(pspecs, state_specs, tok_spec),
+        out_shardings=(out_tok_spec, state_specs),
+        donate_argnums=(1,),
+        model=model)
+
+
+def build_step(cfg: ModelConfig, mesh, shape: InputShape,
+               rules: Optional[dict] = None, **kw) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, rules=rules, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape, rules=rules)
+    return build_serve_step(cfg, mesh, shape, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# The paper's own workload as a dry-runnable step (svm-tfidf "arch").
+# ---------------------------------------------------------------------------
+
+def build_svm_round_step(svm_cfg, mesh) -> StepBundle:
+    """One MapReduce-SVM round on the production mesh: rows sharded over
+    (pod,)data; the SV merge is the all-gather 'shuffle' (DESIGN.md §2)."""
+    import numpy as np
+    from repro.core.mapreduce_svm import (MRSVMConfig, SVBuffer,
+                                          init_sv_buffer, make_sharded_round)
+    from repro.core.svm import SVMConfig
+
+    axes = batch_axes(mesh)
+    ndev = int(np.prod([mesh.shape[a] for a in axes]))
+    per = svm_cfg.rows_per_device
+    n, d = ndev * per, svm_cfg.num_features
+    mr_cfg = MRSVMConfig(
+        sv_capacity=svm_cfg.sv_capacity,
+        svm=SVMConfig(C=svm_cfg.C, max_epochs=svm_cfg.max_epochs))
+    body = make_sharded_round(mr_cfg, axes, ndev, per)
+    row_spec = P(axes if len(axes) > 1 else axes[0])
+    rep = SVBuffer(x=P(), y=P(), alpha=P(), ids=P(), mask=P())
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(row_spec, row_spec, row_spec, rep),
+        out_specs=(rep, P(), P(), P()),
+        check_vma=False)
+
+    dt = jnp.dtype(svm_cfg.dtype)
+    args = (jax.ShapeDtypeStruct((n, d), dt),
+            jax.ShapeDtypeStruct((n,), dt),
+            jax.ShapeDtypeStruct((n,), dt),
+            SVBuffer(
+                x=jax.ShapeDtypeStruct((svm_cfg.sv_capacity, d), dt),
+                y=jax.ShapeDtypeStruct((svm_cfg.sv_capacity,), dt),
+                alpha=jax.ShapeDtypeStruct((svm_cfg.sv_capacity,), dt),
+                ids=jax.ShapeDtypeStruct((svm_cfg.sv_capacity,), jnp.int32),
+                mask=jax.ShapeDtypeStruct((svm_cfg.sv_capacity,), dt)))
+    return StepBundle(
+        fn=fn, args=args,
+        in_shardings=(row_spec, row_spec, row_spec, rep),
+        out_shardings=(rep, P(), P(), P()),
+        donate_argnums=(),
+        model=None)

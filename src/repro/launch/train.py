@@ -1,0 +1,75 @@
+"""Production training entry point.
+
+Builds the sharded train_step for ``--arch`` on the local device mesh
+(or the production mesh on a real TPU slice), runs the data pipeline,
+checkpoints, and logs. On this CPU container use ``--smoke`` to train
+the reduced variant; the full configs are exercised by dryrun.py.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --smoke --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import optim
+from repro.ckpt import save
+from repro.configs import get_config
+from repro.data import DataConfig, lm_batch_at
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import InputShape, build_train_step
+from repro.models.config import smoke_variant
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced variant (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--data-par", type=int, default=1)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    mesh = make_host_mesh(args.data_par, args.model_par)
+    shape = InputShape("cli", "train", args.seq, args.batch)
+    bundle = build_train_step(cfg, mesh, shape, remat=False)
+    model = bundle.model
+
+    with jax.set_mesh(mesh):
+        step_fn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                          out_shardings=bundle.out_shardings,
+                          donate_argnums=bundle.donate_argnums)
+        params = model.init(jax.random.PRNGKey(0))
+        opt_state = optim.init(params)
+        dcfg = DataConfig(batch_size=args.batch, seq_len=args.seq)
+        t0 = time.time()
+        for step in range(args.steps):
+            batch = {k: jnp.asarray(v)
+                     for k, v in lm_batch_at(dcfg, cfg, step).items()}
+            params, opt_state, m = step_fn(params, opt_state, batch)
+            if step % 10 == 0 or step == args.steps - 1:
+                print(f"step {step:4d} loss {float(m['loss']):.4f} "
+                      f"gnorm {float(m['grad_norm']):.2f} "
+                      f"{(step + 1) * args.batch * args.seq / (time.time() - t0):,.0f} tok/s",
+                      flush=True)
+    if args.ckpt:
+        save(args.ckpt, {"params": params}, step=args.steps)
+        print(f"saved {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

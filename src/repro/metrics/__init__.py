@@ -1,0 +1,1 @@
+from repro.metrics.logger import MetricsLogger, read_jsonl

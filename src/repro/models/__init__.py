@@ -1,0 +1,5 @@
+"""Model zoo: assigned-architecture backbones (DESIGN.md §4)."""
+from repro.models.config import ModelConfig, smoke_variant
+from repro.models.transformer import TransformerModel, build_model
+
+__all__ = ["ModelConfig", "smoke_variant", "TransformerModel", "build_model"]

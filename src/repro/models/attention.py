@@ -1,0 +1,208 @@
+"""GQA attention: training/prefill (query-chunked, memory-safe) and
+single-token decode against a (optionally sliding-window) KV cache.
+
+TPU adaptations:
+* query-chunked softmax(QKᵀ)V — scores never materialize beyond
+  (B, heads, q_chunk, S), the HLO-level analogue of flash attention
+  (the Pallas decode kernel in repro.kernels goes further for the
+  hot decode path).
+* ``kv_repeat``: when tensor-parallel degree exceeds num_kv_heads, KV
+  heads are physically duplicated r× so the KV cache shards over the
+  ``model`` axis (Megatron convention; chosen by launch/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import PSpec, apply_rope
+
+_NEG_INF = -1e30
+_Q_CHUNK = 512
+
+
+def attn_template(cfg: ModelConfig, d_in: Optional[int] = None) -> Dict[str, PSpec]:
+    d = d_in or cfg.d_model
+    hd, H, KV = cfg.hd, cfg.num_heads, cfg.num_kv_heads
+    t = {
+        "wq": PSpec((d, H, hd), ("embed", "heads", "head_dim"), "normal", d),
+        "wk": PSpec((d, KV, hd), ("embed", "kv_heads", "head_dim"),
+                    "normal", d),
+        "wv": PSpec((d, KV, hd), ("embed", "kv_heads", "head_dim"),
+                    "normal", d),
+        "wo": PSpec((H, hd, d), ("heads", "head_dim", "embed"), "normal",
+                    H * hd),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = PSpec((H, hd), ("heads", "head_dim"), "zeros")
+        t["bk"] = PSpec((KV, hd), ("kv_heads", "head_dim"), "zeros")
+        t["bv"] = PSpec((KV, hd), ("kv_heads", "head_dim"), "zeros")
+    return t
+
+
+def _project_qkv(p, x, kv_x, cfg: ModelConfig, kv_repeat: int):
+    # preferred_element_type = activation dtype: without it jnp.einsum
+    # asks XLA for an f32 accumulator and GSPMD all-reduces the f32
+    # partial sums — 2× the sharded-matmul collective bytes (§Perf it.2).
+    pe = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"], preferred_element_type=pe)
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"], preferred_element_type=pe)
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"], preferred_element_type=pe)
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if kv_repeat > 1:
+        k = jnp.repeat(k, kv_repeat, axis=2)
+        v = jnp.repeat(v, kv_repeat, axis=2)
+    return q, k, v
+
+
+def _grouped_scores(q, k):
+    """q: (B,Sq,H,hd) k: (B,Sk,KVr,hd) → scores (B,KVr,G,Sq,Sk)."""
+    B, Sq, H, hd = q.shape
+    KVr = k.shape[2]
+    G = H // KVr
+    qg = q.reshape(B, Sq, KVr, G, hd)
+    return jnp.einsum("bskgh,btkh->bkgst", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+
+
+def _grouped_out(probs, v, H):
+    """probs (B,KVr,G,Sq,Sk), v (B,Sk,KVr,hd) → (B,Sq,H,hd)."""
+    B, KVr, G, Sq, Sk = probs.shape
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, Sq, KVr * G, out.shape[-1])
+
+
+def attention(p, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array,
+              kv_repeat: int = 1,
+              causal: bool = True,
+              kv_x: Optional[jax.Array] = None,
+              kv_positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence attention (training / prefill / encoder / cross).
+
+    x: (B, S, D); positions: (B, S). ``kv_x`` switches to cross-attention
+    (no causal mask, no RoPE sharing assumptions beyond positions).
+    """
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    self_attn = kv_x is None
+    kv_x = x if self_attn else kv_x
+    kv_pos = positions if self_attn else kv_positions
+    q, k, v = _project_qkv(p, x, kv_x, cfg, kv_repeat)
+    if self_attn:   # RoPE only for self-attention stacks that use it
+        if cfg.rope_fraction > 0:
+            q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+            k = apply_rope(k, kv_pos, cfg.rope_fraction, cfg.rope_theta)
+    Sk = k.shape[1]
+    window = cfg.sliding_window
+
+    def block_attend(q_blk, qpos_blk):
+        scores = _grouped_scores(q_blk, k).astype(jnp.float32)
+        mask = jnp.ones((B, q_blk.shape[1], Sk), bool)
+        if causal:
+            mask &= qpos_blk[:, :, None] >= kv_pos[:, None, :]
+        if window is not None:
+            mask &= qpos_blk[:, :, None] - kv_pos[:, None, :] < window
+        scores = jnp.where(mask[:, None, None, :, :], scores, _NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        return _grouped_out(probs, v, H)
+
+    if S > _Q_CHUNK and S % _Q_CHUNK == 0:
+        nblk = S // _Q_CHUNK
+        qb = q.reshape(B, nblk, _Q_CHUNK, H, hd).transpose(1, 0, 2, 3, 4)
+        pb = positions.reshape(B, nblk, _Q_CHUNK).transpose(1, 0, 2)
+        # jax.checkpoint per q-block: the (B, heads, chunk, S) probs are
+        # recomputed in the backward instead of being saved for every
+        # block — O(S²) attention residuals become O(S·chunk)
+        # (§Perf iteration 1; before: 112 GB/dev temp on tinyllama train).
+        blk = jax.checkpoint(lambda args: block_attend(*args))
+        out = jax.lax.map(blk, (qb, pb))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    else:
+        out = block_attend(q, positions)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                      preferred_element_type=x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token vs a KV cache (ring buffer when sliding window).
+# ---------------------------------------------------------------------------
+
+class LayerKVCache(NamedTuple):
+    k: jax.Array          # (B, KVr, S_cache, hd)
+    v: jax.Array          # (B, KVr, S_cache, hd)
+
+
+def init_layer_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                     kv_repeat: int, dtype) -> LayerKVCache:
+    S = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    KVr = cfg.num_kv_heads * kv_repeat
+    shape = (batch, KVr, S, cfg.hd)
+    return LayerKVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def cache_slot_positions(cfg: ModelConfig, cache_len: int,
+                         pos: jax.Array) -> jax.Array:
+    """Absolute position held by each ring-buffer slot at decode step ``pos``.
+
+    Full cache: slot j holds position j (valid if j <= pos).
+    Sliding window W: slot j holds the largest p ≤ pos with p % W == j.
+    """
+    slots = jnp.arange(cache_len)
+    if not cfg.sliding_window:
+        return slots
+    W = cache_len
+    cur = pos % W
+    return jnp.where(slots <= cur, pos - cur + slots, pos - cur + slots - W)
+
+
+def attention_decode_step(p, x: jax.Array, cache: LayerKVCache,
+                          pos: jax.Array, cfg: ModelConfig,
+                          kv_repeat: int = 1,
+                          use_pallas: bool = False) -> Tuple[jax.Array,
+                                                             LayerKVCache]:
+    """x: (B, 1, D); pos: () int32 current absolute position.
+
+    ``use_pallas`` routes the cache attention through the flash-decode
+    Pallas kernel (repro.kernels) — the TPU serving hot path; requires
+    a full (non-ring) cache.
+    """
+    B, _, D = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    q, k, v = _project_qkv(p, x, x, cfg, kv_repeat)      # (B,1,·,hd)
+    posb = jnp.broadcast_to(pos[None], (B,))[:, None]    # (B,1)
+    if cfg.rope_fraction > 0:
+        q = apply_rope(q, posb, cfg.rope_fraction, cfg.rope_theta)
+        k = apply_rope(k, posb, cfg.rope_fraction, cfg.rope_theta)
+
+    S_cache = cache.k.shape[2]
+    slot = (pos % S_cache).astype(jnp.int32)
+    k_new = jax.lax.dynamic_update_slice(
+        cache.k, k.transpose(0, 2, 1, 3), (0, 0, slot, 0))
+    v_new = jax.lax.dynamic_update_slice(
+        cache.v, v.transpose(0, 2, 1, 3), (0, 0, slot, 0))
+
+    if use_pallas and not cfg.sliding_window:
+        from repro.kernels import decode_attention
+        bs = 128 if S_cache % 128 == 0 else S_cache
+        out = decode_attention(q[:, 0], k_new, v_new,
+                               (pos + 1).astype(jnp.int32), bs=bs)
+        out = out.reshape(B, 1, H, hd).astype(x.dtype)
+    else:
+        slot_pos = cache_slot_positions(cfg, S_cache, pos)    # (S_cache,)
+        valid = jnp.logical_and(slot_pos >= 0, slot_pos <= pos)
+
+        KVr = k_new.shape[1]
+        G = H // KVr
+        qg = q.reshape(B, KVr, G, hd)
+        scores = jnp.einsum("bkgh,bkth->bkgt", qg, k_new).astype(jnp.float32)
+        scores = scores / jnp.sqrt(hd)
+        scores = jnp.where(valid[None, None, None, :], scores, _NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgt,bkth->bkgh", probs, v_new).reshape(B, 1, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                   preferred_element_type=x.dtype)
+    return y, LayerKVCache(k=k_new, v=v_new)

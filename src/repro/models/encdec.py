@@ -1,0 +1,232 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The mel-spectrogram + conv feature extractor is a STUB per the spec:
+``input_specs()`` supplies pre-computed frame embeddings
+(B, encoder_seq, d_model). We implement the transformer: bidirectional
+encoder (sinusoidal positions), causal decoder with cross-attention
+(learned positions), GELU MLPs, LayerNorms, biased projections."""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import (PSpec, apply_mlp, apply_norm,
+                                 chunked_lm_loss, cross_entropy_loss,
+                                 embed_template, embed_tokens, lm_logits,
+                                 mlp_template, norm_template,
+                                 template_abstract, template_axes,
+                                 template_init)
+from repro.models.transformer import stack_template
+
+
+def sinusoidal_positions(length: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(length)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class EncDecDecodeState(NamedTuple):
+    self_cache: attn_lib.LayerKVCache  # (L, B, KVr, S, hd)
+    cross_k: jax.Array                 # (L, B, KVr, T_enc, hd)
+    cross_v: jax.Array
+    pos: jax.Array
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig, kv_repeat: int = 1):
+        self.cfg = cfg
+        self.kv_repeat = kv_repeat
+
+    # -- parameters -----------------------------------------------------------
+    def template(self):
+        cfg = self.cfg
+        enc_layer = {
+            "attn_norm": norm_template(cfg.d_model, "layernorm"),
+            "attn": attn_lib.attn_template(cfg),
+            "mlp_norm": norm_template(cfg.d_model, "layernorm"),
+            "mlp": mlp_template(cfg.d_model, cfg.d_ff, "gelu"),
+        }
+        dec_layer = {
+            "self_norm": norm_template(cfg.d_model, "layernorm"),
+            "self_attn": attn_lib.attn_template(cfg),
+            "cross_norm": norm_template(cfg.d_model, "layernorm"),
+            "cross_attn": attn_lib.attn_template(cfg),
+            "mlp_norm": norm_template(cfg.d_model, "layernorm"),
+            "mlp": mlp_template(cfg.d_model, cfg.d_ff, "gelu"),
+        }
+        return {
+            "embed": embed_template(cfg.vocab_size, cfg.d_model,
+                                    cfg.tie_embeddings),
+            "dec_pos": PSpec((cfg.max_decoder_len, cfg.d_model),
+                             (None, "embed"), "normal"),
+            "enc_layers": stack_template(enc_layer, cfg.encoder_layers),
+            "enc_norm": norm_template(cfg.d_model, "layernorm"),
+            "dec_layers": stack_template(dec_layer, cfg.num_layers),
+            "final_norm": norm_template(cfg.d_model, "layernorm"),
+        }
+
+    def abstract(self):
+        return template_abstract(self.template(), self.cfg.jdtype)
+
+    def init(self, key):
+        return template_init(self.template(), key, self.cfg.jdtype)
+
+    def logical_axes(self):
+        return template_axes(self.template())
+
+    # -- encoder ---------------------------------------------------------------
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames: (B, T_enc, D) stub embeddings → encoder states."""
+        cfg = self.cfg
+        B, T, D = frames.shape
+        h = frames + sinusoidal_positions(T, D)[None].astype(frames.dtype)
+        positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+
+        def body(h, lp):
+            a_in = apply_norm(h, lp["attn_norm"], "layernorm", cfg.norm_eps)
+            h = h + attn_lib.attention(lp["attn"], a_in, cfg,
+                                       positions=positions, causal=False,
+                                       kv_repeat=self.kv_repeat)
+            m_in = apply_norm(h, lp["mlp_norm"], "layernorm", cfg.norm_eps)
+            return h + apply_mlp(m_in, lp["mlp"], "gelu"), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, _ = jax.lax.scan(body, h, params["enc_layers"])
+        return apply_norm(h, params["enc_norm"], "layernorm", cfg.norm_eps)
+
+    # -- decoder (training / scoring) -------------------------------------------
+    def _dec_positions(self, B, S):
+        return jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def hidden_states(self, params, tokens, enc_out):
+        cfg = self.cfg
+        B, S = tokens.shape
+        h = embed_tokens(params["embed"], tokens)
+        h = h + params["dec_pos"][:S][None].astype(h.dtype)
+        positions = self._dec_positions(B, S)
+        T_enc = enc_out.shape[1]
+        enc_pos = jnp.broadcast_to(jnp.arange(T_enc)[None, :], (B, T_enc))
+
+        def body(h, lp):
+            a_in = apply_norm(h, lp["self_norm"], "layernorm", cfg.norm_eps)
+            h = h + attn_lib.attention(lp["self_attn"], a_in, cfg,
+                                       positions=positions,
+                                       kv_repeat=self.kv_repeat)
+            c_in = apply_norm(h, lp["cross_norm"], "layernorm", cfg.norm_eps)
+            h = h + attn_lib.attention(lp["cross_attn"], c_in, cfg,
+                                       positions=positions, causal=False,
+                                       kv_x=enc_out, kv_positions=enc_pos,
+                                       kv_repeat=self.kv_repeat)
+            m_in = apply_norm(h, lp["mlp_norm"], "layernorm", cfg.norm_eps)
+            return h + apply_mlp(m_in, lp["mlp"], "gelu"), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, _ = jax.lax.scan(body, h, params["dec_layers"])
+        return apply_norm(h, params["final_norm"], "layernorm",
+                          cfg.norm_eps), jnp.float32(0)
+
+    def loss(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        h, aux = self.hidden_states(params, batch["tokens"], enc_out)
+        ce = chunked_lm_loss(params["embed"], h, batch["labels"],
+                             self.cfg.tie_embeddings, batch.get("loss_mask"))
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # -- decode ---------------------------------------------------------------
+    def _cross_kv(self, params, enc_out):
+        """Precompute per-decoder-layer cross K/V from encoder states."""
+        cfg = self.cfg
+
+        def per_layer(lp):
+            k = jnp.einsum("btd,dhk->bhtk", enc_out, lp["cross_attn"]["wk"])
+            v = jnp.einsum("btd,dhk->bhtk", enc_out, lp["cross_attn"]["wv"])
+            if cfg.qkv_bias:
+                k = k + lp["cross_attn"]["bk"][None, :, None, :]
+                v = v + lp["cross_attn"]["bv"][None, :, None, :]
+            if self.kv_repeat > 1:
+                k = jnp.repeat(k, self.kv_repeat, axis=1)
+                v = jnp.repeat(v, self.kv_repeat, axis=1)
+            return k, v   # (B, KVr, T_enc, hd)
+
+        return jax.lax.map(lambda lp: per_layer(lp), params["dec_layers"])
+
+    def init_decode_state(self, batch: int, cache_len: int,
+                          frames=None, params=None) -> EncDecDecodeState:
+        cfg = self.cfg
+        one = attn_lib.init_layer_cache(cfg, batch, cache_len,
+                                        self.kv_repeat, cfg.jdtype)
+        caches = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape),
+            one)
+        KVr = cfg.num_kv_heads * self.kv_repeat
+        if frames is not None and params is not None:
+            enc_out = self.encode(params, frames)
+            ck, cv = self._cross_kv(params, enc_out)
+        else:
+            shape = (cfg.num_layers, batch, KVr, cfg.encoder_seq, cfg.hd)
+            ck = jnp.zeros(shape, cfg.jdtype)
+            cv = jnp.zeros(shape, cfg.jdtype)
+        return EncDecDecodeState(self_cache=caches, cross_k=ck, cross_v=cv,
+                                 pos=jnp.zeros((), jnp.int32))
+
+    def decode_state_abstract(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        KVr = cfg.num_kv_heads * self.kv_repeat
+        sd = jax.ShapeDtypeStruct
+        kv = sd((cfg.num_layers, batch, KVr, cache_len, cfg.hd), cfg.jdtype)
+        cross = sd((cfg.num_layers, batch, KVr, cfg.encoder_seq, cfg.hd),
+                   cfg.jdtype)
+        return EncDecDecodeState(
+            self_cache=attn_lib.LayerKVCache(k=kv, v=kv),
+            cross_k=cross, cross_v=cross, pos=sd((), jnp.int32))
+
+    def _cross_step(self, lp, x, ck, cv):
+        """Single-token cross attention vs precomputed encoder K/V."""
+        cfg = self.cfg
+        B = x.shape[0]
+        H, hd = cfg.num_heads, cfg.hd
+        q = jnp.einsum("bsd,dhk->bshk", x, lp["cross_attn"]["wq"])
+        if cfg.qkv_bias:
+            q = q + lp["cross_attn"]["bq"]
+        KVr = ck.shape[1]
+        G = H // KVr
+        qg = q.reshape(B, KVr, G, hd)
+        scores = jnp.einsum("bkgh,bkth->bkgt", qg, ck).astype(jnp.float32)
+        probs = jax.nn.softmax(scores / jnp.sqrt(hd), axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgt,bkth->bkgh", probs, cv).reshape(B, 1, H, hd)
+        return jnp.einsum("bshk,hkd->bsd", out, lp["cross_attn"]["wo"])
+
+    def decode_step(self, params, state: EncDecDecodeState, tokens):
+        cfg = self.cfg
+        pos = state.pos
+        h = embed_tokens(params["embed"], tokens)
+        pos_emb = jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], jnp.minimum(pos, cfg.max_decoder_len - 1), 1)
+        h = h + pos_emb[None].astype(h.dtype)[:, 0][:, None]
+
+        def body(h, xs):
+            lp, cache, ck, cv = xs
+            a_in = apply_norm(h, lp["self_norm"], "layernorm", cfg.norm_eps)
+            a_out, cache = attn_lib.attention_decode_step(
+                lp["self_attn"], a_in, cache, pos, cfg, self.kv_repeat)
+            h = h + a_out
+            c_in = apply_norm(h, lp["cross_norm"], "layernorm", cfg.norm_eps)
+            h = h + self._cross_step(lp, c_in, ck, cv)
+            m_in = apply_norm(h, lp["mlp_norm"], "layernorm", cfg.norm_eps)
+            return h + apply_mlp(m_in, lp["mlp"], "gelu"), cache
+
+        h, caches = jax.lax.scan(
+            body, h, (params["dec_layers"], state.self_cache,
+                      state.cross_k, state.cross_v))
+        h = apply_norm(h, params["final_norm"], "layernorm", cfg.norm_eps)
+        logits = lm_logits(params["embed"], h, cfg.tie_embeddings)
+        return logits, EncDecDecodeState(self_cache=caches,
+                                         cross_k=state.cross_k,
+                                         cross_v=state.cross_v, pos=pos + 1)

@@ -1,0 +1,175 @@
+"""Zamba2-style hybrid: Mamba-2 trunk + a SHARED attention block applied
+every ``attn_every`` layers (arXiv:2411.15242). The shared block's
+weights are reused at each application point; each application keeps
+its own KV cache during decode."""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import mamba2
+from repro.models.config import ModelConfig
+from repro.models.layers import (PSpec, apply_mlp, apply_norm,
+                                 chunked_lm_loss, cross_entropy_loss,
+                                 embed_template, embed_tokens, lm_logits,
+                                 mlp_template, norm_template,
+                                 template_abstract, template_axes,
+                                 template_init)
+from repro.models.transformer import stack_template
+
+
+class HybridDecodeState(NamedTuple):
+    ssm: mamba2.Mamba2State        # leaves stacked (n_seg, seg_len, B, ...)
+    shared_cache: attn_lib.LayerKVCache  # (n_seg, B, KVr, S, hd)
+    pos: jax.Array
+
+
+class HybridModel:
+    def __init__(self, cfg: ModelConfig, kv_repeat: int = 1, mesh=None,
+                 batch_axes=("pod", "data")):
+        if cfg.attn_every <= 0 or cfg.num_layers % cfg.attn_every:
+            raise ValueError("hybrid needs attn_every | num_layers")
+        self.cfg = cfg
+        self.kv_repeat = kv_repeat
+        self.mesh = mesh
+        self.batch_axes = batch_axes
+        self.n_seg = cfg.num_layers // cfg.attn_every
+        self.seg_len = cfg.attn_every
+
+    # -- parameters -------------------------------------------------------
+    def template(self):
+        cfg = self.cfg
+        mamba_layer = {
+            "norm": norm_template(cfg.d_model, cfg.norm_style),
+            "mamba": mamba2.mamba2_template(cfg),
+        }
+        shared = {
+            "attn_norm": norm_template(cfg.d_model, cfg.norm_style),
+            "attn": attn_lib.attn_template(cfg),
+            "mlp_norm": norm_template(cfg.d_model, cfg.norm_style),
+            "mlp": mlp_template(cfg.d_model, cfg.d_ff, cfg.mlp_style),
+        }
+        return {
+            "embed": embed_template(cfg.vocab_size, cfg.d_model,
+                                    cfg.tie_embeddings),
+            "mamba_layers": stack_template(
+                stack_template(mamba_layer, self.seg_len), self.n_seg),
+            "shared": shared,
+            "final_norm": norm_template(cfg.d_model, cfg.norm_style),
+        }
+
+    def abstract(self):
+        return template_abstract(self.template(), self.cfg.jdtype)
+
+    def init(self, key):
+        return template_init(self.template(), key, self.cfg.jdtype)
+
+    def logical_axes(self):
+        return template_axes(self.template())
+
+    # -- forward ------------------------------------------------------------
+    def _shared_block(self, sp, h, positions):
+        cfg = self.cfg
+        a_in = apply_norm(h, sp["attn_norm"], cfg.norm_style, cfg.norm_eps)
+        h = h + attn_lib.attention(sp["attn"], a_in, cfg, positions=positions,
+                                   kv_repeat=self.kv_repeat)
+        m_in = apply_norm(h, sp["mlp_norm"], cfg.norm_style, cfg.norm_eps)
+        return h + apply_mlp(m_in, sp["mlp"], cfg.mlp_style)
+
+    def hidden_states(self, params, tokens, prefix_embeds=None):
+        cfg = self.cfg
+        h = embed_tokens(params["embed"], tokens)
+        B, S, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+        from repro.models.transformer import constrain_seq_parallel
+
+        def mamba_body(h, lp):
+            x = apply_norm(h, lp["norm"], cfg.norm_style, cfg.norm_eps)
+            return h + mamba2.apply_mamba2(lp["mamba"], x, cfg), None
+
+        def segment(h, seg_params):
+            h, _ = jax.lax.scan(jax.checkpoint(mamba_body), h, seg_params)
+            h = self._shared_block(params["shared"], h, positions)
+            return constrain_seq_parallel(h, self.mesh, self.batch_axes), None
+
+        if cfg.remat:
+            segment = jax.checkpoint(segment)
+        h, _ = jax.lax.scan(segment, h, params["mamba_layers"])
+        return apply_norm(h, params["final_norm"], cfg.norm_style,
+                          cfg.norm_eps), jnp.float32(0)
+
+    def forward(self, params, tokens, prefix_embeds=None):
+        h, aux = self.hidden_states(params, tokens)
+        return lm_logits(params["embed"], h, self.cfg.tie_embeddings), aux
+
+    def loss(self, params, batch):
+        h, aux = self.hidden_states(params, batch["tokens"])
+        ce = chunked_lm_loss(params["embed"], h, batch["labels"],
+                             self.cfg.tie_embeddings, batch.get("loss_mask"))
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # -- decode ---------------------------------------------------------------
+    def init_decode_state(self, batch: int, cache_len: int) -> HybridDecodeState:
+        cfg = self.cfg
+        one = mamba2.init_mamba2_state(cfg, batch, cfg.jdtype)
+        ssm = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[None, None], (self.n_seg, self.seg_len) + a.shape), one)
+        kv = attn_lib.init_layer_cache(cfg, batch, cache_len,
+                                       self.kv_repeat, cfg.jdtype)
+        shared = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (self.n_seg,) + a.shape), kv)
+        return HybridDecodeState(ssm=ssm, shared_cache=shared,
+                                 pos=jnp.zeros((), jnp.int32))
+
+    def decode_state_abstract(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        d_inner, nh, N = mamba2.ssm_dims(cfg)
+        S = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        KVr = cfg.num_kv_heads * self.kv_repeat
+        sd = lambda s, dt: jax.ShapeDtypeStruct(s, dt)
+        return HybridDecodeState(
+            ssm=mamba2.Mamba2State(
+                h=sd((self.n_seg, self.seg_len, batch, nh, mamba2.HEADDIM, N),
+                     jnp.float32),
+                conv_buf=sd((self.n_seg, self.seg_len, batch,
+                             cfg.ssm_conv - 1, d_inner + 2 * N), cfg.jdtype)),
+            shared_cache=attn_lib.LayerKVCache(
+                k=sd((self.n_seg, batch, KVr, S, cfg.hd), cfg.jdtype),
+                v=sd((self.n_seg, batch, KVr, S, cfg.hd), cfg.jdtype)),
+            pos=sd((), jnp.int32))
+
+    def decode_step(self, params, state: HybridDecodeState, tokens):
+        cfg = self.cfg
+        h = embed_tokens(params["embed"], tokens)
+        pos = state.pos
+
+        def mamba_body(h, xs):
+            lp, st = xs
+            x = apply_norm(h, lp["norm"], cfg.norm_style, cfg.norm_eps)
+            y, st = mamba2.mamba2_decode_step(lp["mamba"], x, st, cfg)
+            return h + y, st
+
+        def segment(h, xs):
+            seg_params, seg_ssm, seg_kv = xs
+            h, ssm = jax.lax.scan(mamba_body, h, (seg_params, seg_ssm))
+            sp = params["shared"]
+            a_in = apply_norm(h, sp["attn_norm"], cfg.norm_style, cfg.norm_eps)
+            a_out, kv = attn_lib.attention_decode_step(
+                sp["attn"], a_in, seg_kv, pos, cfg, self.kv_repeat)
+            h = h + a_out
+            m_in = apply_norm(h, sp["mlp_norm"], cfg.norm_style, cfg.norm_eps)
+            h = h + apply_mlp(m_in, sp["mlp"], cfg.mlp_style)
+            return h, (ssm, kv)
+
+        h, (ssm, kv) = jax.lax.scan(
+            segment, h, (params["mamba_layers"], state.ssm,
+                         state.shared_cache))
+        h = apply_norm(h, params["final_norm"], cfg.norm_style, cfg.norm_eps)
+        logits = lm_logits(params["embed"], h, cfg.tie_embeddings)
+        return logits, HybridDecodeState(ssm=ssm, shared_cache=kv,
+                                         pos=pos + 1)

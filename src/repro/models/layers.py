@@ -1,0 +1,233 @@
+"""Common building blocks + the parameter-template machinery.
+
+Parameters are plain pytrees. Every leaf is declared once as a
+``PSpec(shape, axes)`` where ``axes`` are *logical* axis names
+("vocab", "embed", "ffn", "heads", "experts", "layers", ...). From one
+template we derive:
+  * abstract params (ShapeDtypeStruct)   → dry-run lowering
+  * materialized random params           → smoke tests / real training
+  * PartitionSpecs via repro.launch.sharding rules → pjit shardings
+
+Layer stacks store weights with a leading "layers" dim and run under
+``jax.lax.scan`` so HLO size is depth-independent (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical names, len == len(shape)
+    init: str = "normal"              # 'normal' | 'zeros' | 'ones' | 'embed'
+    fan_in: Optional[int] = None      # explicit fan-in when shape[-2] lies
+                                      # (e.g. (D,H,hd) projections)
+
+
+def template_abstract(tpl, dtype) -> Any:
+    """Template → pytree of ShapeDtypeStruct (no allocation)."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype),
+        tpl, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def template_init(tpl, key, dtype) -> Any:
+    """Template → materialized params (fan-in scaled normal init)."""
+    leaves, treedef = jax.tree.flatten(
+        tpl, is_leaf=lambda x: isinstance(x, PSpec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, p in zip(keys, leaves):
+        if p.init == "zeros":
+            out.append(jnp.zeros(p.shape, dtype))
+        elif p.init == "ones":
+            out.append(jnp.ones(p.shape, dtype))
+        elif p.init == "embed":
+            # 1/√d_model embedding rows (NOT fan-in=vocab): keeps the
+            # first RMSNorm's backward conditioned AND, under tied
+            # embeddings, gives unit-variance logits (h_norm @ E.T).
+            std = 1.0 / math.sqrt(max(p.shape[-1], 1))
+            out.append((jax.random.normal(k, p.shape) * std).astype(dtype))
+        else:
+            fan_in = p.fan_in or (p.shape[-2] if len(p.shape) >= 2
+                                  else p.shape[-1])
+            std = 1.0 / math.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, p.shape) * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def template_axes(tpl) -> Any:
+    """Template → pytree of logical-axis tuples (for sharding rules)."""
+    return jax.tree.map(lambda p: p.axes, tpl,
+                        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+def apply_norm(x, p, style: str, eps: float):
+    if style == "rmsnorm":
+        return rmsnorm(x, p["scale"], eps)
+    return layernorm(x, p["scale"], p["bias"], eps)
+
+
+def norm_template(d: int, style: str) -> Dict[str, PSpec]:
+    t = {"scale": PSpec((d,), ("embed",), "ones")}
+    if style == "layernorm":
+        t["bias"] = PSpec((d,), ("embed",), "zeros")
+    return t
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + partial/2d fraction à la chatglm3)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, fraction: float,
+               theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv, rot = rope_frequencies(hd, fraction, theta)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv  # (...,S,1,rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(*xr.shape)
+    return jnp.concatenate(
+        [rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_template(d: int, f: int, style: str) -> Dict[str, PSpec]:
+    if style == "swiglu":
+        return {"w_gate": PSpec((d, f), ("embed", "ffn")),
+                "w_up": PSpec((d, f), ("embed", "ffn")),
+                "w_down": PSpec((f, d), ("ffn", "embed"))}
+    return {"w_in": PSpec((d, f), ("embed", "ffn")),
+            "b_in": PSpec((f,), ("ffn",), "zeros"),
+            "w_out": PSpec((f, d), ("ffn", "embed")),
+            "b_out": PSpec((d,), ("embed",), "zeros")}
+
+
+def apply_mlp(x: jax.Array, p, style: str) -> jax.Array:
+    mm = lambda a, b: jnp.matmul(a, b, preferred_element_type=x.dtype)
+    if style == "swiglu":
+        g = jax.nn.silu(mm(x, p["w_gate"]))
+        return mm(g * mm(x, p["w_up"]), p["w_down"])
+    h = jax.nn.gelu(mm(x, p["w_in"]) + p["b_in"])
+    return mm(h, p["w_out"]) + p["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_template(vocab: int, d: int, tie: bool) -> Dict[str, PSpec]:
+    t = {"embedding": PSpec((vocab, d), ("vocab", "embed"), "embed")}
+    if not tie:
+        t["lm_head"] = PSpec((d, vocab), ("embed", "vocab"))
+    return t
+
+
+def embed_tokens(p, tokens: jax.Array) -> jax.Array:
+    """Lookup × √D (T5/Gemma convention): puts the residual stream at
+    unit rms from step 0, so the first norm's backward is conditioned,
+    while the tied LM head still sees 1/√D-scale rows."""
+    E = p["embedding"]
+    return E[tokens] * math.sqrt(E.shape[-1])
+
+
+def lm_logits(p, x: jax.Array, tie: bool) -> jax.Array:
+    if tie:
+        return x @ p["embedding"].T
+    return x @ p["lm_head"]
+
+
+def chunked_lm_loss(embed_params, h: jax.Array, labels: jax.Array,
+                    tie: bool, mask: Optional[jax.Array] = None,
+                    chunk: int = 8192) -> jax.Array:
+    """CE loss computed seq-chunk-wise with rematerialized logits.
+
+    Full (B, S, V) f32 logits are a top HBM consumer at 128k-vocab
+    (llava train: 16.7 GB/device just for logits). Scanning S in chunks
+    with jax.checkpoint keeps only (B, chunk, V) transient; backward
+    recomputes each chunk's logits (§Perf iteration 1b).
+    """
+    B, S, D = h.shape
+    T = B * S
+    if T <= chunk:
+        logits = lm_logits(embed_params, h, tie)
+        return cross_entropy_loss(logits, labels, mask)
+    # token-major chunking (works for any B, S — e.g. whisper's B·448)
+    hf = h.reshape(T, D)
+    lf = labels.reshape(T)
+    mf = (mask.reshape(T).astype(jnp.float32) if mask is not None
+          else jnp.ones((T,), jnp.float32))
+    pad = (-T) % chunk
+    if pad:
+        hf = jnp.pad(hf, ((0, pad), (0, 0)))
+        lf = jnp.pad(lf, (0, pad))
+        mf = jnp.pad(mf, (0, pad))
+    nb = (T + pad) // chunk
+    hb = hf.reshape(nb, chunk, D)
+    lb = lf.reshape(nb, chunk)
+    mb = mf.reshape(nb, chunk)
+
+    @jax.checkpoint
+    def chunk_loss(carry, xs):
+        hc, lc, mc = xs
+        logits = lm_logits(embed_params, hc, tie).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk_loss,
+                                 (jnp.float32(0), jnp.float32(0)),
+                                 (hb, lb, mb))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE in f32 (logits (B,S,V), labels (B,S))."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

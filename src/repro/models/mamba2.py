@@ -1,0 +1,170 @@
+"""Mamba-2 SSD block (Dao & Gu 2024), chunked for TPU.
+
+State-space recurrence per head (scalar decay a_t = exp(-Δt·A)):
+
+    h_t = a_t · h_{t-1} + Δt · x_t ⊗ B_t          h ∈ (P, N)
+    y_t = h_t · C_t + D_skip · x_t
+
+Training/prefill uses the *chunked* SSD form: sequences are split into
+chunks of ``CHUNK``; within a chunk the recurrence is an attention-like
+masked matmul (MXU-friendly), across chunks a short `lax.scan` carries
+the (P, N) state. This is the TPU-native adaptation — a step-by-step
+scan over 4k-500k tokens would serialize the MXU (DESIGN.md §2).
+
+Decode is the O(1) single-step recurrence — the reason `long_500k` is
+trivial for SSM archs (no KV cache at all).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import PSpec
+
+CHUNK = 128
+HEADDIM = 64   # P
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(d_inner, num_heads, d_state)."""
+    d_inner = 2 * cfg.d_model
+    return d_inner, d_inner // HEADDIM, cfg.ssm_state
+
+
+def mamba2_template(cfg: ModelConfig) -> Dict[str, PSpec]:
+    D = cfg.d_model
+    d_inner, nh, N = ssm_dims(cfg)
+    return {
+        # projections: z (gate), x, B, C, dt
+        "w_in": PSpec((D, 2 * d_inner + 2 * N + nh), ("embed", "ffn")),
+        "conv": PSpec((cfg.ssm_conv, d_inner + 2 * N), (None, "ffn"), "normal"),
+        "a_log": PSpec((nh,), (None,), "zeros"),       # A = -exp(a_log)
+        "d_skip": PSpec((nh,), (None,), "ones"),
+        "dt_bias": PSpec((nh,), (None,), "zeros"),
+        "norm_scale": PSpec((d_inner,), ("ffn",), "ones"),
+        "w_out": PSpec((d_inner, D), ("ffn", "embed")),
+    }
+
+
+def _split_proj(p, u, cfg):
+    d_inner, nh, N = ssm_dims(cfg)
+    zxbcdt = u @ p["w_in"]
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, conv_w: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. xBC: (B, T, Cdim)."""
+    K = conv_w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * conv_w[i] for i in range(K))
+    return jax.nn.silu(out)
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-5):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            * scale).astype(y.dtype)
+
+
+class Mamba2State(NamedTuple):
+    h: jax.Array          # (B, nh, P, N) SSM state
+    conv_buf: jax.Array   # (B, K-1, d_inner + 2N) causal-conv tail
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype) -> Mamba2State:
+    d_inner, nh, N = ssm_dims(cfg)
+    return Mamba2State(
+        h=jnp.zeros((batch, nh, HEADDIM, N), jnp.float32),
+        conv_buf=jnp.zeros((batch, cfg.ssm_conv - 1, d_inner + 2 * N), dtype))
+
+
+def apply_mamba2(p, u: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Training/prefill. u: (B, T, D) → (B, T, D). T % CHUNK == 0 or T < CHUNK."""
+    B, T, D = u.shape
+    d_inner, nh, N = ssm_dims(cfg)
+    z, xBC, dt = _split_proj(p, u, cfg)
+    xBC = _causal_conv(xBC, p["conv"])
+    x, Bc, Cc = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    x = x.reshape(B, T, nh, HEADDIM)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,T,nh)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                    # (nh,)
+    loga = dt * A[None, None, :]                                    # (B,T,nh) ≤ 0
+
+    Q = CHUNK if (T % CHUNK == 0 and T > CHUNK) else T
+    nchunks = T // Q
+    # chunk-major layout (nc, B, Q, ...) for a scan over chunks; all the
+    # intra-chunk work happens INSIDE the scan body so the (Q, Q, nh)
+    # decay tensor is a transient, not an O(T) buffer.
+    xq = x.reshape(B, nchunks, Q, nh, HEADDIM).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    Bq = Bc.reshape(B, nchunks, Q, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Cq = Cc.reshape(B, nchunks, Q, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+    dtq = dt.reshape(B, nchunks, Q, nh).transpose(1, 0, 2, 3)
+    logaq = loga.reshape(B, nchunks, Q, nh).transpose(1, 0, 2, 3)
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_body(h, inp):
+        xc, Bt, Ct, dtc, lac = inp                       # (B,Q,...)
+        cum = jnp.cumsum(lac, axis=1)                    # (B,Q,nh), ≤ 0, ↓
+        # intra: y_t = Σ_{s≤t} (C_t·B_s)·exp(cum_t−cum_s)·Δt_s·x_s
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # (B,t,s,nh) ≤ 0 on tril
+        # clamp BEFORE exp: above-diagonal decay is positive and would
+        # overflow to inf, poisoning the VJP (0·inf = NaN) even though
+        # the forward masks it out.
+        decay = jnp.where(tril[None, :, :, None], decay, -1e9)
+        M = jnp.exp(decay)
+        CB = jnp.einsum("btn,bsn->bts", Ct, Bt)
+        W = CB[..., None] * M * dtc[:, None, :, :]       # (B,t,s,nh)
+        y_intra = jnp.einsum("btsh,bshp->bthp", W, xc)
+        # inter: read the carried state
+        y_inter = jnp.einsum("bhpn,btn,bth->bthp", h, Ct, jnp.exp(cum))
+        # state update: h' = exp(cum_Q)·h + Σ_s exp(cum_Q−cum_s)·Δt_s·x_s⊗B_s
+        wS = jnp.exp(cum[:, -1:, :] - cum) * dtc         # (B,Q,nh)
+        inj = jnp.einsum("bsh,bshp,bsn->bhpn", wS, xc, Bt)
+        h_new = jnp.exp(cum[:, -1, :])[:, :, None, None] * h + inj
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((B, nh, HEADDIM, N), jnp.float32)
+    # checkpoint per chunk: the (B,Q,Q,nh) decay/score tensors are
+    # recomputed in backward instead of being saved for all nc chunks
+    # (§Perf iteration 6: zamba2 train temp 630 GB → see EXPERIMENTS.md)
+    _, y = jax.lax.scan(jax.checkpoint(chunk_body), h0,
+                        (xq, Bq, Cq, dtq, logaq))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(B, T, nh, HEADDIM)       # (B,T,nh,P)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * \
+        x.reshape(B, T, nh, HEADDIM).astype(jnp.float32)
+    y = y.reshape(B, T, d_inner).astype(u.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    return y @ p["w_out"]
+
+
+def mamba2_decode_step(p, u: jax.Array, state: Mamba2State,
+                       cfg: ModelConfig) -> Tuple[jax.Array, Mamba2State]:
+    """u: (B, 1, D) → (y (B,1,D), new state). O(1) per token."""
+    B = u.shape[0]
+    d_inner, nh, N = ssm_dims(cfg)
+    z, xBC, dt = _split_proj(p, u, cfg)                    # (B,1,·)
+    # causal conv via the rolling buffer
+    window = jnp.concatenate([state.conv_buf, xBC], axis=1)   # (B,K,·)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, p["conv"]))
+    new_buf = window[:, 1:, :]
+    x, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    x = x.reshape(B, nh, HEADDIM).astype(jnp.float32)
+
+    dt1 = jax.nn.softplus(dt[:, 0, :].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a = jnp.exp(dt1 * A[None, :])                           # (B,nh)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+    h = a[:, :, None, None] * state.h + \
+        jnp.einsum("bh,bhp,bn->bhpn", dt1, x, Bf)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cf) + \
+        p["d_skip"].astype(jnp.float32)[None, :, None] * x
+    y = y.reshape(B, 1, d_inner).astype(u.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    return y @ p["w_out"], Mamba2State(h=h, conv_buf=new_buf)

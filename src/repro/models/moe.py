@@ -1,0 +1,224 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded sorted
+dispatch (Switch/GShard style, reformulated for TPU as dense batched
+matmuls over (experts, capacity, d) blocks).
+
+Dispatch is sort-based (MaxText-style) rather than the (tokens, E, C)
+one-hot einsum of the original GShard paper — the one-hot tensor is
+O(T·E·C) memory, hopeless at T=65k/E=128; sorting is O(T log T) and the
+expert compute is a single (E, C, D) × (E, D, F) batched matmul that
+shards cleanly with experts on the ``model`` mesh axis.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import PSpec
+
+
+def moe_template(cfg: ModelConfig) -> Dict[str, PSpec]:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": PSpec((D, E), ("embed", "experts")),
+        "w_gate": PSpec((E, D, F), ("experts", "embed", "ffn")),
+        "w_up": PSpec((E, D, F), ("experts", "embed", "ffn")),
+        "w_down": PSpec((E, F, D), ("experts", "ffn", "embed")),
+    }
+
+
+def apply_moe(p, x: jax.Array, cfg: ModelConfig,
+              capacity_factor: Optional[float] = None) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (y (B,S,D), aux load-balance loss).
+
+    Tokens overflowing an expert's capacity are dropped (standard
+    Switch behaviour); gates are renormalized over the selected top-k.
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = (xf @ p["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch eq. 4): E · Σ_e f_e · P_e
+    assign_frac = jnp.mean(
+        jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=(0, 1)) * K
+    router_prob = jnp.mean(probs, axis=0)
+    aux = cfg.router_aux_coef * E * jnp.sum(assign_frac * router_prob)
+
+    # ---- sort-based dispatch ------------------------------------------------
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    C = max(1, int(T * K * capacity_factor / E))
+    flat_expert = expert_idx.reshape(T * K)
+    flat_token = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    flat_gate = gate_vals.reshape(T * K).astype(x.dtype)
+
+    order = jnp.argsort(flat_expert)                         # stable
+    e_sorted = flat_expert[order]
+    t_sorted = flat_token[order]
+    g_sorted = flat_gate[order]
+
+    counts = jnp.bincount(e_sorted, length=E)                # (E,)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_expert = jnp.arange(T * K) - starts[e_sorted]
+    keep = (pos_in_expert < C).astype(x.dtype)
+    dest = (e_sorted * C + jnp.minimum(pos_in_expert, C - 1)).astype(jnp.int32)
+
+    # gather tokens into (E*C, D) expert blocks (overflow slots zeroed)
+    xin = jnp.zeros((E * C, D), x.dtype).at[dest].add(
+        xf[t_sorted] * keep[:, None])
+    xin = xin.reshape(E, C, D)
+
+    # expert compute: one batched swiglu matmul
+    pe = x.dtype
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["w_gate"],
+                               preferred_element_type=pe))
+    h = g * jnp.einsum("ecd,edf->ecf", xin, p["w_up"],
+                       preferred_element_type=pe)
+    yout = jnp.einsum("ecf,efd->ecd", h, p["w_down"],
+                      preferred_element_type=pe).reshape(E * C, D)
+
+    # combine back to tokens, weighted by renormalized gates
+    contrib = yout[dest] * (keep * g_sorted)[:, None]
+    y = jnp.zeros((T, D), x.dtype).at[t_sorted].add(contrib)
+    return y.reshape(B, S, D), aux.astype(jnp.float32)
+
+# ---------------------------------------------------------------------------
+# Distributed dispatch (§Perf iteration 3).
+#
+# Under plain GSPMD the (E·C, D) scatter-add crosses device boundaries
+# and the partitioner falls back to "replicate + all-reduce": measured
+# 171 GB of all-reduce per layer for qwen3-moe train_4k. The shard_map
+# version keeps dispatch DEVICE-LOCAL:
+#   * tokens sharded over (pod, data); replicated over model;
+#   * experts sharded over model (E % model == 0, e.g. qwen3 128/16) —
+#     each device dispatches only to its local experts and the partial
+#     outputs psum over model;
+#   * when E < model (mixtral 8 < 16) experts are replicated and the
+#     FFN dim shards over model instead (megatron-TP inside each
+#     expert) — dispatch again local, same single psum.
+# Collectives per layer: fsdp weight all-gather over data + ONE
+# (T_loc, D) psum over model.
+# ---------------------------------------------------------------------------
+
+def apply_moe_sharded(p, x: jax.Array, cfg: ModelConfig, mesh,
+                      batch_axes: Tuple[str, ...],
+                      capacity_factor: Optional[float] = None,
+                      model_axis: str = "model"):
+    """Drop-in for apply_moe when a mesh is available (train/prefill)."""
+    m_size = mesh.shape[model_axis]
+    E = cfg.num_experts
+    expert_parallel = E % m_size == 0 and E >= m_size
+    cf = capacity_factor or cfg.moe_capacity_factor
+
+    from jax.sharding import PartitionSpec as P
+    baxes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    bspec = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+
+    # in_specs must match launch/sharding.py's baseline param pspecs so
+    # no resharding is inserted at the shard_map boundary:
+    #   router (D, E)   → P(data, model)
+    #   w_*   (E, D, F) → expert-parallel: P(model, data, None)
+    #                     TP mode (E<16):  P(None, data, model)
+    if expert_parallel:
+        w_in = P(model_axis, "data", None)
+        wd_in = P(model_axis, "data", None)
+        router_in = P("data", model_axis)
+    else:
+        w_in = P(None, "data", model_axis)
+        wd_in = P(None, model_axis, "data")   # (E, F, D): F on model
+        router_in = P("data", None)           # E < model: replicated
+
+    def body(xl, router_s, wg_s, wu_s, wd_s):
+        ag = lambda a, ax: jax.lax.all_gather(a, "data", axis=ax, tiled=True)
+        router = ag(router_s, 0)                                # (D, E?)
+        if expert_parallel:
+            router = jax.lax.all_gather(router, model_axis, axis=1,
+                                        tiled=True)             # (D, E)
+        wg = ag(wg_s, 1)                                        # (E?, D, F?)
+        wu = ag(wu_s, 1)
+        if expert_parallel:
+            wd = ag(wd_s, 1)                                    # (E_loc, F, D)
+            e_base = jax.lax.axis_index(model_axis) * (E // m_size)
+            e_count = E // m_size
+        else:
+            wd = ag(wd_s, 2)                                    # (E, F_loc, D)
+            e_base = jnp.int32(0)
+            e_count = E
+
+        Bl, S, D = xl.shape
+        T = Bl * S
+        xf = xl.reshape(T, D)
+        logits = (xf @ router).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_idx = jax.lax.top_k(probs, cfg.experts_per_token)
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+        assign_frac = jnp.mean(jax.nn.one_hot(
+            expert_idx, E, dtype=jnp.float32), axis=(0, 1)) * \
+            cfg.experts_per_token
+        router_prob = jnp.mean(probs, axis=0)
+        aux = cfg.router_aux_coef * E * jnp.sum(assign_frac * router_prob)
+        if baxes:
+            # per-shard load-balance loss averaged over shards (standard
+            # for EP: E[f·P] per shard, not global — differs by a Jensen
+            # gap of O(1/shards), and locally balanced routing is what
+            # the dispatch capacity actually needs)
+            aux = jax.lax.pmean(aux, baxes)
+
+        K = cfg.experts_per_token
+        C = max(1, int(T * K * cf / E))
+        flat_e = expert_idx.reshape(T * K)
+        local_e = flat_e - e_base
+        valid = jnp.logical_and(local_e >= 0, local_e < e_count)
+        sort_key = jnp.where(valid, local_e, e_count)
+        flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+        flat_g = gate_vals.reshape(T * K).astype(xl.dtype)
+
+        order = jnp.argsort(sort_key)
+        e_sorted = sort_key[order]
+        t_sorted = flat_t[order]
+        g_sorted = flat_g[order]
+        counts = jnp.bincount(e_sorted, length=e_count + 1)[:e_count]
+        starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                  jnp.cumsum(counts)[:-1]])
+        safe_e = jnp.minimum(e_sorted, e_count - 1)
+        pos = jnp.arange(T * K) - starts[safe_e]
+        keep = (jnp.logical_and(e_sorted < e_count, pos < C)).astype(xl.dtype)
+        dest = (safe_e * C + jnp.clip(pos, 0, C - 1)).astype(jnp.int32)
+
+        xin = jnp.zeros((e_count * C, D), xl.dtype).at[dest].add(
+            xf[t_sorted] * keep[:, None])
+        xin = xin.reshape(e_count, C, D)
+        pe = xl.dtype
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, wg,
+                                   preferred_element_type=pe))
+        h = g * jnp.einsum("ecd,edf->ecf", xin, wu,
+                           preferred_element_type=pe)
+        yout = jnp.einsum("ecf,efd->ecd", h, wd,
+                          preferred_element_type=pe).reshape(e_count * C, D)
+
+        contrib = yout[dest] * (keep * g_sorted)[:, None]
+        y = jnp.zeros((T, D), xl.dtype).at[t_sorted].add(contrib)
+        y = jax.lax.psum(y, model_axis)          # combine expert partials
+        return y.reshape(Bl, S, D), aux
+
+    if baxes:
+        x = jax.lax.with_sharding_constraint(x, P(bspec, None, None))
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, None, None), router_in, w_in, w_in, wd_in),
+        out_specs=(P(bspec, None, None), P()),
+        check_vma=False)
+    y, aux = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,188 @@
+"""RWKV-6 "Finch" block: token-shift + data-dependent per-channel decay
+(arXiv:2404.05892), chunked for TPU.
+
+Per head (k/v head dim = 64), with data-dependent decay w_t ∈ (0,1)^hd:
+
+    S_t = diag(w_t) · S_{t-1} + k_t v_tᵀ
+    y_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ)
+
+Training/prefill uses chunked gated linear attention: within a chunk
+the decay products become a masked (Q, Q) matmul computed in f32 with
+per-step log-decay clamped to ≥ LOG_W_MIN so exp(Σ) stays inside f32
+range (TPU adaptation recorded in DESIGN.md — the CUDA kernel does the
+recurrence stepwise in registers instead; a step-scan would serialize
+the MXU). Decode is the O(1) recurrence, so `long_500k` runs.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import PSpec
+
+CHUNK = 32
+HEADDIM = 64
+LOG_W_MIN = -1.2   # per-token decay floor: w ≥ e^-1.2 ≈ 0.30; |Σ over chunk| ≤ 38.4
+
+
+def rwkv_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEADDIM
+
+
+def rwkv6_template(cfg: ModelConfig) -> Dict[str, PSpec]:
+    D, F = cfg.d_model, cfg.d_ff
+    H = rwkv_heads(cfg)
+    return {
+        "time": {
+            # token-shift interpolation weights (r,k,v,w,g)
+            "mu": PSpec((5, D), (None, "embed"), "zeros"),
+            "w_r": PSpec((D, D), ("embed", "heads_flat")),
+            "w_k": PSpec((D, D), ("embed", "heads_flat")),
+            "w_v": PSpec((D, D), ("embed", "heads_flat")),
+            "w_g": PSpec((D, D), ("embed", "heads_flat")),
+            # data-dependent decay (low-rank: D → 64 → D) + base
+            "w_dec1": PSpec((D, 64), ("embed", None)),
+            "w_dec2": PSpec((64, D), (None, "heads_flat")),
+            "dec_base": PSpec((D,), ("heads_flat",), "zeros"),
+            "u_bonus": PSpec((H, HEADDIM), (None, None), "zeros"),
+            "w_o": PSpec((D, D), ("heads_flat", "embed")),
+            "ln_scale": PSpec((D,), ("embed",), "ones"),   # per-head groupnorm
+        },
+        "channel": {
+            "mu": PSpec((2, D), (None, "embed"), "zeros"),
+            "w_k": PSpec((D, F), ("embed", "ffn")),
+            "w_v": PSpec((F, D), ("ffn", "embed")),
+            "w_r": PSpec((D, D), ("embed", "embed_out")),
+        },
+    }
+
+
+def _token_shift(x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """shift(x)[t] = x[t-1]; x_prev fills t=0. x: (B,T,D), x_prev: (B,1,D)."""
+    return jnp.concatenate([x_prev, x[:, :-1, :]], axis=1)
+
+
+def _decay(tp, xw: jax.Array) -> jax.Array:
+    """Data-dependent log-decay, clamped. → (B,T,D), values ≤ 0."""
+    raw = tp["dec_base"] + jnp.tanh(xw @ tp["w_dec1"]) @ tp["w_dec2"]
+    # w = exp(-exp(raw)) ⇒ log w = -exp(raw); clamp for chunked f32 math.
+    return jnp.clip(-jnp.exp(raw.astype(jnp.float32)), LOG_W_MIN, -1e-4)
+
+
+def _project(tp, x, x_prev):
+    xs = _token_shift(x, x_prev)
+    mu = tp["mu"]
+    mix = lambda i: x + (xs - x) * jax.nn.sigmoid(mu[i])[None, None, :]
+    r = mix(0) @ tp["w_r"]
+    k = mix(1) @ tp["w_k"]
+    v = mix(2) @ tp["w_v"]
+    logw = _decay(tp, mix(3))
+    g = jax.nn.silu(mix(4) @ tp["w_g"])
+    return r, k, v, logw, g
+
+
+def _group_norm(y: jax.Array, scale: jax.Array, H: int) -> jax.Array:
+    """Per-head LayerNorm of the wkv output (RWKV's GroupNorm)."""
+    B, T, D = y.shape
+    yh = y.reshape(B, T, H, D // H).astype(jnp.float32)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (yh.reshape(B, T, D) * scale).astype(y.dtype)
+
+
+class RWKVState(NamedTuple):
+    S: jax.Array        # (B, H, hd, hd) wkv state (f32)
+    x_prev_t: jax.Array  # (B, 1, D) last token for time-mix shift
+    x_prev_c: jax.Array  # (B, 1, D) last token for channel-mix shift
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> RWKVState:
+    H = rwkv_heads(cfg)
+    return RWKVState(
+        S=jnp.zeros((batch, H, HEADDIM, HEADDIM), jnp.float32),
+        x_prev_t=jnp.zeros((batch, 1, cfg.d_model), dtype),
+        x_prev_c=jnp.zeros((batch, 1, cfg.d_model), dtype))
+
+
+def _wkv_chunked(r, k, v, logw, u, H):
+    """Chunked GLA. r,k,v: (B,T,D); logw: (B,T,D) ≤ 0; u: (H,hd)."""
+    B, T, D = r.shape
+    hd = HEADDIM
+    Q = CHUNK if (T % CHUNK == 0 and T > CHUNK) else T
+    nc = T // Q
+
+    def heads(x):  # (B,T,D) → (nc,B,H,Q,hd) f32, chunk-major
+        return (x.reshape(B, nc, Q, H, hd).transpose(1, 0, 3, 2, 4)
+                .astype(jnp.float32))
+
+    rq, kq, vq, lwq = heads(r), heads(k), heads(v), heads(logw)
+    tril_strict = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+
+    def chunk_body(S, inp):
+        rc, kc, vc, lw = inp                    # (B,H,Q,hd)
+        cum = jnp.cumsum(lw, axis=2)            # (B,H,Q,hd) ≤ 0, ↓ in t
+        cum_prev = cum - lw                     # Σ_{u<t} log w
+        # intra (s<t): A_ts = Σ_c r_tc·exp(cum_prev_t − cum_s)_c·k_sc
+        q_ = rc * jnp.exp(cum_prev)             # r ⊙ exp(cum_{t-1})
+        k_ = kc * jnp.exp(-cum)                 # k ⊙ exp(−cum_s) (bounded: clamp)
+        A = jnp.einsum("bhtc,bhsc->bhts", q_, k_)
+        A = jnp.where(tril_strict[None, None], A, 0.0)
+        # current-token bonus: (r_t ⊙ u ⊙ k_t)·v_t
+        diag = jnp.einsum("bhtc,hc,bhtc->bht", rc, u, kc)
+        y = A @ vc + diag[..., None] * vc
+        # carried state read: y_t += (r_t ⊙ exp(cum_prev_t)) S
+        y = y + jnp.einsum("bhtc,bhcd->bhtd", q_, S)
+        # state update: S' = diag(exp(cum_Q)) S + Σ_s diag(exp(cum_Q−cum_s)) k_s v_sᵀ
+        wS = jnp.exp(cum[:, :, -1:, :] - cum)   # (B,H,Q,hd)
+        S_new = jnp.exp(cum[:, :, -1, :])[..., None] * S + \
+            jnp.einsum("bhsc,bhsd->bhcd", kc * wS, vc)
+        return S_new, y
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    # checkpoint per chunk (same rationale as mamba2: §Perf iteration 6)
+    S_fin, y = jax.lax.scan(jax.checkpoint(chunk_body), S0,
+                            (rq, kq, vq, lwq))
+    y = y.transpose(1, 0, 3, 2, 4).reshape(B, T, D)   # (nc,B,H,Q,hd) → (B,T,D)
+    return y, S_fin
+
+
+def apply_rwkv_time(tp, x: jax.Array, cfg: ModelConfig,
+                    x_prev: jax.Array) -> jax.Array:
+    """Time-mix (wkv attention substitute) for training/prefill."""
+    H = rwkv_heads(cfg)
+    r, k, v, logw, g = _project(tp, x, x_prev)
+    y, _ = _wkv_chunked(r, k, v, logw, tp["u_bonus"].astype(jnp.float32), H)
+    y = _group_norm(y.astype(x.dtype), tp["ln_scale"], H)
+    return (y * g) @ tp["w_o"]
+
+
+def apply_rwkv_channel(cp, x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    xs = _token_shift(x, x_prev)
+    mu = cp["mu"]
+    mix = lambda i: x + (xs - x) * jax.nn.sigmoid(mu[i])[None, None, :]
+    k = jnp.square(jax.nn.relu(mix(0) @ cp["w_k"]))
+    return jax.nn.sigmoid(mix(1) @ cp["w_r"]) * (k @ cp["w_v"])
+
+
+def rwkv_time_decode_step(tp, x: jax.Array, S: jax.Array, x_prev: jax.Array,
+                          cfg: ModelConfig):
+    """One-token time-mix. x: (B,1,D); S: (B,H,hd,hd)."""
+    B, _, D = x.shape
+    H = rwkv_heads(cfg)
+    hd = HEADDIM
+    r, k, v, logw, g = _project(tp, x, x_prev)
+    rh = r.reshape(B, H, hd).astype(jnp.float32)
+    kh = k.reshape(B, H, hd).astype(jnp.float32)
+    vh = v.reshape(B, H, hd).astype(jnp.float32)
+    w = jnp.exp(logw.reshape(B, H, hd))
+    u = tp["u_bonus"].astype(jnp.float32)
+    kv = jnp.einsum("bhc,bhd->bhcd", kh, vh)
+    y = jnp.einsum("bhc,bhcd->bhd", rh, S + u[None, :, :, None] * kv)
+    S_new = w[..., None] * S + kv
+    y = y.reshape(B, 1, D).astype(x.dtype)
+    y = _group_norm(y, tp["ln_scale"], H)
+    return (y * g) @ tp["w_o"], S_new

@@ -1,0 +1,137 @@
+"""RWKV-6 full model (attention-free 'ssm' family)."""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rwkv6
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_norm, chunked_lm_loss,
+                                 cross_entropy_loss, embed_template,
+                                 embed_tokens, lm_logits, norm_template,
+                                 template_abstract, template_axes,
+                                 template_init)
+from repro.models.transformer import stack_template
+
+
+class RWKVDecodeState(NamedTuple):
+    S: jax.Array         # (L, B, H, hd, hd) f32 wkv states
+    x_prev_t: jax.Array  # (L, B, 1, D)
+    x_prev_c: jax.Array  # (L, B, 1, D)
+    pos: jax.Array
+
+
+class RWKV6Model:
+    def __init__(self, cfg: ModelConfig, kv_repeat: int = 1, mesh=None,
+                 batch_axes=("pod", "data")):
+        self.cfg = cfg
+        self.kv_repeat = kv_repeat   # unused (attention-free); kept for API
+        self.mesh = mesh
+        self.batch_axes = batch_axes
+
+    def layer_template(self):
+        cfg = self.cfg
+        t = rwkv6.rwkv6_template(cfg)
+        return {
+            "ln1": norm_template(cfg.d_model, "layernorm"),
+            "time": t["time"],
+            "ln2": norm_template(cfg.d_model, "layernorm"),
+            "channel": t["channel"],
+        }
+
+    def template(self):
+        cfg = self.cfg
+        return {
+            "embed": embed_template(cfg.vocab_size, cfg.d_model,
+                                    cfg.tie_embeddings),
+            "layers": stack_template(self.layer_template(), cfg.num_layers),
+            "final_norm": norm_template(cfg.d_model, "layernorm"),
+        }
+
+    def abstract(self):
+        return template_abstract(self.template(), self.cfg.jdtype)
+
+    def init(self, key):
+        return template_init(self.template(), key, self.cfg.jdtype)
+
+    def logical_axes(self):
+        return template_axes(self.template())
+
+    def hidden_states(self, params, tokens, prefix_embeds=None):
+        cfg = self.cfg
+        h = embed_tokens(params["embed"], tokens)
+        B = h.shape[0]
+        zero_prev = jnp.zeros((B, 1, cfg.d_model), h.dtype)
+
+        from repro.models.transformer import constrain_seq_parallel
+
+        def body(h, lp):
+            x = apply_norm(h, lp["ln1"], "layernorm", cfg.norm_eps)
+            h = h + rwkv6.apply_rwkv_time(lp["time"], x, cfg, zero_prev)
+            x = apply_norm(h, lp["ln2"], "layernorm", cfg.norm_eps)
+            h = h + rwkv6.apply_rwkv_channel(lp["channel"], x, zero_prev)
+            # NOTE: constraint applies only to the channel-mix segment —
+            # wkv time-mix needs the full sequence per device (recurrence)
+            return constrain_seq_parallel(h, self.mesh, self.batch_axes), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, _ = jax.lax.scan(body, h, params["layers"])
+        return apply_norm(h, params["final_norm"], "layernorm",
+                          cfg.norm_eps), jnp.float32(0)
+
+    def forward(self, params, tokens, prefix_embeds=None):
+        h, aux = self.hidden_states(params, tokens)
+        return lm_logits(params["embed"], h, self.cfg.tie_embeddings), aux
+
+    def loss(self, params, batch):
+        h, aux = self.hidden_states(params, batch["tokens"])
+        ce = chunked_lm_loss(params["embed"], h, batch["labels"],
+                             self.cfg.tie_embeddings, batch.get("loss_mask"))
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # -- decode (O(1) state per token — no KV cache at any context length) --
+    def init_decode_state(self, batch: int, cache_len: int) -> RWKVDecodeState:
+        cfg = self.cfg
+        L, D = cfg.num_layers, cfg.d_model
+        H = rwkv6.rwkv_heads(cfg)
+        return RWKVDecodeState(
+            S=jnp.zeros((L, batch, H, rwkv6.HEADDIM, rwkv6.HEADDIM),
+                        jnp.float32),
+            x_prev_t=jnp.zeros((L, batch, 1, D), cfg.jdtype),
+            x_prev_c=jnp.zeros((L, batch, 1, D), cfg.jdtype),
+            pos=jnp.zeros((), jnp.int32))
+
+    def decode_state_abstract(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        L, D = cfg.num_layers, cfg.d_model
+        H = rwkv6.rwkv_heads(cfg)
+        return RWKVDecodeState(
+            S=jax.ShapeDtypeStruct((L, batch, H, rwkv6.HEADDIM,
+                                    rwkv6.HEADDIM), jnp.float32),
+            x_prev_t=jax.ShapeDtypeStruct((L, batch, 1, D), cfg.jdtype),
+            x_prev_c=jax.ShapeDtypeStruct((L, batch, 1, D), cfg.jdtype),
+            pos=jax.ShapeDtypeStruct((), jnp.int32))
+
+    def decode_step(self, params, state: RWKVDecodeState, tokens):
+        cfg = self.cfg
+        h = embed_tokens(params["embed"], tokens)   # (B, 1, D)
+
+        def body(h, xs):
+            lp, S, xpt, xpc = xs
+            x = apply_norm(h, lp["ln1"], "layernorm", cfg.norm_eps)
+            y, S_new = rwkv6.rwkv_time_decode_step(lp["time"], x, S, xpt, cfg)
+            h = h + y
+            x2 = apply_norm(h, lp["ln2"], "layernorm", cfg.norm_eps)
+            h = h + rwkv6.apply_rwkv_channel(lp["channel"], x2, xpc)
+            return h, (S_new, x, x2)
+
+        h, (S, xpt, xpc) = jax.lax.scan(
+            body, h, (params["layers"], state.S, state.x_prev_t,
+                      state.x_prev_c))
+        h = apply_norm(h, params["final_norm"], "layernorm", cfg.norm_eps)
+        logits = lm_logits(params["embed"], h, cfg.tie_embeddings)
+        return logits, RWKVDecodeState(S=S, x_prev_t=xpt, x_prev_c=xpc,
+                                       pos=state.pos + 1)

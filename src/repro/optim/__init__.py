@@ -1,0 +1,3 @@
+from repro.optim.adamw import (OptConfig, OptState, abstract_state,
+                               apply_updates, clip_by_global_norm,
+                               global_norm, init, schedule)

@@ -1,0 +1,104 @@
+"""AdamW + cosine schedule + global-norm clipping (pure jnp pytrees).
+
+Optimizer states are pytrees mirroring the params, so the launcher can
+shard them with the same PartitionSpecs (ZeRO-1 comes free when params
+are fsdp-sharded over the ``data`` axis — DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    mu: Any         # first moment (pytree like params)
+    nu: Any         # second moment
+    step: jax.Array
+
+
+def init(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return OptState(mu=jax.tree.map(zeros, params),
+                    nu=jax.tree.map(zeros, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_ratio·lr."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    frac = jnp.clip((s - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * \
+        0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def apply_updates(params, grads, state: OptState,
+                  cfg: OptConfig) -> Tuple[Any, OptState, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.betas
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * jnp.square(gf)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, OptState(mu=new_m, nu=new_v, step=step), \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+def abstract_state(abstract_params) -> OptState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return OptState(mu=jax.tree.map(f32, abstract_params),
+                    nu=jax.tree.map(f32, abstract_params),
+                    step=jax.ShapeDtypeStruct((), jnp.int32))

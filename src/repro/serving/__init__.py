@@ -1,0 +1,1 @@
+from repro.serving.scheduler import BatchScheduler, Request, WaveStats

@@ -1,0 +1,143 @@
+"""Wave-based batch scheduler for the decode path.
+
+Production serving batches independent requests through the same
+decode_step. Our decode API tracks one shared position per batch
+(synchronized waves), so the scheduler implements iteration-level
+batching at wave granularity:
+
+  queue → admit ≤ B requests → right-align prompts into the wave →
+  teacher-forced prefill through decode_step → greedy decode until
+  every slot hits EOS/max → emit, admit the next wave.
+
+Right-alignment (pad LEFT) lets one shared position serve ragged
+prompts: every prompt ENDS at the same step, so generation starts
+synchronously; pad tokens at the front attend to nothing real because
+they precede the prompt (documented approximation: pads do enter the
+cache — with a dedicated pad embedding and few pad steps this is the
+standard static-batching trade-off; slot-level continuous batching
+needs per-slot positions, noted as future work in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the scheduler:
+    output: Optional[List[int]] = None
+    latency_s: float = 0.0
+
+
+@dataclasses.dataclass
+class WaveStats:
+    wave: int
+    batch: int
+    prompt_steps: int
+    decode_steps: int
+    wall_s: float
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.batch * self.decode_steps / max(self.wall_s, 1e-9)
+
+
+class BatchScheduler:
+    """Drives ``model.decode_step`` over a queue of requests."""
+
+    def __init__(self, model, params, batch_size: int, cache_len: int,
+                 pad_id: int = 0, frames: Optional[jax.Array] = None):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.cache_len = cache_len
+        self.pad_id = pad_id
+        self.frames = frames
+        self._step = jax.jit(model.decode_step)
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self.stats: List[WaveStats] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self) -> List[Request]:
+        wave = 0
+        while self.queue:
+            batch = self.queue[: self.B]
+            self.queue = self.queue[self.B:]
+            self._run_wave(wave, batch)
+            wave += 1
+        return self.done
+
+    # ------------------------------------------------------------------
+    def _run_wave(self, wave: int, batch: List[Request]) -> None:
+        t0 = time.time()
+        B = self.B
+        max_prompt = max(len(r.prompt) for r in batch)
+        max_new = max(r.max_new_tokens for r in batch)
+        assert max_prompt + max_new <= self.cache_len, "wave exceeds cache"
+
+        # right-aligned prompt matrix (left pad)
+        toks = np.full((B, max_prompt), self.pad_id, np.int32)
+        for j, r in enumerate(batch):
+            toks[j, max_prompt - len(r.prompt):] = r.prompt
+
+        if self.frames is not None:
+            state = self.model.init_decode_state(
+                B, self.cache_len, frames=self.frames, params=self.params)
+        else:
+            state = self.model.init_decode_state(B, self.cache_len)
+
+        # prefill (teacher forced through the decode path)
+        logits = None
+        for t in range(max_prompt):
+            logits, state = self._step(self.params, state,
+                                       jnp.asarray(toks[:, t:t + 1]))
+
+        # greedy decode with per-slot completion tracking
+        out = [[] for _ in batch]
+        live = np.array([True] * B)
+        live[len(batch):] = False
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        steps = 0
+        while live.any() and steps < max_new:
+            tok_np = np.asarray(tok)[:, 0]
+            for j, r in enumerate(batch):
+                if live[j]:
+                    out[j].append(int(tok_np[j]))
+                    if (r.eos_id is not None and tok_np[j] == r.eos_id) \
+                            or len(out[j]) >= r.max_new_tokens:
+                        live[j] = False
+            if not live.any():
+                break
+            logits, state = self._step(self.params, state, tok)
+            tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+            steps += 1
+
+        wall = time.time() - t0
+        for j, r in enumerate(batch):
+            r.output = out[j]
+            r.latency_s = wall
+            self.done.append(r)
+        self.stats.append(WaveStats(wave=wave, batch=len(batch),
+                                    prompt_steps=max_prompt,
+                                    decode_steps=steps + 1, wall_s=wall))
+
+    def throughput_report(self) -> Dict[str, float]:
+        total_tok = sum(len(r.output or []) for r in self.done)
+        total_s = sum(s.wall_s for s in self.stats)
+        return {"requests": len(self.done), "tokens": total_tok,
+                "wall_s": round(total_s, 3),
+                "tok_per_s": round(total_tok / max(total_s, 1e-9), 1),
+                "waves": len(self.stats)}

@@ -1,0 +1,33 @@
+"""χ² feature selection (the paper cites Yang & Pedersen 1997 for
+"nitelik seçimi" — feature selection on the vector space)."""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chi2_scores(X: jax.Array, y: jax.Array,
+                classes: Sequence[int]) -> jax.Array:
+    """Per-feature χ² statistic for non-negative features (counts/tfidf).
+
+    Standard sklearn-style contingency: observed class-conditional
+    feature mass vs expectation under independence.
+    """
+    Y = jnp.stack([(y == c).astype(X.dtype) for c in classes], axis=1)  # (n,k)
+    observed = Y.T @ X                                   # (k, d)
+    feature_mass = jnp.sum(X, axis=0)                    # (d,)
+    class_prob = jnp.mean(Y, axis=0)                     # (k,)
+    expected = class_prob[:, None] * feature_mass[None, :]
+    chi2 = jnp.sum((observed - expected) ** 2 /
+                   jnp.maximum(expected, 1e-12), axis=0)
+    return jnp.where(feature_mass > 0, chi2, 0.0)
+
+
+def select_top_k(X: jax.Array, y: jax.Array, classes: Sequence[int],
+                 k: int) -> Tuple[jax.Array, jax.Array]:
+    """Return (X[:, top_idx], top_idx) by χ² score."""
+    scores = chi2_scores(X, y, classes)
+    _, idx = jax.lax.top_k(scores, k)
+    return X[:, idx], idx

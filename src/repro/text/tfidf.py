@@ -1,0 +1,48 @@
+"""TF×IDF weighting (paper eq. 10-11), in jnp so it runs on device.
+
+    idf_t     = log(N / df_t)                      (eq. 10)
+    tfidf_t,d = tf_t,d × idf_t                     (eq. 11)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class TfidfModel(NamedTuple):
+    idf: jax.Array        # (d,)
+    num_docs: jax.Array   # ()
+
+
+def fit_idf(counts: jax.Array, smooth: bool = True) -> TfidfModel:
+    """idf from a training count matrix (n, d).
+
+    ``smooth`` uses log((1+N)/(1+df)) + 1 so unseen terms stay finite —
+    the standard safe variant of eq. 10 (hashed spaces always contain
+    empty buckets).
+    """
+    n = counts.shape[0]
+    df = jnp.sum((counts > 0).astype(counts.dtype), axis=0)
+    if smooth:
+        idf = jnp.log((1.0 + n) / (1.0 + df)) + 1.0
+    else:
+        idf = jnp.log(n / jnp.maximum(df, 1.0))
+    return TfidfModel(idf=idf, num_docs=jnp.asarray(n))
+
+
+def transform(counts: jax.Array, model: TfidfModel,
+              l2_normalize: bool = True) -> jax.Array:
+    """tf × idf, optionally L2-row-normalized (standard for linear SVM)."""
+    X = counts * model.idf[None, :]
+    if l2_normalize:
+        norm = jnp.sqrt(jnp.sum(X * X, axis=1, keepdims=True))
+        X = X / jnp.maximum(norm, 1e-12)
+    return X
+
+
+def fit_transform(counts: jax.Array, smooth: bool = True,
+                  l2_normalize: bool = True):
+    model = fit_idf(counts, smooth)
+    return transform(counts, model, l2_normalize), model

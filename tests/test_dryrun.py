@@ -1,0 +1,54 @@
+"""Dry-run integration tests (subprocess: needs 512 fake devices)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ENV = {"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+       "HOME": os.environ.get("HOME", "/root")}
+
+
+def _run(args, timeout=560):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args,
+         "--out", "/tmp/dryrun_test_artifacts"],
+        capture_output=True, text=True, timeout=timeout, env=ENV,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _parse(stdout):
+    i = stdout.index("{")
+    return json.loads(stdout[i:])
+
+
+@pytest.mark.slow
+def test_dryrun_small_arch_decode():
+    r = _run(["--arch", "qwen2-1.5b", "--shape", "decode_32k"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = _parse(r.stdout)
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 256
+    assert rec["roofline"]["memory_s"] > 0
+    assert rec["dominant"] in ("compute_s", "memory_s", "collective_s")
+
+
+@pytest.mark.slow
+def test_dryrun_skip_reason_recorded():
+    r = _run(["--arch", "llama3-8b", "--shape", "long_500k"])
+    assert r.returncode == 0
+    rec = _parse(r.stdout)
+    assert rec["status"] == "skip"
+    assert "sub-quadratic" in rec["reason"]
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_mesh():
+    r = _run(["--arch", "tinyllama-1.1b", "--shape", "decode_32k",
+              "--multi-pod"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = _parse(r.stdout)
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 512
+    assert rec["mesh"] == "2x16x16"

@@ -1,0 +1,135 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import decode_attention, gram_matrix, risk_eval
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("n,m,d", [(64, 64, 32), (130, 70, 96),
+                                   (256, 256, 128), (300, 200, 260)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("kind", ["linear", "rbf", "poly"])
+def test_gram_sweep(n, m, d, dtype, kind):
+    k1, k2 = jax.random.split(KEY)
+    X = jax.random.normal(k1, (n, d), dtype)
+    Z = jax.random.normal(k2, (m, d), dtype)
+    K = gram_matrix(X, Z, kind=kind, gamma=0.5, coef0=1.0, degree=2,
+                    bm=128, bn=128, bk=128)
+    Kr = ref.gram_ref(X.astype(jnp.float32), Z.astype(jnp.float32), kind,
+                      gamma=0.5, coef0=1.0, degree=2)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(K), np.asarray(Kr),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,d,L", [(100, 32, 4), (512, 64, 16), (700, 48, 3)])
+def test_hinge_sweep(n, d, L):
+    ks = jax.random.split(KEY, 5)
+    X = jax.random.normal(ks[0], (n, d))
+    W = jax.random.normal(ks[1], (L, d))
+    b = jax.random.normal(ks[2], (L,))
+    y = jnp.sign(jax.random.normal(ks[3], (n,)))
+    m = (jax.random.uniform(ks[4], (n,)) > 0.2).astype(jnp.float32)
+    loss, cnt = risk_eval(X, W, b, y, m, bn=128)
+    loss_r, cnt_r = ref.hinge_scores_ref(X, W, b, y, m)
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(loss_r),
+                               rtol=1e-4, atol=1e-3)
+    assert float(cnt) == pytest.approx(float(cnt_r))
+
+
+@pytest.mark.parametrize("B,H,KV,S,hd", [
+    (1, 4, 4, 128, 64),      # MHA
+    (2, 8, 2, 256, 64),      # GQA 4:1
+    (2, 16, 4, 512, 128),    # GQA + bigger blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(B, H, KV, S, hd, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), dtype)
+    vlen = jnp.asarray(S - S // 4)
+    out = decode_attention(q, k, v, vlen, bs=64)
+    outr = ref.decode_attention_ref(q.astype(jnp.float32),
+                                    k.astype(jnp.float32),
+                                    v.astype(jnp.float32), vlen)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(outr), rtol=tol, atol=tol)
+
+
+def test_flash_decode_valid_len_zero_region_ignored():
+    """Changing K/V beyond valid_len must not change the output."""
+    ks = jax.random.split(KEY, 4)
+    B, H, KV, S, hd = 1, 4, 4, 128, 32
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, KV, S, hd))
+    v = jax.random.normal(ks[2], (B, KV, S, hd))
+    vlen = jnp.asarray(60)
+    out1 = decode_attention(q, k, v, vlen, bs=64)
+    k2 = k.at[:, :, 60:, :].set(99.0)
+    v2 = v.at[:, :, 60:, :].set(-99.0)
+    out2 = decode_attention(q, k2, v2, vlen, bs=64)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,d", [(64, 32), (200, 96), (300, 128)])
+def test_cd_epoch_matches_sequential_oracle(n, d):
+    from repro.kernels import svm_cd_epoch
+    ks = jax.random.split(KEY, 3)
+    X = jax.random.normal(ks[0], (n, d))
+    y = jnp.sign(jax.random.normal(ks[1], (n,)))
+    mask = (jax.random.uniform(ks[2], (n,)) > 0.1).astype(jnp.float32)
+    a0 = jnp.zeros((n,))
+    w0 = jnp.zeros((d,))
+    a, w, b = svm_cd_epoch(X, y, a0, w0, jnp.float32(0), mask, C=1.0, bn=64)
+    ar, wr, br = ref.cd_epoch_ref(X, alpha=a0, w=w0, b=0.0, y=y, mask=mask)
+    np.testing.assert_allclose(np.asarray(a), ar, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(w), wr, rtol=1e-4, atol=1e-4)
+    assert float(b) == pytest.approx(float(br), abs=1e-4)
+
+
+def test_cd_epoch_matches_solver_epoch():
+    """One Pallas epoch == one fit_binary_linear epoch (max_epochs=1)."""
+    from repro.core import SVMConfig, fit_binary
+    from repro.kernels import svm_cd_epoch
+    X = jax.random.normal(KEY, (128, 24))
+    y = jnp.sign(jax.random.normal(jax.random.PRNGKey(9), (128,)))
+    mask = jnp.ones((128,))
+    m = fit_binary(X, y, mask, SVMConfig(C=1.0, max_epochs=1, tol=0.0))
+    a, w, b = svm_cd_epoch(X, y, jnp.zeros((128,)), jnp.zeros((24,)),
+                           jnp.float32(0), mask, C=1.0, bn=64)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(m.w),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(m.alpha),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_decode_step_pallas_path_matches_jnp():
+    """attention_decode_step(use_pallas=True) == jnp reference path."""
+    from repro.models import attention as attn_lib
+    from repro.models.config import ModelConfig
+    from repro.models.layers import template_init
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64)
+    p = template_init(attn_lib.attn_template(cfg), KEY, jnp.float32)
+    cache = attn_lib.init_layer_cache(cfg, 2, 128, 1, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 1, 64))
+    # pre-fill a few positions
+    for t in range(5):
+        xt = jax.random.normal(jax.random.PRNGKey(10 + t), (2, 1, 64))
+        y_ref, cache = attn_lib.attention_decode_step(
+            p, xt, cache, jnp.int32(t), cfg)
+    y1, c1 = attn_lib.attention_decode_step(p, x, cache, jnp.int32(5), cfg)
+    y2, c2 = attn_lib.attention_decode_step(p, x, cache, jnp.int32(5), cfg,
+                                            use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(c1.k), np.asarray(c2.k))

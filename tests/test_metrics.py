@@ -1,0 +1,21 @@
+import os, tempfile
+from repro.metrics import MetricsLogger, read_jsonl
+
+
+def test_metrics_roundtrip_and_summary():
+    with tempfile.TemporaryDirectory() as d:
+        log = MetricsLogger(d, "unit", flush_every=2)
+        for s in range(10):
+            log.log(s, loss=10.0 - s, lr=1e-3)
+        log.flush()
+        recs = read_jsonl(os.path.join(d, "unit.jsonl"))
+        assert len(recs) == 10
+        assert recs[0]["loss"] == 10.0 and recs[-1]["loss"] == 1.0
+        summ = log.summary("loss")
+        assert summ["min"] == 1.0 and summ["max"] == 10.0 and summ["n"] == 10
+
+
+def test_metrics_no_dir_is_memory_only():
+    log = MetricsLogger(None)
+    log.log(0, loss=3.0)
+    assert log.summary("loss")["last"] == 3.0

@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED
+variant of each family runs one forward/train step + one decode step
+on CPU, asserting output shapes and finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import ARCH_IDS, get_config
+from repro.data import DataConfig, lm_batch_at
+from repro.models.config import smoke_variant
+from repro.models.transformer import build_model
+
+ARCHS = [a for a in ARCH_IDS if a != "svm_tfidf"]
+B, S = 2, 32
+
+
+def _batch(cfg):
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32),
+             "labels": jnp.ones((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        P = cfg.num_prefix_tokens
+        batch["tokens"] = jnp.zeros((B, S - P), jnp.int32)
+        batch["labels"] = jnp.ones((B, S - P), jnp.int32)
+        batch["prefix_embeds"] = jnp.ones((B, P, cfg.d_model), cfg.jdtype)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.ones((B, cfg.encoder_seq, cfg.d_model),
+                                   cfg.jdtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_loss(arch):
+    cfg = smoke_variant(get_config(arch))
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    loss, metrics = jax.jit(model.loss)(params, _batch(cfg))
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch} loss not finite"
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_reduces_loss(arch):
+    cfg = smoke_variant(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ostate = optim.init(params)
+    ocfg = optim.OptConfig(lr=5e-3, warmup_steps=2, total_steps=50)
+
+    @jax.jit
+    def step(params, ostate, batch):
+        (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch)
+        params, ostate, _ = optim.apply_updates(params, grads, ostate, ocfg)
+        return params, ostate, loss
+
+    batch = _batch(cfg)   # same batch → loss must drop fast
+    losses = []
+    for _ in range(8):
+        params, ostate, loss = step(params, ostate, batch)
+        losses.append(float(loss))
+        assert np.isfinite(losses[-1]), f"{arch} diverged"
+    assert losses[-1] < losses[0], f"{arch}: {losses[0]} -> {losses[-1]}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = smoke_variant(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if cfg.family == "audio":
+        frames = jnp.ones((B, cfg.encoder_seq, cfg.d_model), cfg.jdtype)
+        state = model.init_decode_state(B, 64, frames=frames, params=params)
+    else:
+        state = model.init_decode_state(B, 64)
+    step = jax.jit(model.decode_step)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for i in range(3):
+        logits, state = step(params, state, tok)
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    assert int(state.pos) == 3
+
+
+@pytest.mark.parametrize("arch", ["tinyllama_1_1b", "rwkv6_7b",
+                                  "zamba2_1_2b", "mixtral_8x22b"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode must reproduce the training forward's logits
+    (the KV-cache/state path is the same function, incrementally)."""
+    cfg = smoke_variant(get_config(arch))
+    cfg = dataclasses.replace(cfg, sliding_window=None)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    T = 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                cfg.vocab_size)
+    full_logits, _ = model.forward(params, tokens)
+
+    state = model.init_decode_state(B, T)
+    outs = []
+    for t in range(T):
+        logits, state = model.decode_step(params, state, tokens[:, t:t + 1])
+        outs.append(logits[:, 0, :])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full_logits),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_param_counts_match_assignment():
+    """Full configs carry the exact assigned dimensions."""
+    cfg = get_config("qwen3-moe-235b-a22b")
+    assert (cfg.num_layers, cfg.d_model, cfg.num_heads,
+            cfg.num_kv_heads, cfg.d_ff, cfg.vocab_size,
+            cfg.num_experts, cfg.experts_per_token) == \
+        (94, 4096, 64, 4, 1536, 151936, 128, 8)
+    cfg = get_config("mixtral-8x22b")
+    assert (cfg.num_layers, cfg.d_model, cfg.num_experts,
+            cfg.experts_per_token, cfg.sliding_window) == (56, 6144, 8, 2, 4096)
+    cfg = get_config("llama3-8b")
+    # analytic parameter count should be ~8B
+    assert 7.0e9 < cfg.param_count() < 9.0e9
+    cfg = get_config("tinyllama-1.1b")
+    assert 1.0e9 < cfg.param_count() < 1.25e9
+    cfg = get_config("whisper-base")
+    assert cfg.is_encoder_decoder and cfg.encoder_layers == 6

@@ -1,0 +1,119 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SVMConfig, fit_binary
+from repro.core.risk import converged, empirical_risk, hinge_loss
+from repro.text import fit_idf, transform
+from repro.text.tokenizer import hash_token
+
+_SETTINGS = dict(max_examples=15, deadline=None)
+
+
+@st.composite
+def svm_problem(draw):
+    n = draw(st.integers(24, 60))
+    d = draw(st.integers(2, 8))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    X = rng.normal(0, 1, (n, d)).astype(np.float32)
+    w = rng.normal(0, 1, d).astype(np.float32)
+    y = np.sign(X @ w + 1e-3).astype(np.float32)
+    y[y == 0] = 1.0
+    return jnp.asarray(X), jnp.asarray(y)
+
+
+@given(svm_problem(), st.floats(0.1, 10.0))
+@settings(**_SETTINGS)
+def test_alpha_always_in_box(problem, C):
+    X, y = problem
+    m = fit_binary(X, y, cfg=SVMConfig(C=C, max_epochs=15))
+    assert float(jnp.min(m.alpha)) >= -1e-6
+    assert float(jnp.max(m.alpha)) <= C + 1e-5
+
+
+@given(svm_problem())
+@settings(**_SETTINGS)
+def test_label_flip_flips_hyperplane(problem):
+    """fit(X, -y) must yield the mirrored decision function."""
+    X, y = problem
+    cfg = SVMConfig(C=1.0, max_epochs=25, tol=1e-6)
+    m1 = fit_binary(X, y, cfg=cfg)
+    m2 = fit_binary(X, -y, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(m1.w), -np.asarray(m2.w),
+                               rtol=1e-3, atol=1e-4)
+
+
+@given(svm_problem(), st.integers(1, 10))
+@settings(**_SETTINGS)
+def test_padding_invariance(problem, pad):
+    X, y = problem
+    cfg = SVMConfig(C=1.0, max_epochs=20)
+    m1 = fit_binary(X, y, cfg=cfg)
+    Xp = jnp.concatenate([X, jnp.ones((pad, X.shape[1]))])
+    yp = jnp.concatenate([y, jnp.ones((pad,))])
+    mask = jnp.concatenate([jnp.ones((X.shape[0],)), jnp.zeros((pad,))])
+    m2 = fit_binary(Xp, yp, mask, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(m1.w), np.asarray(m2.w),
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(st.lists(st.floats(-5, 5), min_size=4, max_size=32),
+       st.lists(st.sampled_from([-1.0, 1.0]), min_size=4, max_size=32))
+@settings(**_SETTINGS)
+def test_hinge_loss_nonnegative_and_correct_side(scores, ys):
+    n = min(len(scores), len(ys))
+    s = jnp.asarray(scores[:n], jnp.float32)
+    y = jnp.asarray(ys[:n], jnp.float32)
+    h = hinge_loss(s, y)
+    assert float(jnp.min(h)) >= 0.0
+    big = y * s >= 1.0
+    assert float(jnp.max(jnp.where(big, h, 0.0))) == 0.0
+
+
+@given(st.floats(0, 1), st.floats(0, 1), st.floats(0, 0.5))
+@settings(**_SETTINGS)
+def test_convergence_rule_symmetry(r1, r2, gamma):
+    assert bool(converged(r1, r2, gamma)) == bool(converged(r2, r1, gamma))
+    assert bool(converged(r1, r1, 0.0))
+
+
+@given(st.integers(2, 50), st.integers(2, 16))
+@settings(**_SETTINGS)
+def test_idf_monotone_in_rarity(n_docs, d):
+    """Rarer terms must never get smaller idf (eq. 10 monotonicity)."""
+    rng = np.random.default_rng(n_docs * 31 + d)
+    counts = (rng.random((n_docs, d)) > 0.5).astype(np.float32)
+    model = fit_idf(jnp.asarray(counts))
+    df = counts.astype(bool).sum(0)
+    idf = np.asarray(model.idf)
+    order = np.argsort(df)
+    for a, b in zip(order[:-1], order[1:]):
+        if df[a] < df[b]:
+            assert idf[a] >= idf[b] - 1e-6
+
+
+@given(st.text(min_size=1, max_size=30), st.integers(2, 2 ** 20))
+@settings(**_SETTINGS)
+def test_hash_token_in_range(tok, dim):
+    h = hash_token(tok, dim)
+    assert 0 <= h < dim
+
+
+@given(svm_problem())
+@settings(max_examples=8, deadline=None)
+def test_empirical_risk_masked_subset(problem):
+    """Risk over a mask equals risk over the corresponding subset."""
+    X, y = problem
+    n = X.shape[0]
+    scores = X @ jnp.ones((X.shape[1],))
+    mask = jnp.asarray(np.random.default_rng(0).random(n) > 0.4,
+                       jnp.float32)
+    r_masked = empirical_risk(scores, y, mask)
+    sel = np.asarray(mask) > 0
+    if sel.sum() == 0:
+        return
+    r_subset = empirical_risk(scores[sel], y[sel])
+    assert float(jnp.abs(r_masked - r_subset)) < 1e-5

@@ -1,0 +1,87 @@
+"""Sharding-rule unit tests (AbstractMesh — no devices needed)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.rules import RULE_SETS, get_rules
+from repro.launch.sharding import (batch_pspec, kv_repeat_for, param_pspecs,
+                                   pspec_for)
+from repro.models.transformer import build_model
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+POD_MESH = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_vocab_parallel_embedding():
+    spec = pspec_for((151936, 4096), ("vocab", "embed"), MESH)
+    assert spec == P("model", "data")
+
+
+def test_divisibility_fallback():
+    # 12 heads don't divide 16 → replicated
+    spec = pspec_for((1536, 12, 128), ("embed", "heads", "head_dim"), MESH)
+    padded = tuple(spec) + (None,) * 3
+    assert padded[1] is None
+    # but ffn still shards
+    spec = pspec_for((1536, 8960), ("embed", "ffn"), MESH)
+    assert spec == P("data", "model")
+
+
+def test_no_axis_reuse_within_tensor():
+    # both dims want "model" → second falls through
+    spec = pspec_for((1024, 2048), ("vocab", "ffn"), MESH)
+    assert tuple(spec).count("model") == 1
+
+
+def test_experts_fallback_small_expert_count():
+    # mixtral: 8 experts < 16 shards → experts replicated, ffn sharded
+    spec = pspec_for((8, 6144, 16384), ("experts", "embed", "ffn"), MESH)
+    assert spec[0] is None and "model" in tuple(spec)
+    # qwen3: 128 experts shard cleanly
+    spec = pspec_for((128, 4096, 1536), ("experts", "embed", "ffn"), MESH)
+    assert spec[0] == "model"
+
+
+def test_kv_repeat():
+    assert kv_repeat_for(get_config("llama3-8b"), MESH) == 2      # 8→16
+    assert kv_repeat_for(get_config("qwen3-moe-235b-a22b"), MESH) == 4  # 4→16
+    assert kv_repeat_for(get_config("chatglm3-6b"), MESH) == 8    # 2→16
+    assert kv_repeat_for(get_config("zamba2-1.2b"), MESH) == 1    # 32%16==0
+    assert kv_repeat_for(get_config("qwen2-1.5b"), MESH) == 1     # H=12: no
+    assert kv_repeat_for(get_config("rwkv6-7b"), MESH) == 1       # attn-free
+
+
+def test_batch_pspec():
+    assert batch_pspec(MESH, 256) == P("data")
+    assert batch_pspec(POD_MESH, 256) == P(("pod", "data"))
+    assert batch_pspec(MESH, 1) == P(None)      # long_500k: replicated
+
+
+def test_param_pspecs_cover_all_leaves():
+    cfg = get_config("mixtral-8x22b")
+    model = build_model(cfg)
+    specs = param_pspecs(model, MESH)
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert all(isinstance(l, P) for l in leaves)
+    abstract = jax.tree.leaves(model.abstract())
+    assert len(leaves) == len(abstract)
+    # every sharded dim divides the mesh axis
+    for spec, a in zip(leaves, abstract):
+        for dim, ax in zip(a.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = 1
+            for x in axes:
+                total *= MESH.shape[x]
+            assert dim % total == 0, (spec, a.shape)
+
+
+def test_rule_sets_exist():
+    for name in ("baseline", "tp_only", "fsdp_ffn", "expert_first"):
+        assert name in RULE_SETS
+        get_rules(name)
+    with pytest.raises(KeyError):
+        get_rules("nope")

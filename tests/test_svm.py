@@ -1,0 +1,116 @@
+"""Unit tests: binary soft-margin SVM dual solver (core.svm)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (KernelConfig, SVMConfig, decision_kernel,
+                        decision_linear, fit_binary)
+from repro.core.svm import fit_binary_kernel, fit_binary_linear
+
+
+def _separable(n=200, d=10, margin=0.5, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    X = jax.random.normal(k1, (n, d))
+    w = jax.random.normal(k2, (d,))
+    w = w / jnp.linalg.norm(w)
+    y = jnp.sign(X @ w)
+    X = X + margin * y[:, None] * w[None, :]   # push classes apart
+    return X, y, w
+
+
+def test_linear_separable_accuracy():
+    X, y, _ = _separable()
+    m = fit_binary(X, y, cfg=SVMConfig(C=10.0, max_epochs=100))
+    acc = jnp.mean(jnp.sign(decision_linear(m.w, m.b, X)) == y)
+    assert float(acc) >= 0.99
+
+
+def test_alpha_box_constraint():
+    X, y, _ = _separable(margin=0.0)
+    cfg = SVMConfig(C=0.7, max_epochs=50)
+    m = fit_binary(X, y, cfg=cfg)
+    assert float(jnp.min(m.alpha)) >= -1e-6
+    assert float(jnp.max(m.alpha)) <= cfg.C + 1e-6
+
+
+def test_primal_dual_w_consistency():
+    """w must equal Σ α_i y_i x_i (the dual-primal link)."""
+    X, y, _ = _separable()
+    m = fit_binary(X, y, cfg=SVMConfig(C=1.0, max_epochs=60))
+    w_from_alpha = X.T @ (m.alpha * y)
+    np.testing.assert_allclose(np.asarray(m.w), np.asarray(w_from_alpha),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_kkt_complementary_slackness():
+    """Margin violations only where α = C; margin ≥ 1 where α = 0."""
+    X, y, _ = _separable(margin=0.2)
+    cfg = SVMConfig(C=1.0, max_epochs=200, tol=1e-5)
+    m = fit_binary(X, y, cfg=cfg)
+    f = decision_linear(m.w, m.b, X)
+    margins = y * f
+    free = (m.alpha > 1e-4) & (m.alpha < cfg.C - 1e-4)
+    at_zero = m.alpha <= 1e-4
+    # free SVs sit on the margin
+    assert float(jnp.max(jnp.abs(margins[free] - 1.0))) < 5e-2 \
+        or int(jnp.sum(free)) == 0
+    # zero-α points are (nearly) outside the margin
+    assert float(jnp.min(jnp.where(at_zero, margins, jnp.inf))) > 1.0 - 5e-2
+
+
+def test_gram_path_matches_linear_path():
+    X, y, _ = _separable(n=120, d=8)
+    cfg_l = SVMConfig(C=1.0, max_epochs=80, tol=1e-6)
+    cfg_g = SVMConfig(C=1.0, max_epochs=80, tol=1e-6, use_gram=True)
+    ml = fit_binary(X, y, cfg=cfg_l)
+    mg = fit_binary(X, y, cfg=cfg_g)
+    accl = jnp.mean(jnp.sign(X @ ml.w + ml.b) == y)
+    accg = jnp.mean(jnp.sign(X @ mg.w + mg.b) == y)
+    np.testing.assert_allclose(np.asarray(ml.w), np.asarray(mg.w),
+                               rtol=5e-3, atol=5e-3)
+    assert float(accl) == pytest.approx(float(accg), abs=0.02)
+
+
+def test_mask_excludes_padding():
+    """Padded rows must not influence the solution at all."""
+    X, y, _ = _separable(n=100, d=6)
+    pad = jnp.concatenate([X, 100.0 * jnp.ones((20, 6))])
+    ypad = jnp.concatenate([y, jnp.ones((20,))])
+    mask = jnp.concatenate([jnp.ones((100,)), jnp.zeros((20,))])
+    cfg = SVMConfig(C=1.0, max_epochs=60)
+    m_clean = fit_binary(X, y, cfg=cfg)
+    m_padded = fit_binary(pad, ypad, mask, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(m_clean.w),
+                               np.asarray(m_padded.w), rtol=1e-5, atol=1e-6)
+    assert float(jnp.max(jnp.abs(m_padded.alpha[100:]))) == 0.0
+
+
+def test_rbf_kernel_nonlinear_separation():
+    """XOR-ish data: linear fails, rbf succeeds."""
+    rng = np.random.default_rng(0)
+    X = rng.normal(0, 1, (240, 2)).astype(np.float32)
+    y = np.sign(X[:, 0] * X[:, 1]).astype(np.float32)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    lin = fit_binary(X, y, cfg=SVMConfig(C=1.0, max_epochs=60))
+    acc_lin = float(jnp.mean(jnp.sign(X @ lin.w + lin.b) == y))
+    cfg = SVMConfig(C=10.0, max_epochs=80,
+                    kernel=KernelConfig("rbf", gamma=1.0))
+    rbf = fit_binary(X, y, cfg=cfg)
+    coef = rbf.alpha * y
+    scores = decision_kernel(X, coef, rbf.b, X, cfg.kernel)
+    acc_rbf = float(jnp.mean(jnp.sign(scores) == y))
+    assert acc_rbf > 0.95
+    assert acc_rbf > acc_lin + 0.2
+
+
+def test_pallas_gram_fn_plugs_into_solver():
+    from repro.kernels import gram_matrix
+    X, y, _ = _separable(n=150, d=16)
+    cfg = SVMConfig(C=1.0, max_epochs=60, use_gram=True)
+    m_ref = fit_binary_kernel(X, y, None, cfg)
+    m_pal = fit_binary_kernel(X, y, None, cfg,
+                              gram_fn=lambda a, b: gram_matrix(
+                                  a, b, bm=128, bn=128, bk=128))
+    np.testing.assert_allclose(np.asarray(m_ref.w), np.asarray(m_pal.w),
+                               rtol=1e-3, atol=1e-4)

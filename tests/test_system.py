@@ -1,0 +1,102 @@
+"""End-to-end behaviour tests for the paper's system: synthetic Turkish
+tweet corpus → TF×IDF → distributed MapReduce SVM → polarity tables."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (MRSVMConfig, SVMConfig, confusion_matrix,
+                        fit_mapreduce, fit_one_vs_rest, predict)
+from repro.text import (CorpusConfig, fit_transform, generate, vectorize)
+
+
+@pytest.fixture(scope="module")
+def two_class_pipeline():
+    cfg = CorpusConfig(num_messages=2000, classes=(-1, 1), seed=0)
+    corpus = generate(cfg)
+    counts = vectorize(corpus.texts, 4096)
+    X, _ = fit_transform(jnp.asarray(counts))
+    y = jnp.asarray(corpus.labels, jnp.float32)
+    mcfg = MRSVMConfig(sv_capacity=256, gamma=1e-4, max_rounds=4,
+                       svm=SVMConfig(C=1.0, max_epochs=15))
+    model = fit_mapreduce(X, y, num_partitions=8, cfg=mcfg)
+    return corpus, X, y, model, mcfg
+
+
+def test_two_class_accuracy_in_paper_ballpark(two_class_pipeline):
+    """Paper Tablo 6 diagonal = 85.9%; our synthetic corpus with matched
+    class balance should land at or above that regime (≥80%)."""
+    _, X, y, model, mcfg = two_class_pipeline
+    pred = predict(model, X, mcfg)
+    acc = float(jnp.mean(pred == y))
+    assert acc > 0.80
+
+
+def test_confusion_matrix_shape_and_mass(two_class_pipeline):
+    _, X, y, model, mcfg = two_class_pipeline
+    pred = predict(model, X, mcfg)
+    cm = confusion_matrix(y, pred, [-1, 1])
+    assert cm.shape == (2, 2)
+    assert abs(cm.sum() - 100.0) < 1e-3
+    assert np.trace(cm) > 80.0
+
+
+def test_university_polarity_ranking(two_class_pipeline):
+    """Tablo 7 analogue: per-university positive-rate ranking exists and
+    is non-degenerate (the corpus plants per-university skew)."""
+    corpus, X, y, model, mcfg = two_class_pipeline
+    pred = np.asarray(predict(model, X, mcfg))
+    unis = corpus.universities
+    rates = []
+    for u in range(len(corpus.university_names)):
+        sel = unis == u
+        if sel.sum() >= 5:
+            rates.append((pred[sel] > 0).mean())
+    rates = np.asarray(rates)
+    assert len(rates) > 50
+    assert rates.std() > 0.05           # planted skew is visible
+
+
+def test_three_class_model_runs():
+    cfg = CorpusConfig(num_messages=1200, classes=(-1, 0, 1), seed=1)
+    corpus = generate(cfg)
+    X, _ = fit_transform(jnp.asarray(vectorize(corpus.texts, 4096)))
+    y = jnp.asarray(corpus.labels, jnp.float32)
+    mcfg = MRSVMConfig(sv_capacity=128, max_rounds=3,
+                       svm=SVMConfig(C=1.0, max_epochs=15))
+    ovr = fit_one_vs_rest(X, y, [-1, 0, 1], 4, mcfg)
+    pred = ovr.predict(X)
+    cm = confusion_matrix(y, pred, [-1, 0, 1])
+    # paper Tablo 8 diagonal = 68.4%; synthetic should beat it
+    assert np.trace(cm) > 68.0
+
+
+def test_more_partitions_do_not_break_convergence():
+    """Paper's scalability claim: accuracy holds as L grows."""
+    cfg = CorpusConfig(num_messages=1600, classes=(-1, 1), seed=2)
+    corpus = generate(cfg)
+    X, _ = fit_transform(jnp.asarray(vectorize(corpus.texts, 2048)))
+    y = jnp.asarray(corpus.labels, jnp.float32)
+    accs = {}
+    for L in (2, 8, 16):
+        mcfg = MRSVMConfig(sv_capacity=256, gamma=1e-4, max_rounds=4,
+                           svm=SVMConfig(C=1.0, max_epochs=15))
+        m = fit_mapreduce(X, y, num_partitions=L, cfg=mcfg)
+        accs[L] = float(jnp.mean(predict(m, X, mcfg) == y))
+    assert min(accs.values()) > max(accs.values()) - 0.08, accs
+
+
+def test_pipeline_with_feature_selection():
+    """The paper's full pipeline order: stopwords → vector space →
+    feature selection → SVM. χ² top-25% keeps paper-ballpark accuracy."""
+    from repro.text import select_top_k
+    cfg = CorpusConfig(num_messages=1500, classes=(-1, 1), seed=4)
+    corpus = generate(cfg)
+    X, _ = fit_transform(jnp.asarray(vectorize(corpus.texts, 4096)))
+    y = jnp.asarray(corpus.labels, jnp.float32)
+    X_sel, idx = select_top_k(X, y, [-1, 1], 1024)
+    assert X_sel.shape == (1500, 1024)
+    mcfg = MRSVMConfig(sv_capacity=256, gamma=1e-4, max_rounds=4,
+                       svm=SVMConfig(C=1.0, max_epochs=15))
+    model = fit_mapreduce(X_sel, y, 4, mcfg)
+    acc = float(jnp.mean(predict(model, X_sel, mcfg) == y))
+    assert acc > 0.8

@@ -1,0 +1,86 @@
+"""Unit tests: TF×IDF text pipeline (paper eq. 10-11, Tablo 4)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.text import (CLASS_NEG, CLASS_POS, CorpusConfig, TURKISH_STOPWORDS,
+                        chi2_scores, fit_idf, fit_transform, generate,
+                        hash_token, normalize, tokenize, transform, vectorize)
+
+
+def test_stopwords_are_tablo4():
+    for w in ("acaba", "ama", "nasıl", "çünkü", "yetmiş", "şeyler"):
+        assert w in TURKISH_STOPWORDS
+    assert "üniversite" not in TURKISH_STOPWORDS
+
+
+def test_tokenizer_removes_stopwords_urls_mentions():
+    toks = tokenize("Ama ODTÜ çok güzel! http://t.co/x @user #kampus")
+    assert "ama" not in toks and "çok" not in toks
+    assert "odtü" in toks and "güzel" in toks
+    assert not any(t.startswith("http") or t.startswith("@") for t in toks)
+
+
+def test_turkish_lowercasing():
+    assert normalize("İYİ") == "iyi"
+    assert normalize("ISPARTA").startswith("ı")
+
+
+def test_hashing_is_stable_across_processes():
+    # crc32-based: fixed expected bucket (guards against hash() PYTHONHASHSEED)
+    assert hash_token("güzel", 4096) == hash_token("güzel", 4096)
+    assert hash_token("güzel", 2 ** 31) == 1489674879
+
+
+def test_idf_formula_eq10():
+    counts = jnp.asarray([[1.0, 0.0], [1.0, 1.0], [1.0, 0.0], [1.0, 1.0]])
+    model = fit_idf(counts, smooth=False)
+    # df = [4, 2], N = 4 → idf = [log(1), log(2)]
+    np.testing.assert_allclose(np.asarray(model.idf),
+                               [0.0, np.log(2.0)], rtol=1e-6)
+
+
+def test_tfidf_transform_eq11():
+    counts = jnp.asarray([[2.0, 1.0], [0.0, 3.0]])
+    model = fit_idf(counts, smooth=False)
+    X = transform(counts, model, l2_normalize=False)
+    np.testing.assert_allclose(np.asarray(X),
+                               np.asarray(counts) * np.asarray(model.idf),
+                               rtol=1e-6)
+
+
+def test_l2_normalization():
+    X, _ = fit_transform(jnp.asarray([[3.0, 4.0], [1.0, 0.0]]))
+    norms = jnp.linalg.norm(X, axis=1)
+    np.testing.assert_allclose(np.asarray(norms), [1.0, 1.0], rtol=1e-5)
+
+
+def test_chi2_finds_planted_features():
+    rng = np.random.default_rng(0)
+    n = 400
+    y = jnp.asarray(rng.choice([-1, 1], n))
+    noise = rng.random((n, 32)).astype(np.float32)
+    planted = (np.asarray(y)[:, None] > 0) * np.ones((n, 2), np.float32)
+    X = jnp.asarray(np.concatenate([planted, noise], axis=1))
+    scores = chi2_scores(X, y, [-1, 1])
+    top2 = set(np.argsort(np.asarray(scores))[-2:].tolist())
+    assert top2 == {0, 1}
+
+
+def test_corpus_respects_tablo5_proportions():
+    cfg = CorpusConfig(num_messages=6000, classes=(-1, 1), seed=3)
+    c = generate(cfg)
+    frac_pos = float(np.mean(c.labels == 1))
+    assert 0.35 < frac_pos < 0.65          # Tablo 5 is ~50/50 + entity skew
+    assert len(c.university_names) == 108 + 66
+    assert int(c.university_kinds.sum()) == 66   # private count
+
+
+def test_corpus_signal_is_learnable():
+    cfg = CorpusConfig(num_messages=1500, classes=(-1, 1), seed=0)
+    c = generate(cfg)
+    X = vectorize(c.texts, 2048)
+    y = np.asarray(c.labels, np.float32)
+    # one-feature baseline: class-conditional means differ on lexicon dims
+    pos_mean = X[y > 0].mean(0)
+    neg_mean = X[y < 0].mean(0)
+    assert float(np.max(np.abs(pos_mean - neg_mean))) > 0.05
