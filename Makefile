@@ -1,0 +1,24 @@
+# Executable verify recipes (ISSUE 1 satellite). The tier-1 command is
+# the ROADMAP's; test-dist proves the distributed MapReduce-SVM path on
+# 8 faked host devices (the flag must be set before jax's backend init,
+# hence a fresh process).
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test test-dist test-fast check
+
+# Tier-1: the ROADMAP verify command.
+test:
+	$(PY) -m pytest -x -q
+
+# Distributed: sharded MapReduce round ≡ functional round on 8 devices.
+test-dist:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) -m pytest -q tests/test_sharded_round.py tests/test_mapreduce.py
+
+# Quick signal while iterating (skips the slow dry-run subprocess tests).
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+check: test test-dist

@@ -12,6 +12,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core import MRSVMConfig, SVMConfig
 from repro.core.mapreduce_svm import build_sharded_round, init_sv_buffer
 from repro.text import CorpusConfig, fit_transform, generate, vectorize
@@ -26,7 +27,7 @@ def main():
     print(f"{n} rows × {d} features over {ndev} devices "
           f"({n // ndev} rows/device)")
 
-    mesh = jax.make_mesh((ndev,), ("data",))
+    mesh = compat.make_mesh((ndev,), ("data",))
     cfg = MRSVMConfig(sv_capacity=256, gamma=1e-4,
                       svm=SVMConfig(C=1.0, max_epochs=15))
     round_fn = build_sharded_round(mesh, ("data",), cfg, n // ndev)

@@ -1,0 +1,239 @@
+"""Version-portable JAX substrate (DESIGN.md §7).
+
+The distributed MapReduce-SVM path targets the shard_map surface as it
+exists across JAX 0.4.3x → 0.8.x. The relevant names drifted between
+those versions, so this module is the ONE place allowed to touch them;
+every other file imports the stable spellings below.
+
+Drift handled here:
+
+* ``jax.shard_map`` (new) vs ``jax.experimental.shard_map.shard_map``
+  (0.4.x), and the ``check_vma`` (new) vs ``check_rep`` (old) kwarg.
+* ``jax.lax.pcast`` (transitional) / ``jax.lax.pvary`` (new) /
+  neither (0.4.x, where shard_map has no vma types at all and the
+  correct behaviour is the identity).
+* ``AbstractMesh((16, 16), ("data", "model"))`` (new positional
+  ``axis_sizes, axis_names``) vs the 0.4.x
+  ``AbstractMesh(shape_tuple=(("data", 16), ("model", 16)))``.
+* ``jax.make_mesh`` (0.4.35+) vs hand-rolled ``Mesh`` over reshaped
+  ``jax.devices()``.
+* ``jax.tree.map`` (0.4.25+) vs ``jax.tree_util.tree_map``.
+* ``jax.lax.axis_index`` over a TUPLE of axis names (flattened index),
+  which older versions only accept for a single name.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def jax_version() -> Tuple[int, ...]:
+    """Installed JAX version as a comparable int tuple, e.g. (0, 4, 37)."""
+    parts = []
+    for p in jax.__version__.split(".")[:3]:
+        digits = "".join(c for c in p if c.isdigit())
+        parts.append(int(digits or 0))
+    return tuple(parts)
+
+
+# ---------------------------------------------------------------------------
+# Pytree mapping.
+# ---------------------------------------------------------------------------
+
+try:
+    tree_map = jax.tree.map
+except AttributeError:                                    # pragma: no cover
+    tree_map = jax.tree_util.tree_map
+
+
+# ---------------------------------------------------------------------------
+# shard_map.
+# ---------------------------------------------------------------------------
+
+def _resolve_shard_map() -> Callable:
+    impl = getattr(jax, "shard_map", None)
+    if impl is not None:
+        return impl
+    from jax.experimental.shard_map import shard_map as impl
+    return impl
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None, **kwargs) -> Callable:
+    """``jax.shard_map`` with one calling convention on every JAX.
+
+    ``check_vma`` maps onto whichever replication/varying-manual-axes
+    checker kwarg the installed version accepts — the name is chosen by
+    signature, not by where the impl lives, because ~0.6.x exposes a
+    top-level ``jax.shard_map`` that still spells it ``check_rep``.
+    ``None`` leaves the version default in place.
+    """
+    impl = _resolve_shard_map()
+    kw = dict(kwargs)
+    if check_vma is not None:
+        try:
+            params = inspect.signature(impl).parameters
+        except (TypeError, ValueError):
+            params = None                    # unsignature-able: probe below
+        if params is None or "check_vma" in params:
+            kw["check_vma"] = check_vma
+        elif "check_rep" in params:
+            kw["check_rep"] = check_vma
+        # else: checker kwarg gone entirely → run the version default
+    try:
+        return impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    except TypeError:
+        if "check_vma" in kw:                # probe failed: try old spelling
+            kw["check_rep"] = kw.pop("check_vma")
+            try:
+                return impl(f, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, **kw)
+            except TypeError:
+                pass
+        kw.pop("check_rep", None)
+        return impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Varying-manual-axes (vma) marking.
+# ---------------------------------------------------------------------------
+
+def pvary(tree: Any, axes: Sequence[str]) -> Any:
+    """Mark a pytree as device-varying over shard_map manual ``axes``.
+
+    Needed on vma-typed JAX (0.7+) because while_loop carries built from
+    constants type as axis-invariant while loop-body outputs are
+    varying. Resolution chain: ``jax.lax.pcast(..., to="varying")`` →
+    ``jax.lax.pvary`` → identity. On JAX without either primitive the
+    identity IS the correct lowering (no vma types exist to satisfy),
+    so the chain never raises — only degrades.
+    """
+    axes = tuple(axes)
+    if not axes:
+        return tree
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is not None:
+        try:
+            return tree_map(lambda x: pcast(x, axes, to="varying"), tree)
+        except Exception:               # kwarg drift / unbound axis name
+            pass
+    pvary_prim = getattr(jax.lax, "pvary", None)
+    if pvary_prim is not None:
+        try:
+            return tree_map(lambda x: pvary_prim(x, axes), tree)
+        except Exception:
+            # Unbound axis name, i.e. called outside shard_map on
+            # vma-typed JAX: identity is the correct no-op there too.
+            # pvary only annotates types — degrading never changes
+            # values, so swallowing here cannot mask a numeric bug.
+            pass
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction.
+# ---------------------------------------------------------------------------
+
+def make_abstract_mesh(axis_sizes: Sequence[int],
+                       axis_names: Sequence[str]):
+    """Device-free ``AbstractMesh`` across the constructor drift.
+
+    New JAX: ``AbstractMesh(axis_sizes, axis_names)``.
+    0.4.x:   ``AbstractMesh(shape_tuple)`` with (name, size) pairs.
+    """
+    from jax.sharding import AbstractMesh
+    sizes, names = tuple(axis_sizes), tuple(axis_names)
+    try:
+        return AbstractMesh(sizes, names)
+    except (TypeError, ValueError):
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with a manual-``Mesh`` fallback for old JAX."""
+    shapes, names = tuple(axis_shapes), tuple(axis_names)
+    maker = getattr(jax, "make_mesh", None)
+    if maker is not None:
+        return maker(shapes, names)
+    from jax.sharding import Mesh
+    n = int(np.prod(shapes))
+    devices = np.asarray(jax.devices()[:n]).reshape(shapes)
+    return Mesh(devices, names)
+
+
+def to_shardings(mesh, specs):
+    """PartitionSpec pytree → NamedSharding pytree bound to ``mesh``.
+
+    Old JAX's ``jax.jit`` rejects bare ``PartitionSpec`` in
+    in_shardings/out_shardings (new JAX accepts them under an active
+    mesh); ``NamedSharding`` works everywhere, so bind unconditionally.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    is_spec = lambda s: isinstance(s, PartitionSpec)
+    return tree_map(lambda s: NamedSharding(mesh, s) if is_spec(s) else s,
+                    specs, is_leaf=is_spec)
+
+
+def cost_analysis(compiled) -> dict:
+    """Flat cost dict from a compiled executable: old JAX returns a
+    one-element LIST of per-program dicts, new JAX the dict itself."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` for bare-PartitionSpec
+    sharding constraints: ``jax.set_mesh`` (new) → ``use_mesh``
+    (transitional) → the legacy ``with mesh:`` resource env (0.4.x).
+    """
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    import jax.sharding as jshd
+    use_mesh = getattr(jshd, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh                       # Mesh is itself a context manager
+
+
+# ---------------------------------------------------------------------------
+# Collectives: normalize tuple-of-axis-names handling.
+# ---------------------------------------------------------------------------
+
+def axis_index(axis_names) -> jax.Array:
+    """Flattened device index over one or several mesh axes.
+
+    Newer JAX accepts a tuple directly; older versions only a single
+    name, so the row-major flattening is done by hand there.
+    """
+    if isinstance(axis_names, str):
+        return jax.lax.axis_index(axis_names)
+    axes = tuple(axis_names)
+    try:
+        return jax.lax.axis_index(axes)
+    except (TypeError, ValueError):
+        idx = jax.lax.axis_index(axes[0])
+        for a in axes[1:]:
+            idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+        return idx
+
+
+def psum(x, axis_names):
+    return jax.lax.psum(x, tuple(axis_names)
+                        if not isinstance(axis_names, str) else axis_names)
+
+
+def pmax(x, axis_names):
+    return jax.lax.pmax(x, tuple(axis_names)
+                        if not isinstance(axis_names, str) else axis_names)
+
+
+def all_gather(x, axis_names, *, axis: int = 0, tiled: bool = False):
+    name = tuple(axis_names) if not isinstance(axis_names, str) \
+        else axis_names
+    return jax.lax.all_gather(x, name, axis=axis, tiled=tiled)

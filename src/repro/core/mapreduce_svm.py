@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import risk as risk_lib
 from repro.core.svm import (BinarySVM, SVMConfig, decision_kernel,
                             decision_linear, fit_binary)
@@ -280,7 +281,7 @@ def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
     per = rows_per_device
 
     def round_body(Xl, yl, ml, sv: SVBuffer):
-        idx = jax.lax.axis_index(axes)          # flattened device index
+        idx = compat.axis_index(axes)           # flattened device index
         # map + reduce
         Xa, ya, ma = _augment(Xl, yl, ml, sv)
         res = fit_binary(Xa, ya, ma, cfg.svm, vma_axes=axes)
@@ -289,7 +290,7 @@ def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
 
         # union semantics: fold the max appended-copy α back into the
         # home rows (buffer row with global id g lives on device g//per).
-        buf_alpha = jax.lax.pmax(copy_alpha, axes)          # (cap,)
+        buf_alpha = compat.pmax(copy_alpha, axes)           # (cap,)
         mine = jnp.logical_and(sv.ids >= 0, sv.ids // per == idx)
         pos = jnp.where(mine, sv.ids % per, 0)
         folded = jnp.zeros((per,), Xl.dtype).at[pos].max(
@@ -307,12 +308,12 @@ def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
             ids=jnp.where(live > 0, cand_ids, -1),
             mask=live,
         )
-        new_sv = jax.tree.map(
-            lambda a: jax.lax.all_gather(a, axes, tiled=True), cand)
+        new_sv = compat.tree_map(
+            lambda a: compat.all_gather(a, axes, tiled=True), cand)
 
         # driver: eq. 7 over all-gathered hypotheses
-        W = jax.lax.all_gather(res.w, axes)                 # (ndev, d)
-        B = jax.lax.all_gather(res.b, axes)                 # (ndev,)
+        W = compat.all_gather(res.w, axes)                  # (ndev, d)
+        B = compat.all_gather(res.b, axes)                  # (ndev,)
         scores = Xl @ W.T + B[None, :]                      # (per, ndev)
         if cfg.risk_loss == "hinge":
             per_ex = jnp.maximum(0.0, 1.0 - yl[:, None] * scores)
@@ -320,8 +321,8 @@ def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
             per_ex = (jnp.sign(scores) != jnp.sign(yl)[:, None]).astype(Xl.dtype)
         part = jnp.sum(per_ex * ml[:, None], axis=0)
         cnt = jnp.sum(ml)
-        risks = jax.lax.psum(part, axes) / jnp.maximum(
-            jax.lax.psum(cnt, axes), 1.0)
+        risks = compat.psum(part, axes) / jnp.maximum(
+            compat.psum(cnt, axes), 1.0)
         l_star = jnp.argmin(risks)
         return new_sv, risks, W[l_star], B[l_star]
 
@@ -338,8 +339,10 @@ def build_sharded_round(mesh, data_axes: Sequence[str], cfg: MRSVMConfig,
     GLOBAL array sharded on its leading axis.
 
     ``check_vma=False``: every output is replicated by construction
-    (all_gather / psum results), which JAX 0.8's static vma checker
-    cannot always infer through while_loop-heavy reducers.
+    (all_gather / psum results), which neither JAX 0.8's static vma
+    checker nor 0.4.x's ``check_rep`` can always infer through
+    while_loop-heavy reducers. :func:`repro.compat.shard_map` maps the
+    flag onto whichever kwarg the installed version spells.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -347,7 +350,7 @@ def build_sharded_round(mesh, data_axes: Sequence[str], cfg: MRSVMConfig,
     ndev = int(np.prod([mesh.shape[a] for a in axes]))
     body = make_sharded_round(cfg, axes, ndev, rows_per_device)
     row_spec = P(axes if len(axes) > 1 else axes[0])
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body, mesh=mesh,
         in_specs=(row_spec, row_spec, row_spec,
                   SVBuffer(x=P(), y=P(), alpha=P(), ids=P(), mask=P())),

@@ -29,23 +29,20 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core.kernel_fns import KernelConfig, apply_kernel
 
 
 def _pvary(tree, axes):
     """Mark a pytree as varying over shard_map manual axes (vma).
 
-    No-op when ``axes`` is empty or outside shard_map. Needed because
-    our while_loop carries start from constants, which JAX 0.8 types as
-    axis-invariant, while the loop body outputs are device-varying.
+    No-op when ``axes`` is empty, outside shard_map, or on a JAX with
+    no vma types at all. Needed because our while_loop carries start
+    from constants, which JAX 0.8 types as axis-invariant, while the
+    loop body outputs are device-varying. The pcast→pvary→identity
+    resolution lives in :mod:`repro.compat`.
     """
-    if not axes:
-        return tree
-    try:
-        return jax.tree.map(
-            lambda x: jax.lax.pcast(x, axes, to="varying"), tree)
-    except (AttributeError, TypeError):
-        return jax.tree.map(lambda x: jax.lax.pvary(x, axes), tree)
+    return compat.pvary(tree, axes)
 
 
 @dataclasses.dataclass(frozen=True)

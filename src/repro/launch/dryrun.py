@@ -29,6 +29,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     import jax
     import numpy as np
 
+    from repro import compat
     from repro.configs import get_config
     from repro.launch import steps as steps_lib
     from repro.launch.costs import analytic_costs
@@ -65,18 +66,19 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             bundle = steps_lib.build_step(cfg, mesh, shape,
                                           rules=get_rules(rules_name))
 
-        with jax.set_mesh(mesh):
-            jitted = jax.jit(bundle.fn,
-                             in_shardings=bundle.in_shardings,
-                             out_shardings=bundle.out_shardings,
-                             donate_argnums=bundle.donate_argnums)
+        with compat.set_mesh(mesh):
+            jitted = jax.jit(
+                bundle.fn,
+                in_shardings=compat.to_shardings(mesh, bundle.in_shardings),
+                out_shardings=compat.to_shardings(mesh, bundle.out_shardings),
+                donate_argnums=bundle.donate_argnums)
             lowered = jitted.lower(*bundle.args)
             t_lower = time.time() - t0
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = compat.cost_analysis(compiled)
         hlo = compiled.as_text()
         coll = collective_stats(hlo)
 

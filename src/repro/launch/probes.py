@@ -15,6 +15,8 @@ import dataclasses
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -305,10 +307,13 @@ def measure_probes(probes: List[Probe], mesh) -> Dict[str, dict]:
     from repro.launch.hlo_analysis import collective_stats
     out = {}
     for p in probes:
-        with jax.set_mesh(mesh):
-            lowered = jax.jit(p.fn, in_shardings=p.in_shardings).lower(*p.args)
+        with compat.set_mesh(mesh):
+            lowered = jax.jit(
+                p.fn,
+                in_shardings=compat.to_shardings(mesh, p.in_shardings),
+            ).lower(*p.args)
             compiled = lowered.compile()
-        cost = compiled.cost_analysis() or {}
+        cost = compat.cost_analysis(compiled)
         out[p.name] = {
             "extra_trips": p.extra_trips,
             "collectives": collective_stats(compiled.as_text()),

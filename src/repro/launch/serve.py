@@ -9,6 +9,8 @@ import argparse
 import time
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 
 from repro.configs import get_config
@@ -36,10 +38,12 @@ def main():
     bundle = build_serve_step(cfg, mesh, shape)
     model = bundle.model
 
-    with jax.set_mesh(mesh):
-        step_fn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
-                          out_shardings=bundle.out_shardings,
-                          donate_argnums=bundle.donate_argnums)
+    with compat.set_mesh(mesh):
+        step_fn = jax.jit(
+            bundle.fn,
+            in_shardings=compat.to_shardings(mesh, bundle.in_shardings),
+            out_shardings=compat.to_shardings(mesh, bundle.out_shardings),
+            donate_argnums=bundle.donate_argnums)
         params = model.init(jax.random.PRNGKey(0))
         if cfg.is_encoder_decoder:
             frames = jax.random.normal(

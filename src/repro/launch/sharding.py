@@ -24,6 +24,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.models.config import ModelConfig
 
 # Ordered mesh-axis candidates per logical axis.
@@ -68,7 +69,7 @@ def param_pspecs(model, mesh, rules: Optional[Dict] = None):
     """Walk the model's template → pytree of PartitionSpecs."""
     abstract = model.abstract()
     logical = model.logical_axes()
-    return jax.tree.map(
+    return compat.tree_map(
         lambda a, ax: pspec_for(a.shape, ax, mesh, rules),
         abstract, logical,
         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
@@ -104,8 +105,8 @@ def leading_batch_specs(tree_abstract, mesh, batch_size: int):
     def spec(a):
         rest = (None,) * (len(a.shape) - 1)
         return P(*(tuple(bp) + rest)) if bp != P(None) else P()
-    return jax.tree.map(spec, tree_abstract,
-                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return compat.tree_map(spec, tree_abstract,
+                           is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import optim
+from repro import compat, optim
 from repro.launch import sharding as shd
 from repro.launch.mesh import batch_axes
 from repro.models.config import ModelConfig
@@ -218,7 +218,7 @@ def build_svm_round_step(svm_cfg, mesh) -> StepBundle:
     body = make_sharded_round(mr_cfg, axes, ndev, per)
     row_spec = P(axes if len(axes) > 1 else axes[0])
     rep = SVBuffer(x=P(), y=P(), alpha=P(), ids=P(), mask=P())
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body, mesh=mesh,
         in_specs=(row_spec, row_spec, row_spec, rep),
         out_specs=(rep, P(), P(), P()),

@@ -14,6 +14,8 @@ import argparse
 import time
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
@@ -49,10 +51,12 @@ def main():
     bundle = build_train_step(cfg, mesh, shape, remat=False)
     model = bundle.model
 
-    with jax.set_mesh(mesh):
-        step_fn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
-                          out_shardings=bundle.out_shardings,
-                          donate_argnums=bundle.donate_argnums)
+    with compat.set_mesh(mesh):
+        step_fn = jax.jit(
+            bundle.fn,
+            in_shardings=compat.to_shardings(mesh, bundle.in_shardings),
+            out_shardings=compat.to_shardings(mesh, bundle.out_shardings),
+            donate_argnums=bundle.donate_argnums)
         params = model.init(jax.random.PRNGKey(0))
         opt_state = optim.init(params)
         dcfg = DataConfig(batch_size=args.batch, seq_len=args.seq)

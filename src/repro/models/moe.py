@@ -15,6 +15,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models.config import ModelConfig
 from repro.models.layers import PSpec
 
@@ -215,7 +216,7 @@ def apply_moe_sharded(p, x: jax.Array, cfg: ModelConfig, mesh,
 
     if baxes:
         x = jax.lax.with_sharding_constraint(x, P(bspec, None, None))
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec, None, None), router_in, w_in, w_in, wd_in),
         out_specs=(P(bspec, None, None), P()),

@@ -8,8 +8,9 @@ import textwrap
 
 import pytest
 
-ENV = {"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
-       "HOME": os.environ.get("HOME", "/root")}
+from conftest import subprocess_env
+
+ENV = subprocess_env()
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _MOE_SCRIPT = textwrap.dedent("""
@@ -18,11 +19,12 @@ _MOE_SCRIPT = textwrap.dedent("""
     import dataclasses
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
+    from repro import compat
     from repro.models.config import ModelConfig
     from repro.models import moe as moe_lib
     from repro.models.layers import template_init
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
 
     def check(E, K, label):
         cfg = ModelConfig(name="t", family="moe", num_layers=1, d_model=64,
@@ -35,7 +37,7 @@ _MOE_SCRIPT = textwrap.dedent("""
 
         y_ref, aux_ref = jax.jit(
             lambda p, x: moe_lib.apply_moe(p, x, cfg))(p, x)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             y_sh, aux_sh = jax.jit(
                 lambda p, x: moe_lib.apply_moe_sharded(
                     p, x, cfg, mesh, ("data",)))(p, x)
@@ -54,12 +56,13 @@ _SP_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
+    from repro import compat
     from repro.configs import get_config
     from repro.models.config import smoke_variant
     from repro.models.transformer import build_model
     import dataclasses
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     cfg = smoke_variant(get_config("tinyllama-1.1b"))
     tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
                                 cfg.vocab_size)
@@ -69,7 +72,7 @@ _SP_SCRIPT = textwrap.dedent("""
     logits_ref, _ = jax.jit(plain.forward)(params, tokens)
 
     sp = build_model(cfg, mesh=mesh)         # seq-parallel constraints on
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         logits_sp, _ = jax.jit(sp.forward)(params, tokens)
     np.testing.assert_allclose(np.asarray(logits_ref),
                                np.asarray(logits_sp), rtol=2e-4, atol=2e-4)

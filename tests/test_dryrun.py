@@ -6,8 +6,9 @@ import sys
 
 import pytest
 
-ENV = {"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
-       "HOME": os.environ.get("HOME", "/root")}
+from conftest import subprocess_env
+
+ENV = subprocess_env()
 
 
 def _run(args, timeout=560):

@@ -52,10 +52,9 @@ def test_eq8_stopping_rule():
     assert model.rounds == 2
 
 
-def test_sv_buffer_is_capacity_bounded_and_masked():
+def test_sv_buffer_is_capacity_bounded_and_masked(fast_mr_cfg):
     X, y = _data(n=320)
-    cfg = MRSVMConfig(sv_capacity=32, max_rounds=3,
-                      svm=SVMConfig(C=1.0, max_epochs=20))
+    cfg = fast_mr_cfg
     model = fit_mapreduce(X, y, num_partitions=4, cfg=cfg)
     assert model.sv.x.shape == (32, X.shape[1])
     assert float(jnp.sum(model.sv.mask)) <= 32
@@ -65,13 +64,12 @@ def test_sv_buffer_is_capacity_bounded_and_masked():
         assert float(jnp.max(jnp.abs(model.sv.x[dead]))) == 0.0
 
 
-def test_three_class_ovr_confusion():
+def test_three_class_ovr_confusion(fast_mr_cfg):
     rng = np.random.default_rng(1)
     y = rng.integers(-1, 2, size=360)
     X = jnp.asarray(rng.normal(0, 1, (360, 8)).astype(np.float32))
     X = X + 2.0 * jnp.asarray(y)[:, None]
-    cfg = MRSVMConfig(sv_capacity=32, max_rounds=3,
-                      svm=SVMConfig(C=1.0, max_epochs=25))
+    cfg = fast_mr_cfg
     ovr = fit_one_vs_rest(X, jnp.asarray(y), [-1, 0, 1], 4, cfg)
     pred = ovr.predict(X)
     cm = confusion_matrix(jnp.asarray(y), pred, [-1, 0, 1])
@@ -84,6 +82,7 @@ _SHARD_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
+    from repro import compat
     from repro.core import MRSVMConfig, SVMConfig
     from repro.core.mapreduce_svm import (build_sharded_round,
                                           init_sv_buffer, mapreduce_round)
@@ -94,7 +93,7 @@ _SHARD_SCRIPT = textwrap.dedent("""
     mask = jnp.ones((n,))
     cfg = MRSVMConfig(sv_capacity=64, svm=SVMConfig(C=1.0, max_epochs=20))
 
-    mesh = jax.make_mesh((8,), ("data",))
+    mesh = compat.make_mesh((8,), ("data",))
     fn = build_sharded_round(mesh, ("data",), cfg, n // 8)
     sv_s = init_sv_buffer(64, d)
     for _ in range(3):
@@ -124,10 +123,10 @@ _SHARD_SCRIPT = textwrap.dedent("""
 
 def test_sharded_matches_functional():
     """shard_map mode must reproduce the vmap mode exactly (8 devices)."""
+    from conftest import subprocess_env
     r = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT],
                        capture_output=True, text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       env=subprocess_env())
     assert "SHARDED_OK" in r.stdout, r.stdout + r.stderr
 
 
@@ -178,14 +177,13 @@ def test_mapreduce_rbf_kernel_path():
     assert acc_rbf > acc_lin + 0.15
 
 
-def test_one_vs_one_multiclass():
+def test_one_vs_one_multiclass(fast_mr_cfg):
     from repro.core import fit_one_vs_one
     rng = np.random.default_rng(3)
     y = rng.integers(-1, 2, size=240)
     X = jnp.asarray(rng.normal(0, 1, (240, 8)).astype(np.float32))
     X = X + 2.0 * jnp.asarray(y)[:, None]
-    cfg = MRSVMConfig(sv_capacity=32, max_rounds=2,
-                      svm=SVMConfig(C=1.0, max_epochs=20))
+    cfg = fast_mr_cfg
     ovo = fit_one_vs_one(X, jnp.asarray(y), [-1, 0, 1], 4, cfg)
     pred = ovo.predict(X)
     acc = float(jnp.mean(pred == jnp.asarray(y, pred.dtype)))

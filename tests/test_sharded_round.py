@@ -1,0 +1,117 @@
+"""Sharded-vs-functional MapReduce round equivalence (ISSUE 1 tentpole).
+
+The distributed mode (shard_map over the ``data`` mesh axis, via
+repro.compat) must reproduce the functional mode (vmap over a leading
+partition axis) bit-for-bit in structure: same per-reducer risks, same
+merged global SV buffer.
+
+Runs in-process when ≥8 devices exist (e.g. under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``, see
+``make test-dist``); otherwise re-executes itself in a subprocess with
+the flag set, since XLA fixes the device count at first backend init.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[1]
+NDEV = 8
+
+
+def _problem(n=512, d=12):
+    X = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    w = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    y = jnp.sign(X @ w)
+    return X, y, jnp.ones((n,))
+
+
+def _functional_reference(X, y, mask, cfg, rounds):
+    from repro.core.mapreduce_svm import init_sv_buffer, mapreduce_round
+    n, d = X.shape
+    per = n // NDEV
+    Xp = X.reshape(NDEV, per, d)
+    yp = y.reshape(NDEV, per)
+    mp = mask.reshape(NDEV, per)
+    sv = init_sv_buffer(cfg.sv_capacity, d)
+    risks = None
+    for _ in range(rounds):
+        out = mapreduce_round(Xp, yp, mp, sv, cfg)
+        sv, risks = out.sv, out.risks
+    return sv, risks
+
+
+def _assert_round_equivalence(mesh_shape, mesh_axes, rounds=3):
+    from repro import compat
+    from repro.core import MRSVMConfig, SVMConfig
+    from repro.core.mapreduce_svm import build_sharded_round, init_sv_buffer
+
+    X, y, mask = _problem()
+    n, d = X.shape
+    cfg = MRSVMConfig(sv_capacity=64, svm=SVMConfig(C=1.0, max_epochs=15))
+
+    mesh = compat.make_mesh(mesh_shape, mesh_axes)
+    data_axes = tuple(a for a in mesh_axes if a != "model")
+    fn = build_sharded_round(mesh, data_axes, cfg, n // NDEV)
+    sv_s = init_sv_buffer(cfg.sv_capacity, d)
+    risks_s = None
+    for _ in range(rounds):
+        sv_s, risks_s, w_s, b_s = fn(X, y, mask, sv_s)
+
+    sv_f, risks_f = _functional_reference(X, y, mask, cfg, rounds)
+
+    # same per-reducer risks (device order == partition order: rows are
+    # sharded contiguously over the flattened data axes)
+    np.testing.assert_allclose(np.asarray(risks_s), np.asarray(risks_f),
+                               rtol=1e-4, atol=1e-5)
+    # same merged SV buffer: ids, live count, evidence, feature rows
+    np.testing.assert_array_equal(np.asarray(sv_s.ids), np.asarray(sv_f.ids))
+    np.testing.assert_array_equal(np.asarray(sv_s.mask), np.asarray(sv_f.mask))
+    np.testing.assert_allclose(np.asarray(sv_s.alpha), np.asarray(sv_f.alpha),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sv_s.x), np.asarray(sv_f.x),
+                               rtol=1e-5, atol=1e-6)
+    # the selected hypothesis is one of the reducers', replicated
+    assert np.asarray(w_s).shape == (d,)
+    assert np.asarray(b_s).shape == ()
+
+
+def _in_subprocess(check_name: str):
+    """Re-run one check with 8 faked host devices (own process, since
+    the device count is locked at first backend init)."""
+    code = (f"import sys; sys.path.insert(0, {str(REPO / 'tests')!r}); "
+            f"import test_sharded_round as t; t.{check_name}(); "
+            "print('SHARDED_ROUND_OK')")
+    from conftest import subprocess_env
+    env = subprocess_env(
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        PYTHONPATH=str(REPO / "src"))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600, env=env)
+    assert "SHARDED_ROUND_OK" in r.stdout, r.stdout + r.stderr
+
+
+def _check_1d():
+    _assert_round_equivalence((NDEV,), ("data",))
+
+
+def _check_pod_2d():
+    # multi-axis data sharding: exercises compat.axis_index over a tuple
+    _assert_round_equivalence((2, NDEV // 2), ("pod", "data"))
+
+
+def test_sharded_round_matches_functional():
+    if len(jax.devices()) >= NDEV:
+        _check_1d()
+    else:
+        _in_subprocess("_check_1d")
+
+
+def test_sharded_round_matches_functional_pod_mesh():
+    if len(jax.devices()) >= NDEV:
+        _check_pod_2d()
+    else:
+        _in_subprocess("_check_pod_2d")

@@ -2,16 +2,17 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import get_config
 from repro.launch.rules import RULE_SETS, get_rules
 from repro.launch.sharding import (batch_pspec, kv_repeat_for, param_pspecs,
                                    pspec_for)
 from repro.models.transformer import build_model
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-POD_MESH = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = compat.make_abstract_mesh((16, 16), ("data", "model"))
+POD_MESH = compat.make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_vocab_parallel_embedding():
