@@ -22,6 +22,7 @@ def main() -> None:
     from benchmarks.scaling import scaling_partitions
     from benchmarks.kernel_micro import kernel_micro
     from benchmarks.roofline import roofline_rows, summarize
+    from benchmarks.sweep import sweep_bench
 
     benches = [
         ("table5", table5_dataset),
@@ -33,6 +34,7 @@ def main() -> None:
         ("kernels", kernel_micro),
         ("roofline", roofline_rows),
         ("roofline_summary", summarize),
+        ("sweep", sweep_bench),
     ]
     print("name,us_per_call,derived")
     failures = 0

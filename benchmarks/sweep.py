@@ -1,0 +1,171 @@
+"""Batched hyper-parameter sweep vs a sequential per-config loop.
+
+The sweep subsystem's claim (ISSUE 2 tentpole): S (C, kernel) configs
+per round under one outer vmap — one trace, one jit, one device pass —
+beats S sequential ``fit_mapreduce`` calls, which pay S traces, S
+compiles and S×rounds dispatches. This is the paper's amortize-across-
+the-cluster argument applied across *jobs* (He et al. 2019).
+
+Two comparisons:
+
+* ``sweep_functional`` — any device count; batched
+  :func:`fit_mapreduce_sweep` vs a loop of per-config
+  :func:`fit_mapreduce` with identical ``SolverParams`` slices.
+* ``sweep_sharded`` — needs ≥8 devices (standalone run forces 8 host
+  devices); batched :func:`build_sharded_sweep_round` vs a per-config
+  loop of :func:`build_sharded_round`.
+
+Standalone:
+
+    PYTHONPATH=src python -m benchmarks.sweep      # forces 8 devices
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+NUM_CONFIGS = 8
+
+
+def _problem(n, d, seed=0):
+    import jax
+    import jax.numpy as jnp
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    X = jax.random.normal(k1, (n, d))
+    w = jax.random.normal(k2, (d,))
+    y = jnp.sign(X @ w + 0.05)
+    return X, y
+
+
+def _cfg_and_params(S):
+    import numpy as np
+    from repro.core import MRSVMConfig, SVMConfig, sweep_grid
+    cfg = MRSVMConfig(sv_capacity=64, gamma=0.0, max_rounds=3,
+                      svm=SVMConfig(C=1.0, max_epochs=10))
+    params = sweep_grid(cfg.svm, C=np.logspace(-2, 1, S).astype(np.float32))
+    return cfg, params
+
+
+def sweep_functional(n: int = 2048, d: int = 64, S: int = NUM_CONFIGS,
+                     L: int = 8) -> List[str]:
+    import jax
+    import numpy as np
+    from repro import compat
+    from repro.core import fit_mapreduce, fit_mapreduce_sweep
+
+    X, y = _problem(n, d)
+    cfg, params = _cfg_and_params(S)
+    out = []
+
+    t0 = time.time()
+    res = fit_mapreduce_sweep(X, y, L, cfg, params)
+    jax.block_until_ready(res.risks)
+    t_batched = time.time() - t0
+
+    t0 = time.time()
+    seq_risks = []
+    for s in range(S):
+        p_s = compat.tree_map(lambda a: a[s], params)
+        m = fit_mapreduce(X, y, L, cfg, params=p_s)
+        seq_risks.append(float(m.risk))
+    t_seq = time.time() - t0
+
+    np.testing.assert_allclose(np.asarray(res.risks), np.asarray(seq_risks),
+                               rtol=1e-4, atol=1e-5)
+    # ISSUE 2 acceptance: batched must beat the sequential loop.
+    assert t_batched < t_seq, (
+        f"batched sweep regressed: {t_batched:.2f}s vs sequential "
+        f"{t_seq:.2f}s")
+    out.append(f"sweep_functional_batched,{t_batched * 1e6:.0f},"
+               f"S={S} one_jit_S_models")
+    out.append(f"sweep_functional_sequential,{t_seq * 1e6:.0f},"
+               f"S={S} S_jits")
+    out.append(f"sweep_functional_speedup,0,"
+               f"x={t_seq / max(t_batched, 1e-9):.2f} "
+               f"batched_faster={t_batched < t_seq}")
+    return out
+
+
+def sweep_sharded(n: int = 2048, d: int = 64,
+                  S: int = NUM_CONFIGS) -> List[str]:
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro import compat
+    from repro.core import (build_sharded_sweep_round, init_sv_buffer,
+                            run_sharded_sweep)
+    from repro.core.mapreduce_svm import build_sharded_round
+
+    ndev = len(jax.devices())
+    if ndev < 8:
+        return [f"sweep_sharded,0,SKIP:needs_8_devices_have_{ndev}"
+                " (run `python -m benchmarks.sweep` standalone)"]
+
+    X, y = _problem(n, d)
+    cfg, params = _cfg_and_params(S)
+    per = n // ndev
+    mesh = compat.make_mesh((ndev,), ("data",))
+    mask = jnp.ones((n,))
+    out = []
+
+    t0 = time.time()
+    fn = build_sharded_sweep_round(mesh, ("data",), cfg, per)
+    res = run_sharded_sweep(fn, X, y, mask, cfg, params)
+    jax.block_until_ready(res.risks)
+    t_batched = time.time() - t0
+
+    # sequential workflow: one shard_map program per config (its own
+    # trace + compile), rounds driven per config.
+    t0 = time.time()
+    seq_risks = []
+    for s in range(S):
+        cfg_s = dc.replace(
+            cfg, svm=dc.replace(cfg.svm, C=float(params.C[s]),
+                                tol=float(params.tol[s])))
+        fn_s = build_sharded_round(mesh, ("data",), cfg_s, per)
+        sv = init_sv_buffer(cfg.sv_capacity, d)
+        best = np.inf
+        prev = np.inf
+        for t in range(cfg.max_rounds):
+            sv, risks, w, b = fn_s(X, y, mask, sv)
+            r = float(jnp.min(risks))
+            best = min(best, r)
+            if t > 0 and abs(prev - r) <= cfg.gamma:
+                break
+            prev = r
+        seq_risks.append(best)
+    t_seq = time.time() - t0
+
+    np.testing.assert_allclose(np.asarray(res.risks), np.asarray(seq_risks),
+                               rtol=1e-4, atol=1e-5)
+    assert t_batched < t_seq, (
+        f"batched sharded sweep regressed: {t_batched:.2f}s vs "
+        f"sequential {t_seq:.2f}s")
+    out.append(f"sweep_sharded_batched,{t_batched * 1e6:.0f},"
+               f"S={S} ndev={ndev} one_jit_S_models")
+    out.append(f"sweep_sharded_sequential,{t_seq * 1e6:.0f},"
+               f"S={S} ndev={ndev} S_jits")
+    out.append(f"sweep_sharded_speedup,0,"
+               f"x={t_seq / max(t_batched, 1e-9):.2f} "
+               f"batched_faster={t_batched < t_seq}")
+    return out
+
+
+def sweep_bench() -> List[str]:
+    return sweep_functional() + sweep_sharded()
+
+
+def main():
+    print("name,us_per_call,derived")
+    for line in sweep_bench():
+        print(line, flush=True)
+
+
+if __name__ == "__main__":
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    main()

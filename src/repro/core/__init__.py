@@ -1,7 +1,8 @@
 """Core library: the paper's MapReduce SVM contribution in JAX."""
 from repro.core.kernel_fns import KernelConfig, apply_kernel
-from repro.core.svm import (BinarySVM, SVMConfig, decision_kernel,
-                            decision_linear, fit_binary, support_mask)
+from repro.core.svm import (BinarySVM, SolverParams, SVMConfig,
+                            decision_kernel, decision_linear, fit_binary,
+                            support_mask)
 from repro.core.mapreduce_svm import (MapReduceSVM, MRSVMConfig, RoundResult,
                                       SVBuffer, decision_values,
                                       fit_mapreduce, init_sv_buffer,
@@ -11,9 +12,14 @@ from repro.core.multiclass import (OneVsOneSVM, OneVsRestSVM,
                                    confusion_matrix, fit_one_vs_one,
                                    fit_one_vs_rest)
 from repro.core.risk import converged, empirical_risk, hinge_loss, zero_one_loss
+from repro.core.sweep import (ShardedSweep, SweepOneVsRest, SweepResult,
+                              build_sharded_sweep_round, fit_mapreduce_sweep,
+                              fit_one_vs_rest_sweep, make_sharded_sweep_round,
+                              predict_sweep, run_sharded_sweep, stack_params,
+                              sweep_decision_values, sweep_grid)
 
 __all__ = [
-    "KernelConfig", "apply_kernel", "BinarySVM", "SVMConfig",
+    "KernelConfig", "apply_kernel", "BinarySVM", "SolverParams", "SVMConfig",
     "decision_kernel", "decision_linear", "fit_binary", "support_mask",
     "MapReduceSVM", "MRSVMConfig", "RoundResult", "SVBuffer",
     "decision_values", "fit_mapreduce", "init_sv_buffer",
@@ -22,4 +28,9 @@ __all__ = [
     "OneVsOneSVM", "OneVsRestSVM", "confusion_matrix", "fit_one_vs_one",
     "fit_one_vs_rest", "converged", "empirical_risk", "hinge_loss",
     "zero_one_loss",
+    "ShardedSweep", "SweepOneVsRest", "SweepResult",
+    "build_sharded_sweep_round", "fit_mapreduce_sweep",
+    "fit_one_vs_rest_sweep", "make_sharded_sweep_round", "predict_sweep",
+    "run_sharded_sweep", "stack_params", "sweep_decision_values",
+    "sweep_grid",
 ]

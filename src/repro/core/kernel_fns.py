@@ -47,11 +47,20 @@ def poly_kernel(X: jax.Array, Z: jax.Array, gamma: float, degree: int,
     return (gamma * (X @ Z.T) + coef0) ** degree
 
 
-def apply_kernel(X: jax.Array, Z: jax.Array, *, cfg: KernelConfig) -> jax.Array:
+def apply_kernel(X: jax.Array, Z: jax.Array, *, cfg: KernelConfig,
+                 gamma=None, coef0=None) -> jax.Array:
+    """k(X, Z) under ``cfg``. ``gamma``/``coef0`` may be traced jnp
+    scalars overriding the static dataclass values — the hook that lets
+    the sweep subsystem vmap over kernel scales while the kernel *name*
+    (a program choice) stays static. ``degree`` is deliberately not
+    overridable: a traced exponent lowers to float ``pow`` with a
+    NaN-producing negative-base branch."""
+    g = cfg.gamma if gamma is None else gamma
+    c0 = cfg.coef0 if coef0 is None else coef0
     if cfg.name == "linear":
         return linear_kernel(X, Z)
     if cfg.name == "rbf":
-        return rbf_kernel(X, Z, cfg.gamma)
+        return rbf_kernel(X, Z, g)
     if cfg.name == "poly":
-        return poly_kernel(X, Z, cfg.gamma, cfg.degree, cfg.coef0)
+        return poly_kernel(X, Z, g, cfg.degree, c0)
     raise ValueError(f"unknown kernel {cfg.name!r}")

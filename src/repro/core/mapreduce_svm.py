@@ -37,8 +37,8 @@ import numpy as np
 
 from repro import compat
 from repro.core import risk as risk_lib
-from repro.core.svm import (BinarySVM, SVMConfig, decision_kernel,
-                            decision_linear, fit_binary)
+from repro.core.svm import (BinarySVM, SolverParams, SVMConfig,
+                            decision_kernel, decision_linear, fit_binary)
 
 
 class SVBuffer(NamedTuple):
@@ -92,21 +92,28 @@ def _augment(Xl, yl, ml, sv: SVBuffer):
 # ---------------------------------------------------------------------------
 
 def mapreduce_round(Xp: jax.Array, yp: jax.Array, maskp: jax.Array,
-                    sv: SVBuffer, cfg: MRSVMConfig) -> RoundResult:
+                    sv: SVBuffer, cfg: MRSVMConfig,
+                    params: Optional[SolverParams] = None) -> RoundResult:
     """One full MapReduce round over stacked partitions.
 
     Xp: (L, per, d); rows are ordered so global id of (l, i) = l*per + i.
+    ``params`` optionally overrides the value-like solver hyper-params
+    with a traced pytree — the hook the sweep subsystem vmaps over.
     """
     L, per, d = Xp.shape
+    p = cfg.svm.params() if params is None else params
     cap = sv.x.shape[0]
     if cap % L != 0:
         raise ValueError(f"sv_capacity {cap} must divide by partitions {L}")
     k = cap // L
 
     # --- map + reduce ------------------------------------------------------
+    # NB: forward the *original* ``params`` (possibly None), not the
+    # lifted ``p`` — fit_binary distinguishes "no override" (static
+    # defaults, Pallas Gram allowed) from a traced sweep override.
     def reducer(Xl, yl, ml):
         Xa, ya, ma = _augment(Xl, yl, ml, sv)
-        return fit_binary(Xa, ya, ma, cfg.svm)
+        return fit_binary(Xa, ya, ma, cfg.svm, params=params)
 
     res: BinarySVM = jax.vmap(reducer)(Xp, yp, maskp)
     alpha = res.alpha                                # (L, per + cap)
@@ -125,7 +132,7 @@ def mapreduce_round(Xp: jax.Array, yp: jax.Array, maskp: jax.Array,
     sel = lambda A: jnp.take_along_axis(A, topi, axis=1)
     new_x = jnp.take_along_axis(Xp, topi[..., None], axis=1).reshape(cap, d)
     new_y = sel(yp).reshape(cap)
-    live = (topv > cfg.svm.sv_threshold).astype(Xp.dtype)
+    live = (topv > p.sv_threshold).astype(Xp.dtype)
     base_ids = (jnp.arange(L, dtype=jnp.int32) * per)[:, None] + topi.astype(jnp.int32)
     new_sv = SVBuffer(
         x=new_x * live.reshape(cap, 1),
@@ -147,7 +154,8 @@ def mapreduce_round(Xp: jax.Array, yp: jax.Array, maskp: jax.Array,
     else:
         def risk_of(Xa, ya, ma, a, b):
             coef = a * ya * ma
-            s = decision_kernel(Xa, coef, b, Xflat, cfg.svm.kernel)
+            s = decision_kernel(Xa, coef, b, Xflat, cfg.svm.kernel,
+                                gamma=p.gamma, coef0=p.coef0)
             return risk_lib.empirical_risk(s, yflat, mflat, cfg.risk_loss)
         Xa, ya, ma = jax.vmap(lambda X, y, m: _augment(X, y, m, sv))(Xp, yp, maskp)
         risks = jax.vmap(risk_of)(Xa, ya, ma, alpha, res.b)
@@ -169,11 +177,13 @@ class MapReduceSVM(NamedTuple):
 def fit_mapreduce(X: jax.Array, y: jax.Array, num_partitions: int,
                   cfg: MRSVMConfig,
                   mask: Optional[jax.Array] = None,
+                  params: Optional[SolverParams] = None,
                   verbose: bool = False) -> MapReduceSVM:
     """Iterative MapReduce SVM driver (functional mode).
 
     Pads ``X`` to a multiple of ``num_partitions`` and loops rounds on
-    the host until eq. 8 fires or ``max_rounds`` is hit.
+    the host until eq. 8 fires or ``max_rounds`` is hit. ``params``
+    optionally overrides the value-like solver hyper-params (traced).
     """
     n, d = X.shape
     L = num_partitions
@@ -185,7 +195,8 @@ def fit_mapreduce(X: jax.Array, y: jax.Array, num_partitions: int,
     maskp = jnp.pad(base_mask, (0, pad)).reshape(L, per)
 
     sv = init_sv_buffer(cfg.sv_capacity, d, X.dtype)
-    round_fn = jax.jit(lambda Xp, yp, mp, sv: mapreduce_round(Xp, yp, mp, sv, cfg))
+    round_fn = jax.jit(lambda Xp, yp, mp, sv: mapreduce_round(
+        Xp, yp, mp, sv, cfg, params=params))
 
     best = (np.inf, None, None)
     prev_risk = np.inf
@@ -210,29 +221,34 @@ def fit_mapreduce(X: jax.Array, y: jax.Array, num_partitions: int,
         prev_risk = r_star
 
     # Final consolidated model: retrain on SV_global alone (cascade-style).
-    final = fit_binary(sv.x, sv.y, sv.mask, cfg.svm)
+    final = fit_binary(sv.x, sv.y, sv.mask, cfg.svm, params=params)
     return MapReduceSVM(w=best[1], b=best[2], sv=sv, final=final,
                         risk=jnp.asarray(best[0]), rounds=rounds_done,
                         history=tuple(history))
 
 
 def predict(model: MapReduceSVM, X: jax.Array, cfg: MRSVMConfig,
-            use_final: bool = True) -> jax.Array:
-    """±1 predictions from the converged model."""
+            use_final: bool = True,
+            params: Optional[SolverParams] = None) -> jax.Array:
+    """±1 predictions from the converged model. Pass the same ``params``
+    the model was trained with (if any) so kernel scales match."""
     if cfg.svm.kernel.name == "linear" and not cfg.svm.use_gram:
         w, b = (model.final.w, model.final.b) if use_final else (model.w, model.b)
         return jnp.where(decision_linear(w, b, X) >= 0, 1.0, -1.0)
-    coef = model.final.alpha * model.sv.y * model.sv.mask
-    s = decision_kernel(model.sv.x, coef, model.final.b, X, cfg.svm.kernel)
+    s = decision_values(model, X, cfg, params=params)
     return jnp.where(s >= 0, 1.0, -1.0)
 
 
 def decision_values(model: MapReduceSVM, X: jax.Array,
-                    cfg: MRSVMConfig) -> jax.Array:
+                    cfg: MRSVMConfig,
+                    params: Optional[SolverParams] = None) -> jax.Array:
     if cfg.svm.kernel.name == "linear" and not cfg.svm.use_gram:
         return decision_linear(model.final.w, model.final.b, X)
     coef = model.final.alpha * model.sv.y * model.sv.mask
-    return decision_kernel(model.sv.x, coef, model.final.b, X, cfg.svm.kernel)
+    gamma = None if params is None else params.gamma
+    coef0 = None if params is None else params.coef0
+    return decision_kernel(model.sv.x, coef, model.final.b, X,
+                           cfg.svm.kernel, gamma=gamma, coef0=coef0)
 
 
 def update_mapreduce(model: MapReduceSVM, X_new: jax.Array,
@@ -272,6 +288,11 @@ def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
     the ICI analogue of the Hadoop shuffle. Hypothesis selection
     (eq. 7) all-gathers the per-device (w, b) and psums partial risks so
     every device evaluates every hypothesis on the full distributed set.
+
+    The body takes an optional trailing ``params`` (a replicated traced
+    :class:`~repro.core.svm.SolverParams`); the sweep subsystem vmaps
+    the body over a leading config axis of (sv, params) — see
+    :func:`repro.core.sweep.build_sharded_sweep_round`.
     """
     axes = tuple(axis_names)
     cap = cfg.sv_capacity
@@ -280,11 +301,13 @@ def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
     k = cap // num_devices
     per = rows_per_device
 
-    def round_body(Xl, yl, ml, sv: SVBuffer):
+    def round_body(Xl, yl, ml, sv: SVBuffer,
+                   params: Optional[SolverParams] = None):
+        p = cfg.svm.params() if params is None else params
         idx = compat.axis_index(axes)           # flattened device index
-        # map + reduce
+        # map + reduce (original ``params``, not ``p`` — see mapreduce_round)
         Xa, ya, ma = _augment(Xl, yl, ml, sv)
-        res = fit_binary(Xa, ya, ma, cfg.svm, vma_axes=axes)
+        res = fit_binary(Xa, ya, ma, cfg.svm, params=params, vma_axes=axes)
         home_alpha = res.alpha[:per]
         copy_alpha = res.alpha[per:] * sv.mask
 
@@ -299,7 +322,7 @@ def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
 
         # merge: balanced top-k per device, all-gathered (the shuffle)
         topv, topi = jax.lax.top_k(home_alpha, k)
-        live = (topv > cfg.svm.sv_threshold).astype(Xl.dtype)
+        live = (topv > p.sv_threshold).astype(Xl.dtype)
         cand_ids = (idx * per + topi).astype(jnp.int32)
         cand = SVBuffer(
             x=Xl[topi] * live[:, None],

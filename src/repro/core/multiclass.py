@@ -87,8 +87,18 @@ def fit_one_vs_one(X: jax.Array, y: jax.Array, classes: Sequence[int],
 
 
 def confusion_matrix(y_true: jax.Array, y_pred: jax.Array,
-                     classes: Sequence[int]) -> np.ndarray:
-    """Row-normalized percentage confusion matrix like Tablo 6 / Tablo 8."""
+                     classes: Sequence[int],
+                     normalize: str = "all") -> np.ndarray:
+    """Percentage confusion matrix like Tablo 6 / Tablo 8.
+
+    ``normalize="all"`` (default) divides by the global count so the
+    whole matrix sums to 100 — the convention the paper's tables use.
+    ``normalize="true"`` row-normalizes: each true-class row sums to
+    100 (per-class recall breakdown).
+    """
+    if normalize not in ("all", "true"):
+        raise ValueError(f"normalize must be 'all' or 'true', "
+                         f"got {normalize!r}")
     yt = np.asarray(y_true)
     yp = np.asarray(y_pred)
     k = len(classes)
@@ -96,5 +106,8 @@ def confusion_matrix(y_true: jax.Array, y_pred: jax.Array,
     for a, ca in enumerate(classes):
         for b, cb in enumerate(classes):
             cm[a, b] = np.sum((yt == ca) & (yp == cb))
+    if normalize == "true":
+        row = np.maximum(cm.sum(axis=1, keepdims=True), 1.0)
+        return 100.0 * cm / row
     total = cm.sum()
     return 100.0 * cm / max(total, 1.0)   # paper reports global percentages

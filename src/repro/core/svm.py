@@ -45,15 +45,50 @@ def _pvary(tree, axes):
     return compat.pvary(tree, axes)
 
 
+class SolverParams(NamedTuple):
+    """Traced (vmappable) solver hyper-parameters.
+
+    The static/traced split (DESIGN.md §8): anything that changes the
+    *program* — shapes, loop bounds, kernel family, execution path —
+    stays in the frozen :class:`SVMConfig` shell; anything that only
+    changes *values* lives here as a jnp scalar, so a batch of S
+    configs is just a ``SolverParams`` with a leading (S,) axis fed
+    through ``vmap`` (the sweep subsystem in :mod:`repro.core.sweep`).
+    ``KernelConfig.degree`` stays static: a traced integer exponent
+    would lower to a float ``pow`` whose negative-base branch NaNs.
+    """
+    C: jax.Array             # () box constraint (eq. 2)
+    tol: jax.Array           # () max projected-gradient violation to stop
+    sv_threshold: jax.Array  # () α above this counts as a support vector
+    gamma: jax.Array         # () rbf / poly scale
+    coef0: jax.Array         # () poly offset
+
+
 @dataclasses.dataclass(frozen=True)
 class SVMConfig:
-    """Reducer-level solver configuration (paper eq. 2 hyper-params)."""
+    """Reducer-level solver configuration (paper eq. 2 hyper-params).
+
+    Static shell: fields here are compile-time constants. The float
+    hyper-parameters double as *defaults* for :meth:`params`, which
+    lifts them into a traced :class:`SolverParams` pytree.
+    """
     C: float = 1.0
     max_epochs: int = 30
     tol: float = 1e-3            # max projected-gradient violation to stop
     kernel: KernelConfig = KernelConfig()
     sv_threshold: float = 1e-6   # α above this counts as a support vector
     use_gram: bool = False       # force the Gram path even for linear
+    gram_impl: str = "xla"       # 'xla' | 'pallas' (repro.kernels.gram)
+
+    def params(self, dtype=jnp.float32) -> SolverParams:
+        """Lift the value-like hyper-params into a traced pytree."""
+        return SolverParams(
+            C=jnp.asarray(self.C, dtype),
+            tol=jnp.asarray(self.tol, dtype),
+            sv_threshold=jnp.asarray(self.sv_threshold, dtype),
+            gamma=jnp.asarray(self.kernel.gamma, dtype),
+            coef0=jnp.asarray(self.kernel.coef0, dtype),
+        )
 
 
 class BinarySVM(NamedTuple):
@@ -77,8 +112,10 @@ def support_mask(alpha: jax.Array, threshold: float = 1e-6) -> jax.Array:
 def fit_binary_linear(X: jax.Array, y: jax.Array,
                       mask: Optional[jax.Array],
                       cfg: SVMConfig,
+                      params: Optional[SolverParams] = None,
                       vma_axes: tuple = ()) -> BinarySVM:
     n, d = X.shape
+    p = cfg.params() if params is None else params
     # Feature rows may be bf16 (halves the dominant HBM stream, §Perf
     # iteration 5); the solver state (w, α, b) stays f32.
     ct = jnp.promote_types(X.dtype, jnp.float32)
@@ -90,7 +127,8 @@ def fit_binary_linear(X: jax.Array, y: jax.Array,
     qdiag = jnp.einsum("nd,nd->n", X, X,
                        preferred_element_type=ct) + 1.0
     qdiag = jnp.where(m > 0, qdiag, 1.0)
-    C = jnp.asarray(cfg.C, ct)
+    C = p.C.astype(ct)
+    tol = p.tol.astype(ct)
 
     def body_i(i, carry):
         alpha, w, b, viol = carry
@@ -120,7 +158,7 @@ def fit_binary_linear(X: jax.Array, y: jax.Array,
     def cond(carry):
         _, _, _, viol, t = carry
         return jnp.logical_and(t < cfg.max_epochs,
-                               jnp.logical_or(t == 0, viol > cfg.tol))
+                               jnp.logical_or(t == 0, viol > tol))
 
     init = _pvary((jnp.zeros((n,), ct), jnp.zeros((d,), ct),
                    jnp.asarray(0.0, ct), jnp.asarray(jnp.inf, ct),
@@ -136,17 +174,44 @@ def fit_binary_linear(X: jax.Array, y: jax.Array,
 GramFn = Callable[[jax.Array, jax.Array], jax.Array]
 
 
+def _pallas_gram_fn(cfg: SVMConfig) -> GramFn:
+    """Route the reducer's Gram build through the Pallas TPU kernel
+    (:mod:`repro.kernels.gram`). The Pallas call bakes the kernel
+    transform in at trace time, so this path uses the *static*
+    ``cfg.kernel`` values — sweeps over traced gamma stay on XLA."""
+    from repro.kernels import gram as gram_lib
+    kc = cfg.kernel
+
+    def fn(X, Z):
+        K = gram_lib.gram(X, Z, kind=kc.name, gamma=kc.gamma,
+                          coef0=kc.coef0, degree=kc.degree)
+        return K.astype(X.dtype)
+    return fn
+
+
 def fit_binary_kernel(X: jax.Array, y: jax.Array,
                       mask: Optional[jax.Array],
                       cfg: SVMConfig,
                       gram_fn: Optional[GramFn] = None,
+                      params: Optional[SolverParams] = None,
                       vma_axes: tuple = ()) -> BinarySVM:
     n, d = X.shape
+    p = cfg.params() if params is None else params
     y = y.astype(X.dtype)
     m = jnp.ones((n,), X.dtype) if mask is None else mask.astype(X.dtype)
 
+    if gram_fn is None and cfg.gram_impl == "pallas":
+        if params is not None and cfg.kernel.name != "linear":
+            # The Pallas Gram bakes gamma/coef0 in at trace time; training
+            # on a static-γ Gram while scoring with a traced override
+            # would silently produce models that were never trained.
+            raise ValueError(
+                "gram_impl='pallas' uses static kernel params; traced "
+                "SolverParams sweeps over rbf/poly kernels must use the "
+                "XLA Gram path (gram_impl='xla')")
+        gram_fn = _pallas_gram_fn(cfg)
     if gram_fn is None:
-        K = apply_kernel(X, X, cfg=cfg.kernel)
+        K = apply_kernel(X, X, cfg=cfg.kernel, gamma=p.gamma, coef0=p.coef0)
     else:
         K = gram_fn(X, X)
     K = K + 1.0                                   # regularized bias augment
@@ -154,7 +219,8 @@ def fit_binary_kernel(X: jax.Array, y: jax.Array,
     # Mask padded rows/cols out of Q so their updates are inert.
     Q = Q * (m[:, None] * m[None, :])
     qdiag = jnp.where(m > 0, jnp.diagonal(Q), 1.0)
-    C = jnp.asarray(cfg.C, X.dtype)
+    C = p.C.astype(X.dtype)
+    tol = p.tol.astype(X.dtype)
 
     def body_i(i, carry):
         alpha, g, viol = carry
@@ -180,7 +246,7 @@ def fit_binary_kernel(X: jax.Array, y: jax.Array,
     def cond(carry):
         _, _, viol, t = carry
         return jnp.logical_and(t < cfg.max_epochs,
-                               jnp.logical_or(t == 0, viol > cfg.tol))
+                               jnp.logical_or(t == 0, viol > tol))
 
     init = _pvary((jnp.zeros((n,), X.dtype), -jnp.ones((n,), X.dtype) * m,
                    jnp.asarray(jnp.inf, X.dtype), jnp.asarray(0, jnp.int32)),
@@ -196,11 +262,19 @@ def fit_binary_kernel(X: jax.Array, y: jax.Array,
 def fit_binary(X: jax.Array, y: jax.Array, mask: Optional[jax.Array] = None,
                cfg: SVMConfig = SVMConfig(),
                gram_fn: Optional[GramFn] = None,
+               params: Optional[SolverParams] = None,
                vma_axes: tuple = ()) -> BinarySVM:
-    """Train one reducer's soft-margin binary SVM. y ∈ {-1, +1}."""
+    """Train one reducer's soft-margin binary SVM. y ∈ {-1, +1}.
+
+    ``params`` overrides the value-like hyper-params of ``cfg`` with a
+    traced :class:`SolverParams` pytree (vmappable for sweeps); when
+    ``None`` the static defaults of ``cfg`` are lifted.
+    """
     if cfg.kernel.name == "linear" and not cfg.use_gram:
-        return fit_binary_linear(X, y, mask, cfg, vma_axes=vma_axes)
-    return fit_binary_kernel(X, y, mask, cfg, gram_fn=gram_fn, vma_axes=vma_axes)
+        return fit_binary_linear(X, y, mask, cfg, params=params,
+                                 vma_axes=vma_axes)
+    return fit_binary_kernel(X, y, mask, cfg, gram_fn=gram_fn, params=params,
+                             vma_axes=vma_axes)
 
 
 # ---------------------------------------------------------------------------
@@ -212,9 +286,15 @@ def decision_linear(w: jax.Array, b: jax.Array, X: jax.Array) -> jax.Array:
 
 
 def decision_kernel(sv_x: jax.Array, sv_coef: jax.Array, b: jax.Array,
-                    X: jax.Array, kcfg: KernelConfig) -> jax.Array:
-    """f(x) = Σ_i coef_i K(x, sv_i) + b, coef = α·y (masked)."""
-    K = apply_kernel(X, sv_x, cfg=kcfg)
+                    X: jax.Array, kcfg: KernelConfig,
+                    gamma: Optional[jax.Array] = None,
+                    coef0: Optional[jax.Array] = None) -> jax.Array:
+    """f(x) = Σ_i coef_i K(x, sv_i) + b, coef = α·y (masked).
+
+    ``gamma``/``coef0`` override the static kernel params with traced
+    values (must match the values the model was trained with).
+    """
+    K = apply_kernel(X, sv_x, cfg=kcfg, gamma=gamma, coef0=coef0)
     return K @ sv_coef + b
 
 

@@ -1,0 +1,400 @@
+"""Batched multi-config hyper-parameter sweeps (vmap-over-configs).
+
+The paper selects between polarization models by training many SVM
+variants and comparing confusion matrices (Tablo 6/8); its whole point
+is amortizing training cost across a cluster. The same argument applies
+across *jobs*: S (C, kernel-scale) configurations are embarrassingly
+parallel, so instead of S sequential ``fit_mapreduce`` calls — S traces,
+S compiles, S device round-trips per round — we lift the value-like
+hyper-parameters into the traced :class:`~repro.core.svm.SolverParams`
+pytree and run every config under one outer ``vmap``: one jit, one
+device pass, S models (He et al. 2019 make the batched-solver-instances
+case for modern hardware).
+
+Per-config convergence (eq. 8) is masked, not synchronized:
+
+* driver level — a host-side ``done`` mask freezes a finished config's
+  SV buffer and best hypothesis, and the round loop exits when every
+  config has converged;
+* solver level — a finished config's ``tol`` is rewritten to ``+inf``
+  (it is traced, so this costs nothing), which makes its dual-CD
+  ``while_loop`` predicate go false after a single epoch; under
+  ``vmap`` the while_loop batching rule then select-freezes that lane
+  while unconverged configs keep iterating. Finished configs stop
+  contributing work.
+
+One-vs-rest multiclass folds into the same batch axis: k classes × S
+configs are k·S independent binary jobs (:func:`fit_one_vs_rest_sweep`).
+
+Two execution modes mirror :mod:`repro.core.mapreduce_svm`:
+
+* **functional** (:func:`fit_mapreduce_sweep`) — configs on a leading
+  ``vmap`` axis over :func:`mapreduce_round`;
+* **sharded** (:func:`build_sharded_sweep_round`) — the same ``vmap``
+  *inside* the ``shard_map`` round body, so each device solves S local
+  subproblems per round and the all-gather shuffle moves S buffers in
+  one collective.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.core.mapreduce_svm import (MRSVMConfig, SVBuffer, init_sv_buffer,
+                                      make_sharded_round, mapreduce_round)
+from repro.core.svm import (BinarySVM, SolverParams, SVMConfig,
+                            decision_kernel, fit_binary)
+
+
+class SweepResult(NamedTuple):
+    """Converged state of every config in the sweep (leading axis S)."""
+    params: SolverParams   # (S,)-batched hyper-parameters
+    risks: jax.Array       # (S,) best R_emp per config over its rounds
+    ws: jax.Array          # (S, d) best linear hypothesis per config
+    bs: jax.Array          # (S,)
+    sv: SVBuffer           # (S, cap, …) converged SV_global per config
+    final: BinarySVM       # (S, …) models retrained on SV_global alone
+    rounds: np.ndarray     # (S,) rounds each config ran before eq. 8
+    history: Tuple[dict, ...]
+
+    @property
+    def num_configs(self) -> int:
+        return int(self.risks.shape[0])
+
+    @property
+    def best(self) -> int:
+        """Index of the sweep-selected config (min empirical risk)."""
+        return int(np.argmin(np.asarray(self.risks)))
+
+
+# ---------------------------------------------------------------------------
+# Building batched SolverParams.
+# ---------------------------------------------------------------------------
+
+def stack_params(params_list: Sequence[SolverParams]) -> SolverParams:
+    """Stack per-config params into one (S,)-batched pytree."""
+    if not params_list:
+        raise ValueError("empty sweep")
+    return compat.tree_map(lambda *xs: jnp.stack(xs), *params_list)
+
+
+def sweep_grid(cfg: SVMConfig,
+               C: Optional[Sequence[float]] = None,
+               gamma: Optional[Sequence[float]] = None,
+               tol: Optional[Sequence[float]] = None,
+               sv_threshold: Optional[Sequence[float]] = None,
+               coef0: Optional[Sequence[float]] = None) -> SolverParams:
+    """Cartesian grid over the traced hyper-params, defaults from ``cfg``.
+
+    Returns a (S,)-batched :class:`SolverParams` with
+    S = Π len(axis). Axis order is C-major, matching
+    ``itertools.product(C, gamma, tol, sv_threshold, coef0)``.
+    """
+    base = cfg.params()
+    axes = [np.atleast_1d(np.asarray(v, np.float32)) if v is not None
+            else np.asarray([float(dflt)], np.float32)
+            for v, dflt in ((C, base.C), (gamma, base.gamma),
+                            (tol, base.tol),
+                            (sv_threshold, base.sv_threshold),
+                            (coef0, base.coef0))]
+    grid = np.meshgrid(*axes, indexing="ij")
+    flat = [jnp.asarray(g.reshape(-1)) for g in grid]
+    c, g, t, s, c0 = flat
+    return SolverParams(C=c, tol=t, sv_threshold=s, gamma=g, coef0=c0)
+
+
+def _num_configs(params: SolverParams) -> int:
+    S = params.C.shape[0]
+    for leaf in params:
+        if leaf.ndim != 1 or leaf.shape[0] != S:
+            raise ValueError("sweep params must share one leading (S,) axis; "
+                             f"got shapes {[l.shape for l in params]}")
+    return int(S)
+
+
+def _freeze(done: np.ndarray, old, new):
+    """Per-config select: keep ``old`` state where ``done`` (leading S)."""
+    d = jnp.asarray(done)
+    sel = lambda o, n: jnp.where(d.reshape((-1,) + (1,) * (n.ndim - 1)), o, n)
+    return compat.tree_map(sel, old, new)
+
+
+def _run_rounds(step, svb: SVBuffer, d: int, cfg: MRSVMConfig,
+                params: SolverParams, verbose: bool, tag: str):
+    """Shared eq. 8-masked host round loop of both sweep modes.
+
+    ``step(svb, eff_params) -> (sv_new, r_star (S,), ws (S, d), bs (S,))``
+    where r_star/ws/bs are already reduced to each config's best
+    reducer. Finished configs get ``tol=+inf`` (their solver
+    while_loop exits after one epoch; vmap select-freezes the lane) and
+    their SV buffer / best hypothesis frozen on the host; the loop
+    exits when every config has converged.
+    """
+    S = _num_configs(params)
+    done = np.zeros(S, bool)
+    prev = np.full(S, np.inf)
+    best_risk = np.full(S, np.inf)
+    best_w = np.zeros((S, d), np.float32)
+    best_b = np.zeros(S, np.float32)
+    rounds = np.zeros(S, np.int64)
+    history = []
+    inf = jnp.asarray(np.inf, params.tol.dtype)
+    for t in range(cfg.max_rounds):
+        eff = params._replace(tol=jnp.where(jnp.asarray(done), inf,
+                                            params.tol))
+        sv_new, r_star, ws, bs = step(svb, eff)
+        svb = _freeze(done, svb, sv_new)
+        r_star = np.asarray(r_star)
+        act = ~done
+        improved = act & (r_star < best_risk)
+        if improved.any():
+            best_w[improved] = np.asarray(ws)[improved]
+            best_b[improved] = np.asarray(bs)[improved]
+            best_risk = np.where(improved, r_star, best_risk)
+        rounds[act] += 1
+        history.append({"round": t, "risks": np.where(act, r_star, np.nan),
+                        "active": int(act.sum())})
+        if verbose:
+            print(f"[{tag}] round={t} active={int(act.sum())}/{S} "
+                  f"best_R_emp={np.nanmin(np.where(act, r_star, np.nan)):.5f}")
+        done |= act & (t > 0) & (np.abs(prev - r_star) <= cfg.gamma)  # eq. 8
+        prev = np.where(act, r_star, prev)
+        if done.all():
+            break
+    return svb, best_risk, best_w, best_b, rounds, tuple(history)
+
+
+# ---------------------------------------------------------------------------
+# Functional sweep driver.
+# ---------------------------------------------------------------------------
+
+def fit_mapreduce_sweep(X: jax.Array, y: jax.Array, num_partitions: int,
+                        cfg: MRSVMConfig, params: SolverParams,
+                        mask: Optional[jax.Array] = None,
+                        verbose: bool = False) -> SweepResult:
+    """Run S MapReduce-SVM jobs in one batched computation.
+
+    ``X``/``mask`` are shared across configs; ``y`` is either ``(n,)``
+    (same labels for every job) or ``(S, n)`` (per-job labels — the
+    one-vs-rest folding). Per-config eq. 8 masking freezes converged
+    configs (see module docstring); each config's trajectory is
+    identical to a sequential ``fit_mapreduce`` call with its
+    ``params`` slice.
+    """
+    S = _num_configs(params)
+    n, d = X.shape
+    L = num_partitions
+    per = -(-n // L)
+    pad = L * per - n
+    Xp = jnp.pad(X, ((0, pad), (0, 0))).reshape(L, per, d)
+    yb = jnp.broadcast_to(jnp.atleast_2d(y.astype(X.dtype)), (S, n))
+    ypb = jnp.pad(yb, ((0, 0), (0, pad))).reshape(S, L, per)
+    base_mask = jnp.ones((n,), X.dtype) if mask is None else mask.astype(X.dtype)
+    maskp = jnp.pad(base_mask, (0, pad)).reshape(L, per)
+
+    sv0 = init_sv_buffer(cfg.sv_capacity, d, X.dtype)
+    svb = compat.tree_map(
+        lambda a: jnp.broadcast_to(a, (S,) + a.shape), sv0)
+
+    # The per-config best-reducer pick (eq. 7) happens ON DEVICE so the
+    # host transfer is (S, d), not the full (S, L, d) hypothesis tensor.
+    def _round(ypb_, sv_b, eff):
+        out = jax.vmap(lambda yp, sv, p: mapreduce_round(
+            Xp, yp, maskp, sv, cfg, params=p))(ypb_, sv_b, eff)
+        l_star = jnp.argmin(out.risks, axis=1)               # (S,)
+        r_sel = jnp.take_along_axis(out.risks, l_star[:, None], 1)[:, 0]
+        w_sel = jnp.take_along_axis(out.ws, l_star[:, None, None], 1)[:, 0]
+        b_sel = jnp.take_along_axis(out.bs, l_star[:, None], 1)[:, 0]
+        return out.sv, r_sel, w_sel, b_sel
+
+    round_fn = jax.jit(_round)
+
+    def step(sv_b, eff):
+        return round_fn(ypb, sv_b, eff)
+
+    svb, best_risk, best_w, best_b, rounds, history = _run_rounds(
+        step, svb, d, cfg, params, verbose, "sweep")
+
+    # Final consolidated models: retrain each config on its SV_global.
+    final = jax.jit(jax.vmap(
+        lambda sv, p: fit_binary(sv.x, sv.y, sv.mask, cfg.svm, params=p)))(
+            svb, params)
+    return SweepResult(params=params, risks=jnp.asarray(best_risk),
+                       ws=jnp.asarray(best_w), bs=jnp.asarray(best_b),
+                       sv=svb, final=final, rounds=rounds, history=history)
+
+
+def sweep_decision_values(res: SweepResult, X: jax.Array,
+                          cfg: MRSVMConfig) -> jax.Array:
+    """(S, n) decision values of every config's final model on ``X``."""
+    if cfg.svm.kernel.name == "linear" and not cfg.svm.use_gram:
+        return jnp.einsum("nd,sd->sn", X, res.final.w) + res.final.b[:, None]
+
+    def one(sv, alpha, b, p):
+        coef = alpha * sv.y * sv.mask
+        return decision_kernel(sv.x, coef, b, X, cfg.svm.kernel,
+                               gamma=p.gamma, coef0=p.coef0)
+    return jax.vmap(one)(res.sv, res.final.alpha, res.final.b, res.params)
+
+
+def predict_sweep(res: SweepResult, X: jax.Array,
+                  cfg: MRSVMConfig) -> jax.Array:
+    """(S, n) ±1 predictions of every config's final model."""
+    return jnp.where(sweep_decision_values(res, X, cfg) >= 0, 1.0, -1.0)
+
+
+# ---------------------------------------------------------------------------
+# One-vs-rest folded into the batch axis.
+# ---------------------------------------------------------------------------
+
+class SweepOneVsRest(NamedTuple):
+    """k classes × S configs trained as one k·S-job batch.
+
+    Job ``j`` is (config ``j // k``, class ``classes[j % k]``).
+    """
+    classes: Tuple[int, ...]
+    num_configs: int
+    result: SweepResult
+    cfg: MRSVMConfig
+
+    def decision_tensor(self, X: jax.Array) -> jax.Array:
+        """(S, k, n) one-vs-rest decision values."""
+        k = len(self.classes)
+        dm = sweep_decision_values(self.result, X, self.cfg)   # (k*S, n)
+        return dm.reshape(self.num_configs, k, X.shape[0])
+
+    def predict(self, X: jax.Array) -> jax.Array:
+        """(S, n) class labels per config (argmax over the k scores)."""
+        idx = jnp.argmax(self.decision_tensor(X), axis=1)
+        return jnp.asarray(self.classes)[idx]
+
+    def risks(self) -> np.ndarray:
+        """(S,) mean over the k binary jobs' best risks — the sweep's
+        per-config model-selection score."""
+        k = len(self.classes)
+        return np.asarray(self.result.risks).reshape(
+            self.num_configs, k).mean(axis=1)
+
+    @property
+    def best(self) -> int:
+        return int(np.argmin(self.risks()))
+
+
+def fit_one_vs_rest_sweep(X: jax.Array, y: jax.Array,
+                          classes: Sequence[int], num_partitions: int,
+                          cfg: MRSVMConfig, params: SolverParams,
+                          verbose: bool = False) -> SweepOneVsRest:
+    """One-vs-rest multiclass × hyper-param sweep as a single batch."""
+    k = len(classes)
+    S = _num_configs(params)
+    y1 = jnp.stack([jnp.where(y == c, 1.0, -1.0).astype(X.dtype)
+                    for c in classes])                       # (k, n)
+    y_jobs = jnp.tile(y1, (S, 1))                            # (k*S, n)
+    pj = compat.tree_map(lambda a: jnp.repeat(a, k, axis=0), params)
+    res = fit_mapreduce_sweep(X, y_jobs, num_partitions, cfg, pj,
+                              verbose=verbose)
+    return SweepOneVsRest(classes=tuple(int(c) for c in classes),
+                          num_configs=S, result=res, cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# Sharded sweep: vmap-over-configs inside the shard_map round body.
+# ---------------------------------------------------------------------------
+
+def make_sharded_sweep_round(cfg: MRSVMConfig, axis_names: Sequence[str],
+                             num_devices: int, rows_per_device: int):
+    """Per-device body solving S local subproblems per round.
+
+    Wraps :func:`make_sharded_round`'s body in an inner ``vmap`` over
+    the leading config axis of ``(sv, params)``; the shuffle becomes S
+    all-gathers batched into one collective per buffer leaf.
+    """
+    body = make_sharded_round(cfg, axis_names, num_devices, rows_per_device)
+
+    def sweep_body(Xl, yl, ml, sv_b: SVBuffer, params_b: SolverParams):
+        return jax.vmap(lambda sv, p: body(Xl, yl, ml, sv, p))(sv_b, params_b)
+
+    return sweep_body
+
+
+def sharded_sweep_program(mesh, data_axes: Sequence[str],
+                          cfg: MRSVMConfig, rows_per_device: int):
+    """shard_map-wrapped sweep round + its partition-spec contract.
+
+    Single source of the sweep round's sharding: rows sharded over the
+    data axes, SV buffers and params replicated with a leading (S,)
+    config axis. Returns ``(fn, in_specs, out_specs)`` — consumed by
+    both the jitted driver (:func:`build_sharded_sweep_round`) and the
+    dry-run step builder (``launch.steps.build_svm_sweep_step``), so
+    the program the dry-run validates is the program actually run.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    axes = tuple(data_axes)
+    ndev = int(np.prod([mesh.shape[a] for a in axes]))
+    body = make_sharded_sweep_round(cfg, axes, ndev, rows_per_device)
+    row_spec = P(axes if len(axes) > 1 else axes[0])
+    rep_buf = SVBuffer(x=P(), y=P(), alpha=P(), ids=P(), mask=P())
+    rep_par = SolverParams(C=P(), tol=P(), sv_threshold=P(),
+                           gamma=P(), coef0=P())
+    in_specs = (row_spec, row_spec, row_spec, rep_buf, rep_par)
+    out_specs = (rep_buf, P(), P(), P())
+    fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+    return fn, in_specs, out_specs
+
+
+def build_sharded_sweep_round(mesh, data_axes: Sequence[str],
+                              cfg: MRSVMConfig, rows_per_device: int):
+    """jit(shard_map(...)) one batched sweep round on ``mesh``.
+
+    Returns ``f(X, y, mask, sv_b, params_b) -> (sv_b', risks (S, ndev),
+    ws (S, d), bs (S,))`` where ``X`` is the GLOBAL array sharded on its
+    leading axis and ``sv_b``/``params_b`` carry the replicated (S,)
+    config axis.
+    """
+    fn, _, _ = sharded_sweep_program(mesh, data_axes, cfg, rows_per_device)
+    return jax.jit(fn)
+
+
+class ShardedSweep(NamedTuple):
+    """Host-driver output of :func:`run_sharded_sweep`."""
+    risks: jax.Array    # (S,) best R_emp per config
+    ws: jax.Array       # (S, d)
+    bs: jax.Array       # (S,)
+    sv: SVBuffer        # (S, cap, …)
+    rounds: np.ndarray  # (S,)
+    history: Tuple[dict, ...]
+
+    @property
+    def best(self) -> int:
+        return int(np.argmin(np.asarray(self.risks)))
+
+
+def run_sharded_sweep(round_fn, X: jax.Array, y: jax.Array,
+                      mask: Optional[jax.Array], cfg: MRSVMConfig,
+                      params: SolverParams,
+                      verbose: bool = False) -> ShardedSweep:
+    """Host round loop over :func:`build_sharded_sweep_round` with the
+    same per-config eq. 8 masking as :func:`fit_mapreduce_sweep`."""
+    n, d = X.shape
+    S = _num_configs(params)
+    if mask is None:
+        mask = jnp.ones((n,), X.dtype)
+    sv0 = init_sv_buffer(cfg.sv_capacity, d, X.dtype)
+    svb = compat.tree_map(lambda a: jnp.broadcast_to(a, (S,) + a.shape), sv0)
+
+    def step(sv_b, eff):
+        sv_new, risks, ws, bs = round_fn(X, y, mask, sv_b, eff)
+        # (ws, bs) are already the per-config best-reducer picks.
+        return sv_new, np.asarray(risks).min(axis=1), ws, bs
+
+    svb, best_risk, best_w, best_b, rounds, history = _run_rounds(
+        step, svb, d, cfg, params, verbose, "sharded-sweep")
+    return ShardedSweep(risks=jnp.asarray(best_risk), ws=jnp.asarray(best_w),
+                        bs=jnp.asarray(best_b), sv=svb, rounds=rounds,
+                        history=history)

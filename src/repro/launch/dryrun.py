@@ -52,7 +52,11 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     try:
         if getattr(cfg, "family", None) == "svm":
-            bundle = steps_lib.build_svm_round_step(cfg, mesh)
+            if shape_name == "svm_sweep":
+                bundle = steps_lib.build_svm_sweep_step(cfg, mesh,
+                                                        num_configs=8)
+            else:
+                bundle = steps_lib.build_svm_round_step(cfg, mesh)
             shape = None
         else:
             shape = steps_lib.INPUT_SHAPES[shape_name]
@@ -170,7 +174,7 @@ def main():
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default="train_4k",
                     choices=list(("train_4k", "prefill_32k", "decode_32k",
-                                  "long_500k", "svm")))
+                                  "long_500k", "svm", "svm_sweep")))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--rules", default="baseline")
     ap.add_argument("--all", action="store_true",

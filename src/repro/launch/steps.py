@@ -240,3 +240,44 @@ def build_svm_round_step(svm_cfg, mesh) -> StepBundle:
         out_shardings=(rep, P(), P(), P()),
         donate_argnums=(),
         model=None)
+
+
+def build_svm_sweep_step(svm_cfg, mesh, num_configs: int) -> StepBundle:
+    """S MapReduce-SVM jobs per round on the production mesh: one jit,
+    one device pass, S models — the sweep subsystem's vmap-over-configs
+    inside the shard_map round body (repro.core.sweep)."""
+    import numpy as np
+    from repro.core.mapreduce_svm import MRSVMConfig, SVBuffer
+    from repro.core.svm import SolverParams, SVMConfig
+    from repro.core.sweep import sharded_sweep_program
+
+    axes = batch_axes(mesh)
+    ndev = int(np.prod([mesh.shape[a] for a in axes]))
+    per = svm_cfg.rows_per_device
+    n, d = ndev * per, svm_cfg.num_features
+    S = num_configs
+    cap = svm_cfg.sv_capacity
+    mr_cfg = MRSVMConfig(
+        sv_capacity=cap,
+        svm=SVMConfig(C=svm_cfg.C, max_epochs=svm_cfg.max_epochs))
+    fn, in_specs, out_specs = sharded_sweep_program(mesh, axes, mr_cfg, per)
+
+    dt = jnp.dtype(svm_cfg.dtype)
+    f32 = jnp.float32
+    args = (jax.ShapeDtypeStruct((n, d), dt),
+            jax.ShapeDtypeStruct((n,), dt),
+            jax.ShapeDtypeStruct((n,), dt),
+            SVBuffer(
+                x=jax.ShapeDtypeStruct((S, cap, d), dt),
+                y=jax.ShapeDtypeStruct((S, cap), dt),
+                alpha=jax.ShapeDtypeStruct((S, cap), dt),
+                ids=jax.ShapeDtypeStruct((S, cap), jnp.int32),
+                mask=jax.ShapeDtypeStruct((S, cap), dt)),
+            SolverParams(*(jax.ShapeDtypeStruct((S,), f32)
+                           for _ in range(5))))
+    return StepBundle(
+        fn=fn, args=args,
+        in_shardings=in_specs,
+        out_shardings=out_specs,
+        donate_argnums=(),
+        model=None)

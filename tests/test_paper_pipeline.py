@@ -1,0 +1,99 @@
+"""End-to-end golden test of the paper pipeline (ISSUE 2 satellite):
+
+    tweets → TF×IDF (eq. 10-11) → 2-class / 3-class MapReduce SVM
+    (Tablo 1-2, eq. 6-9) → confusion matrix (Tablo 6 / Tablo 8)
+
+This harness locks the whole reproduction down for every future PR:
+accuracy floors on held-out data for both polarization models, the
+confusion-matrix conventions, and sweep-based model selection (the
+best config must beat the worst on held-out data)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (MRSVMConfig, SVMConfig, confusion_matrix,
+                        fit_mapreduce, fit_mapreduce_sweep,
+                        fit_one_vs_rest, predict, predict_sweep, sweep_grid)
+from repro.text import CorpusConfig, fit_transform, generate, vectorize
+
+
+def _pipeline_data(classes, num_messages=1024, num_features=1024, seed=0):
+    """Synthetic corpus → hashed counts → TF×IDF, split 75/25."""
+    corpus = generate(CorpusConfig(num_messages=num_messages,
+                                   classes=classes, seed=seed))
+    counts = jnp.asarray(vectorize(corpus.texts, num_features))
+    X, _ = fit_transform(counts)
+    y = jnp.asarray(corpus.labels, jnp.float32)
+    n_train = int(0.75 * num_messages)
+    return (X[:n_train], y[:n_train]), (X[n_train:], y[n_train:])
+
+
+@pytest.fixture(scope="module")
+def two_class_data():
+    return _pipeline_data((-1, 1))
+
+
+@pytest.fixture(scope="module")
+def three_class_data():
+    return _pipeline_data((-1, 0, 1))
+
+
+@pytest.fixture(scope="module")
+def mr_cfg():
+    return MRSVMConfig(sv_capacity=128, gamma=1e-4, max_rounds=4,
+                       svm=SVMConfig(C=1.0, max_epochs=15))
+
+
+def test_two_class_pipeline_golden(two_class_data, mr_cfg):
+    """Tablo 6 analogue: the 2-class (Olumlu/Olumsuz) model."""
+    (X_tr, y_tr), (X_te, y_te) = two_class_data
+    model = fit_mapreduce(X_tr, y_tr, 8, mr_cfg)
+    pred = predict(model, X_te, mr_cfg)
+    acc = float(jnp.mean(pred == y_te))
+    assert acc > 0.85, f"2-class held-out accuracy regressed: {acc:.3f}"
+
+    cm = confusion_matrix(y_te, pred, [-1, 1])
+    assert cm.shape == (2, 2)
+    assert abs(cm.sum() - 100.0) < 1e-3            # global % (paper)
+    assert np.trace(cm) > 85.0
+
+    cm_row = confusion_matrix(y_te, pred, [-1, 1], normalize="true")
+    np.testing.assert_allclose(cm_row.sum(axis=1), [100.0, 100.0],
+                               atol=1e-6)
+    assert (np.diag(cm_row) > 80.0).all()          # per-class recall
+
+
+def test_three_class_pipeline_golden(three_class_data, mr_cfg):
+    """Tablo 8 analogue: the 3-class ({-1, 0, +1}) model via OvR."""
+    (X_tr, y_tr), (X_te, y_te) = three_class_data
+    ovr = fit_one_vs_rest(X_tr, y_tr, [-1, 0, 1], 8, mr_cfg)
+    pred = ovr.predict(X_te)
+    acc = float(jnp.mean(pred == y_te.astype(pred.dtype)))
+    assert acc > 0.75, f"3-class held-out accuracy regressed: {acc:.3f}"
+
+    cm = confusion_matrix(y_te, pred, [-1, 0, 1])
+    assert cm.shape == (3, 3)
+    assert abs(cm.sum() - 100.0) < 1e-3
+    assert np.trace(cm) > 75.0
+
+
+def test_sweep_selected_config_beats_worst_on_held_out(two_class_data):
+    """Model selection: the sweep's risk-ranked best config must beat
+    its worst config on held-out data (the Tablo 6/8 comparison the
+    paper does by hand, batched). An rbf (C, γ) grid includes a
+    memorizing γ — huge γ makes K ≈ I on L2-normalized TF×IDF rows, so
+    that config collapses to the class prior on held-out data while a
+    sane γ generalizes; the sweep has to rank them apart."""
+    from repro.core import KernelConfig
+    (X_tr, y_tr), (X_te, y_te) = two_class_data
+    cfg = MRSVMConfig(sv_capacity=128, gamma=1e-4, max_rounds=3,
+                      svm=SVMConfig(C=10.0, max_epochs=15,
+                                    kernel=KernelConfig("rbf", gamma=1.0)))
+    params = sweep_grid(cfg.svm, C=[1.0, 10.0], gamma=[0.5, 200.0])
+    res = fit_mapreduce_sweep(X_tr, y_tr, 8, cfg, params)
+    preds = predict_sweep(res, X_te, cfg)
+    accs = np.asarray(jnp.mean(preds == y_te[None, :], axis=1))
+    worst = int(np.argmax(np.asarray(res.risks)))
+    assert res.best != worst
+    assert accs[res.best] > accs[worst] + 0.1
+    assert accs[res.best] > 0.85

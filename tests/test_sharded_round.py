@@ -94,6 +94,43 @@ def _in_subprocess(check_name: str):
     assert "SHARDED_ROUND_OK" in r.stdout, r.stdout + r.stderr
 
 
+def _assert_gram_round_equivalence(gram_impl: str, rounds=2):
+    """use_gram=True through build_sharded_round ≡ the functional round
+    (ISSUE 2 satellite / ROADMAP: the Gram path — including the Pallas
+    kernel — must be exercised under the sharded mode, not only the
+    functional one)."""
+    from repro import compat
+    from repro.core import MRSVMConfig, SVMConfig
+    from repro.core.mapreduce_svm import (build_sharded_round,
+                                          init_sv_buffer, mapreduce_round)
+
+    X, y, mask = _problem(n=256, d=8)
+    n, d = X.shape
+    cfg = MRSVMConfig(sv_capacity=32, svm=SVMConfig(
+        C=1.0, max_epochs=10, use_gram=True, gram_impl=gram_impl))
+
+    mesh = compat.make_mesh((NDEV,), ("data",))
+    fn = build_sharded_round(mesh, ("data",), cfg, n // NDEV)
+    sv_s = init_sv_buffer(cfg.sv_capacity, d)
+    for _ in range(rounds):
+        sv_s, risks_s, w_s, b_s = fn(X, y, mask, sv_s)
+
+    per = n // NDEV
+    Xp = X.reshape(NDEV, per, d)
+    yp = y.reshape(NDEV, per)
+    mp = mask.reshape(NDEV, per)
+    sv_f = init_sv_buffer(cfg.sv_capacity, d)
+    for _ in range(rounds):
+        out = mapreduce_round(Xp, yp, mp, sv_f, cfg)
+        sv_f, risks_f = out.sv, out.risks
+
+    np.testing.assert_allclose(np.asarray(risks_s), np.asarray(risks_f),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(sv_s.ids), np.asarray(sv_f.ids))
+    np.testing.assert_allclose(np.asarray(sv_s.alpha), np.asarray(sv_f.alpha),
+                               rtol=1e-4, atol=1e-5)
+
+
 def _check_1d():
     _assert_round_equivalence((NDEV,), ("data",))
 
@@ -101,6 +138,14 @@ def _check_1d():
 def _check_pod_2d():
     # multi-axis data sharding: exercises compat.axis_index over a tuple
     _assert_round_equivalence((2, NDEV // 2), ("pod", "data"))
+
+
+def _check_gram_xla():
+    _assert_gram_round_equivalence("xla")
+
+
+def _check_gram_pallas():
+    _assert_gram_round_equivalence("pallas")
 
 
 def test_sharded_round_matches_functional():
@@ -115,3 +160,17 @@ def test_sharded_round_matches_functional_pod_mesh():
         _check_pod_2d()
     else:
         _in_subprocess("_check_pod_2d")
+
+
+def test_sharded_round_gram_path():
+    if len(jax.devices()) >= NDEV:
+        _check_gram_xla()
+    else:
+        _in_subprocess("_check_gram_xla")
+
+
+def test_sharded_round_pallas_gram_path():
+    if len(jax.devices()) >= NDEV:
+        _check_gram_pallas()
+    else:
+        _in_subprocess("_check_gram_pallas")

@@ -1,0 +1,237 @@
+"""Batched multi-config sweep (ISSUE 2 tentpole): vmap-over-configs
+must be a pure batching transform — every config's trajectory identical
+to a sequential per-config ``fit_mapreduce`` run with the same
+``SolverParams`` slice — and the per-config eq. 8 masking must stop
+finished configs without disturbing the rest."""
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import (KernelConfig, MRSVMConfig, SVMConfig,
+                        fit_mapreduce, fit_mapreduce_sweep,
+                        fit_one_vs_rest_sweep, predict, predict_sweep,
+                        stack_params, sweep_grid)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _problem(n=256, d=10, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    X = jax.random.normal(k1, (n, d))
+    w = jax.random.normal(k2, (d,))
+    y = jnp.sign(X @ w + 0.05)
+    return X, y
+
+
+def test_sweep_grid_shapes():
+    cfg = SVMConfig(C=2.0, tol=1e-4)
+    p = sweep_grid(cfg, C=[0.1, 1.0, 10.0], gamma=[0.5, 2.0])
+    assert p.C.shape == (6,)
+    for leaf in p:
+        assert leaf.shape == (6,)
+    # unspecified axes take the static-shell defaults
+    np.testing.assert_allclose(np.asarray(p.tol), 1e-4)
+    # C-major ordering (itertools.product convention)
+    np.testing.assert_allclose(np.asarray(p.C),
+                               [0.1, 0.1, 1.0, 1.0, 10.0, 10.0])
+    np.testing.assert_allclose(np.asarray(p.gamma),
+                               [0.5, 2.0, 0.5, 2.0, 0.5, 2.0])
+
+
+def test_stack_params_roundtrip():
+    cfgs = [SVMConfig(C=c) for c in (0.1, 1.0, 10.0)]
+    p = stack_params([c.params() for c in cfgs])
+    np.testing.assert_allclose(np.asarray(p.C), [0.1, 1.0, 10.0])
+
+
+def test_batched_sweep_matches_sequential_linear():
+    """Acceptance: ≥8 configs, batched risks/predictions ≡ sequential."""
+    X, y = _problem()
+    cfg = MRSVMConfig(sv_capacity=32, gamma=1e-4, max_rounds=3,
+                      svm=SVMConfig(C=1.0, max_epochs=10))
+    params = sweep_grid(cfg.svm, C=[0.01, 0.1, 1.0, 10.0],
+                        tol=[1e-3, 1e-2])
+    S = params.C.shape[0]
+    assert S == 8
+    res = fit_mapreduce_sweep(X, y, 4, cfg, params)
+    preds = predict_sweep(res, X, cfg)
+    for s in range(S):
+        p_s = compat.tree_map(lambda a: a[s], params)
+        seq = fit_mapreduce(X, y, 4, cfg, params=p_s)
+        np.testing.assert_allclose(float(res.risks[s]), float(seq.risk),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(res.ws[s]), np.asarray(seq.w),
+                                   rtol=1e-4, atol=1e-5)
+        assert int(res.rounds[s]) == seq.rounds
+        seq_pred = predict(seq, X, cfg, params=p_s)
+        np.testing.assert_array_equal(np.asarray(preds[s]),
+                                      np.asarray(seq_pred))
+
+
+def test_batched_sweep_matches_sequential_rbf():
+    """(C, kernel-scale) sweep on the Gram path — gamma is traced."""
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(0, 1, (192, 2)).astype(np.float32))
+    y = jnp.sign(X[:, 0] * X[:, 1])
+    cfg = MRSVMConfig(sv_capacity=32, max_rounds=2, gamma=1e-3,
+                      svm=SVMConfig(C=10.0, max_epochs=10,
+                                    kernel=KernelConfig("rbf", gamma=1.0)))
+    params = sweep_grid(cfg.svm, C=[1.0, 10.0], gamma=[0.3, 1.0, 3.0])
+    res = fit_mapreduce_sweep(X, y, 4, cfg, params)
+    preds = predict_sweep(res, X, cfg)
+    for s in range(params.C.shape[0]):
+        p_s = compat.tree_map(lambda a: a[s], params)
+        seq = fit_mapreduce(X, y, 4, cfg, params=p_s)
+        np.testing.assert_allclose(float(res.risks[s]), float(seq.risk),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_array_equal(
+            np.asarray(preds[s]), np.asarray(predict(seq, X, cfg,
+                                                     params=p_s)))
+
+
+def test_per_config_eq8_masking():
+    """A huge driver γ stops every config at round 2 (eq. 8) and the
+    masking records per-config round counts."""
+    X, y = _problem(n=128, d=6, seed=2)
+    cfg = MRSVMConfig(sv_capacity=32, gamma=1.0, max_rounds=8,
+                      svm=SVMConfig(C=1.0, max_epochs=10))
+    params = sweep_grid(cfg.svm, C=[0.1, 1.0, 10.0])
+    res = fit_mapreduce_sweep(X, y, 4, cfg, params)
+    assert (res.rounds == 2).all()
+
+
+def test_mixed_convergence_does_not_disturb_active_configs():
+    """Configs that converge early must freeze while the rest keep the
+    exact sequential trajectory."""
+    X, y = _problem(n=192, d=8, seed=3)
+    # tiny C converges (risk plateaus) sooner than C=1 with tight gamma
+    cfg = MRSVMConfig(sv_capacity=32, gamma=5e-3, max_rounds=6,
+                      svm=SVMConfig(C=1.0, max_epochs=12))
+    params = sweep_grid(cfg.svm, C=[1e-4, 1.0])
+    res = fit_mapreduce_sweep(X, y, 4, cfg, params)
+    for s in range(2):
+        p_s = compat.tree_map(lambda a: a[s], params)
+        seq = fit_mapreduce(X, y, 4, cfg, params=p_s)
+        assert int(res.rounds[s]) == seq.rounds
+        np.testing.assert_allclose(float(res.risks[s]), float(seq.risk),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(res.sv.alpha[s]),
+                                   np.asarray(seq.sv.alpha),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_ovr_folds_into_batch_axis():
+    """k classes × S configs == one k·S-job batch."""
+    rng = np.random.default_rng(1)
+    y = rng.integers(-1, 2, size=240)
+    X = jnp.asarray(rng.normal(0, 1, (240, 8)).astype(np.float32))
+    X = X + 2.0 * jnp.asarray(y)[:, None]
+    cfg = MRSVMConfig(sv_capacity=64, gamma=1e-4, max_rounds=4,
+                      svm=SVMConfig(C=1.0, max_epochs=20))
+    params = sweep_grid(cfg.svm, C=[1e-3, 1.0])
+    ovr = fit_one_vs_rest_sweep(X, jnp.asarray(y), [-1, 0, 1], 4, cfg,
+                                params)
+    assert ovr.result.risks.shape == (6,)          # 2 configs × 3 classes
+    preds = ovr.predict(X)
+    assert preds.shape == (2, 240)
+    accs = np.asarray(jnp.mean(preds == jnp.asarray(y)[None, :], axis=1))
+    # the sweep-selected config is (near-)best on accuracy too
+    assert accs[ovr.best] >= accs.max() - 0.05
+    assert accs[ovr.best] > 0.7
+    # risk ranking orders the degenerate C below the working one
+    assert ovr.risks()[1] < ovr.risks()[0]
+
+
+def test_pallas_gram_rejects_traced_kernel_sweep():
+    """gram_impl='pallas' bakes γ at trace time; a traced rbf sweep over
+    it would train on a Gram the scores never saw — must raise, not
+    silently select a meaningless winner."""
+    from repro.core import fit_binary
+    X, y = _problem(n=32, d=4)
+    cfg = SVMConfig(C=1.0, max_epochs=2, use_gram=True, gram_impl="pallas",
+                    kernel=KernelConfig("rbf", gamma=1.0))
+    with pytest.raises(ValueError, match="pallas"):
+        fit_binary(X, y, cfg=cfg, params=cfg.params())
+    # linear Gram doesn't involve gamma — traced params stay legal
+    cfg_lin = SVMConfig(C=1.0, max_epochs=2, use_gram=True,
+                        gram_impl="pallas")
+    fit_binary(X, y, cfg=cfg_lin, params=cfg_lin.params())
+    # and the static (non-sweep) rbf Pallas path stays legal
+    fit_binary(X, y, cfg=cfg)
+
+
+def test_sweep_rejects_ragged_params():
+    X, y = _problem(n=64, d=4)
+    cfg = MRSVMConfig(sv_capacity=16, max_rounds=1,
+                      svm=SVMConfig(max_epochs=2))
+    from repro.core import SolverParams
+    bad = SolverParams(C=jnp.ones((3,)), tol=jnp.ones((2,)),
+                       sv_threshold=jnp.ones((3,)), gamma=jnp.ones((3,)),
+                       coef0=jnp.ones((3,)))
+    with pytest.raises(ValueError, match="leading"):
+        fit_mapreduce_sweep(X, y, 4, cfg, bad)
+
+
+_SHARDED_SWEEP_SCRIPT = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro import compat
+from repro.core import (MRSVMConfig, SVMConfig, sweep_grid,
+                        build_sharded_sweep_round, run_sharded_sweep,
+                        fit_mapreduce_sweep)
+
+n, d = 512, 12
+X = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+w = jax.random.normal(jax.random.PRNGKey(1), (d,))
+y = jnp.sign(X @ w)
+cfg = MRSVMConfig(sv_capacity=64, gamma=1e-4, max_rounds=3,
+                  svm=SVMConfig(C=1.0, max_epochs=15))
+params = sweep_grid(cfg.svm, C=[0.05, 0.5, 1.0, 5.0], tol=[1e-3, 1e-2])
+
+mesh = compat.make_mesh((8,), ("data",))
+fn = build_sharded_sweep_round(mesh, ("data",), cfg, n // 8)
+sh = run_sharded_sweep(fn, X, y, None, cfg, params)
+
+fres = fit_mapreduce_sweep(X, y, 8, cfg, params)
+np.testing.assert_allclose(np.asarray(sh.risks), np.asarray(fres.risks),
+                           rtol=1e-4, atol=1e-5)
+np.testing.assert_allclose(np.asarray(sh.ws), np.asarray(fres.ws),
+                           rtol=1e-4, atol=1e-5)
+np.testing.assert_array_equal(np.asarray(sh.sv.ids), np.asarray(fres.sv.ids))
+np.testing.assert_array_equal(sh.rounds, fres.rounds)
+assert sh.best == fres.best
+print("SHARDED_SWEEP_OK")
+"""
+
+
+def test_sharded_sweep_matches_functional_sweep():
+    """vmap-over-configs INSIDE the shard_map round body (8 devices)
+    must equal the functional sweep config-for-config."""
+    from conftest import subprocess_env
+    r = subprocess.run([sys.executable, "-c", _SHARDED_SWEEP_SCRIPT],
+                       capture_output=True, text=True, timeout=600,
+                       env=subprocess_env(PYTHONPATH=str(REPO / "src")))
+    assert "SHARDED_SWEEP_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_launcher_sweep_mode():
+    """`repro.launch.train --arch svm-tfidf --sweep S` drives the
+    sharded sweep end to end and reports a selected config."""
+    from conftest import subprocess_env
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "svm-tfidf",
+         "--smoke", "--sweep", "4", "--rounds", "2"],
+        capture_output=True, text=True, timeout=600, cwd=str(REPO),
+        env=subprocess_env(
+            XLA_FLAGS="--xla_force_host_platform_device_count=8",
+            PYTHONPATH=str(REPO / "src")))
+    assert "sweep selected C=" in r.stdout, r.stdout + r.stderr
+    assert r.stdout.count("config C=") == 4
