@@ -1,19 +1,55 @@
 """Benchmark harness — one function per paper table/figure plus the
-hardware benches. Prints ``name,us_per_call,derived`` CSV lines.
+hardware benches. Prints ``name,us_per_call,derived`` CSV lines and
+writes each bench's rows as a machine-readable
+``benchmarks/artifacts/BENCH_<name>.json`` (uploaded from CI so the
+perf trajectory is tracked across PRs).
 
     PYTHONPATH=src python -m benchmarks.run [--only tableX]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def parse_rows(lines) -> list:
+    """``name,us_per_call,derived`` CSV lines → record dicts."""
+    rows = []
+    for line in lines:
+        name, us, derived = line.split(",", 2)
+        try:
+            us_val = float(us)
+        except ValueError:
+            us_val = None
+        rows.append({"name": name, "us_per_call": us_val,
+                     "derived": derived})
+    return rows
+
+
+def write_bench_json(bench: str, lines, out_dir: str = None,
+                     status: str = "ok") -> str:
+    """Persist one bench's rows as BENCH_<bench>.json (CI artifact)."""
+    out_dir = out_dir or ARTIFACT_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{bench}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": bench, "status": status,
+                   "generated_unix": int(time.time()),
+                   "rows": parse_rows(lines)}, f, indent=2)
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument("--artifacts", default=ARTIFACT_DIR,
+                    help="directory for BENCH_<name>.json records")
     args = ap.parse_args()
 
     from benchmarks.tables import (table5_dataset, table6_confusion2,
@@ -23,6 +59,7 @@ def main() -> None:
     from benchmarks.kernel_micro import kernel_micro
     from benchmarks.roofline import roofline_rows, summarize
     from benchmarks.sweep import sweep_bench
+    from benchmarks.streaming import streaming_bench
 
     benches = [
         ("table5", table5_dataset),
@@ -35,6 +72,7 @@ def main() -> None:
         ("roofline", roofline_rows),
         ("roofline_summary", summarize),
         ("sweep", sweep_bench),
+        ("streaming", streaming_bench),
     ]
     print("name,us_per_call,derived")
     failures = 0
@@ -43,11 +81,16 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
+            lines = []
             for line in fn():
+                lines.append(line)
                 print(line, flush=True)
+            write_bench_json(name, lines, args.artifacts)
         except Exception as e:
             failures += 1
             print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            write_bench_json(name, [f"{name},0,ERROR:{type(e).__name__}"],
+                             args.artifacts, status="error")
             traceback.print_exc(file=sys.stderr)
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
     sys.exit(1 if failures else 0)

@@ -1,0 +1,160 @@
+"""Streaming update-round latency vs full retrain (ISSUE 3 tentpole).
+
+The SV-as-sufficient-statistic argument, measured: folding a live
+micro-batch via ``update_mapreduce`` trains on (new rows ∪ carried SVs)
+— a few hundred rows — while the full retrain pays for the whole
+accumulated corpus every time content drifts. Acceptance: the update
+round beats full retrain by ≥5× at 8 partitions.
+
+Also measures the multi-tenant wave: S streams folded in ONE batched
+device pass (the sweep's config axis, ``fit_mapreduce_sweep`` with
+per-job data) vs S sequential ``update_mapreduce`` calls.
+
+Standalone (forces 8 host devices, writes BENCH_streaming.json):
+
+    PYTHONPATH=src python -m benchmarks.streaming
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+HIST_ROWS = 8192      # accumulated corpus the full retrain must chew
+BATCH_ROWS = 512      # one streaming micro-batch
+NUM_FEATURES = 128
+PARTITIONS = 8
+SV_CAP = 128
+MIN_SPEEDUP = 5.0     # ISSUE 3 acceptance at 8 partitions
+
+
+from benchmarks.sweep import _problem  # shared synthetic problem
+
+
+def _cfg():
+    from repro.core import MRSVMConfig, SVMConfig
+    # gamma=0 forces max_rounds everywhere: both paths run the same
+    # number of rounds, isolating the per-round row-count advantage.
+    return MRSVMConfig(sv_capacity=SV_CAP, gamma=0.0, max_rounds=3,
+                       svm=SVMConfig(C=1.0, max_epochs=10))
+
+
+def streaming_update(n_hist: int = HIST_ROWS, n_new: int = BATCH_ROWS,
+                     d: int = NUM_FEATURES, L: int = PARTITIONS) -> List[str]:
+    """update_mapreduce on (batch ∪ SVs) vs fit_mapreduce on everything."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import fit_mapreduce, update_mapreduce
+
+    cfg = _cfg()
+    Xh, yh = _problem(n_hist, d, seed=0)
+    Xn, yn = _problem(n_new, d, seed=1)
+    model = fit_mapreduce(Xh, yh, L, cfg)          # the served model
+    Xall = jnp.concatenate([Xh, Xn])
+    yall = jnp.concatenate([yh, yn])
+
+    # warm both jits: steady-state serving latency, not trace time
+    jax.block_until_ready(update_mapreduce(model, Xn, yn, L, cfg).sv.x)
+    jax.block_until_ready(fit_mapreduce(Xall, yall, L, cfg).sv.x)
+
+    t0 = time.time()
+    upd = update_mapreduce(model, Xn, yn, L, cfg)
+    jax.block_until_ready(upd.sv.x)
+    t_update = time.time() - t0
+
+    t0 = time.time()
+    full = fit_mapreduce(Xall, yall, L, cfg)
+    jax.block_until_ready(full.sv.x)
+    t_full = time.time() - t0
+
+    speedup = t_full / max(t_update, 1e-9)
+    rows_upd = n_new + SV_CAP
+    # ISSUE 3 acceptance: ≥5× at 8 partitions.
+    assert speedup >= MIN_SPEEDUP, (
+        f"update round only {speedup:.2f}× over full retrain "
+        f"(needs ≥{MIN_SPEEDUP}× at {L} partitions)")
+    out = [
+        f"streaming_update_round,{t_update * 1e6:.0f},"
+        f"rows={rows_upd} L={L}",
+        f"streaming_full_retrain,{t_full * 1e6:.0f},"
+        f"rows={n_hist + n_new} L={L}",
+        f"streaming_speedup,0,x={speedup:.2f} "
+        f"row_ratio={(n_hist + n_new) / rows_upd:.1f} "
+        f"target>={MIN_SPEEDUP}",
+    ]
+    return out
+
+
+def streaming_wave(S: int = 4, n_new: int = BATCH_ROWS,
+                   d: int = NUM_FEATURES, L: int = PARTITIONS) -> List[str]:
+    """S tenant streams folded in one batched pass (the service's
+    multi-tenant wave) vs S sequential update_mapreduce calls."""
+    import jax
+    from repro.core import fit_mapreduce, update_mapreduce
+    from repro.serving import StreamingSVMService
+
+    cfg = _cfg()
+    models = {}
+    batches = {}
+    for s in range(S):
+        Xh, yh = _problem(2048, d, seed=10 + s)
+        models[f"t{s}"] = fit_mapreduce(Xh, yh, L, cfg)
+        batches[f"t{s}"] = _problem(n_new, d, seed=100 + s)
+
+    def run_service():
+        svc = StreamingSVMService(cfg, num_partitions=L,
+                                  max_batches_per_wave=1)
+        for name, m in models.items():
+            svc.register(name, m)
+        for name, (Xn, yn) in batches.items():
+            svc.submit(name, Xn, yn)
+        svc.run_wave()
+        jax.block_until_ready(svc.snapshot("t0").model.sv.x)
+        return svc
+
+    run_service()                                  # warm the batched jit
+    t0 = time.time()
+    svc = run_service()
+    t_batched = time.time() - t0
+    assert all(svc.snapshot(n).version == 1 for n in models)
+
+    def run_sequential():
+        outs = {}
+        for name, (Xn, yn) in batches.items():
+            outs[name] = update_mapreduce(models[name], Xn, yn, L, cfg)
+        jax.block_until_ready(outs["t0"].sv.x)
+        return outs
+
+    run_sequential()                               # warm
+    t0 = time.time()
+    run_sequential()
+    t_seq = time.time() - t0
+
+    return [
+        f"streaming_wave_batched,{t_batched * 1e6:.0f},"
+        f"S={S} one_device_pass",
+        f"streaming_wave_sequential,{t_seq * 1e6:.0f},S={S} S_updates",
+        f"streaming_wave_speedup,0,"
+        f"x={t_seq / max(t_batched, 1e-9):.2f}",
+    ]
+
+
+def streaming_bench() -> List[str]:
+    return streaming_update() + streaming_wave()
+
+
+def main():
+    from benchmarks.run import write_bench_json
+    print("name,us_per_call,derived")
+    rows = streaming_bench()
+    for line in rows:
+        print(line, flush=True)
+    path = write_bench_json("streaming", rows)
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    main()

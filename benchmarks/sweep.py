@@ -48,9 +48,10 @@ def _cfg_and_params(S):
 
 def sweep_functional(n: int = 2048, d: int = 64, S: int = NUM_CONFIGS,
                      L: int = 8) -> List[str]:
+    import dataclasses as dc
+
     import jax
     import numpy as np
-    from repro import compat
     from repro.core import fit_mapreduce, fit_mapreduce_sweep
 
     X, y = _problem(n, d)
@@ -62,11 +63,17 @@ def sweep_functional(n: int = 2048, d: int = 64, S: int = NUM_CONFIGS,
     jax.block_until_ready(res.risks)
     t_batched = time.time() - t0
 
+    # sequential workflow: the naive S-config loop bakes each config's
+    # values into a static SVMConfig — S distinct programs, S traces
+    # (mirrors sweep_sharded; a traced-params loop would now share one
+    # cached jit and measure only dispatch, not the workflow it models).
     t0 = time.time()
     seq_risks = []
     for s in range(S):
-        p_s = compat.tree_map(lambda a: a[s], params)
-        m = fit_mapreduce(X, y, L, cfg, params=p_s)
+        cfg_s = dc.replace(
+            cfg, svm=dc.replace(cfg.svm, C=float(params.C[s]),
+                                tol=float(params.tol[s])))
+        m = fit_mapreduce(X, y, L, cfg_s)
         seq_risks.append(float(m.risk))
     t_seq = time.time() - t0
 
@@ -158,9 +165,13 @@ def sweep_bench() -> List[str]:
 
 
 def main():
+    from benchmarks.run import write_bench_json
     print("name,us_per_call,derived")
-    for line in sweep_bench():
+    rows = sweep_bench()
+    for line in rows:
         print(line, flush=True)
+    path = write_bench_json("sweep", rows)
+    print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

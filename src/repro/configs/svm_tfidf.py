@@ -13,6 +13,7 @@ class SVMTfidfConfig:
     rows_per_device: int = 8192      # training rows resident per device
     C: float = 1.0
     max_epochs: int = 10
+    stream_rows_per_wave: int = 8192  # new message rows folded per serve wave
     dtype: str = "bfloat16"   # §Perf it.5: bf16 feature stream, f32 solver state
     citation: str = "Çatak 2014 (the reproduced paper)"
 

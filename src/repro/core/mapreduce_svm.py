@@ -29,6 +29,7 @@ TPU-native adaptations (see DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -163,6 +164,22 @@ def mapreduce_round(Xp: jax.Array, yp: jax.Array, maskp: jax.Array,
                        sv_count=jnp.sum(new_sv.mask))
 
 
+# Module-level jits keyed on the (hashable, frozen) cfg: repeated
+# fit_mapreduce / update_mapreduce calls with the same shapes+config hit
+# the jit cache instead of retracing per call. A per-call
+# ``jax.jit(lambda ...)`` would recompile EVERY streaming wave — the
+# trace cost then dwarfs the (new rows ∪ SVs) compute advantage the
+# incremental update exists for (benchmarks/streaming.py).
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _round_jit(Xp, yp, maskp, sv, params, cfg: MRSVMConfig) -> RoundResult:
+    return mapreduce_round(Xp, yp, maskp, sv, cfg, params=params)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _final_fit_jit(sv: SVBuffer, params, cfg: MRSVMConfig) -> BinarySVM:
+    return fit_binary(sv.x, sv.y, sv.mask, cfg.svm, params=params)
+
+
 class MapReduceSVM(NamedTuple):
     """Driver output: best reducer hypothesis (eq. 7) + final SV model."""
     w: jax.Array            # (d,) best linear hypothesis (zeros on kernel path)
@@ -195,15 +212,13 @@ def fit_mapreduce(X: jax.Array, y: jax.Array, num_partitions: int,
     maskp = jnp.pad(base_mask, (0, pad)).reshape(L, per)
 
     sv = init_sv_buffer(cfg.sv_capacity, d, X.dtype)
-    round_fn = jax.jit(lambda Xp, yp, mp, sv: mapreduce_round(
-        Xp, yp, mp, sv, cfg, params=params))
 
     best = (np.inf, None, None)
     prev_risk = np.inf
     history = []
     rounds_done = 0
     for t in range(cfg.max_rounds):
-        out = round_fn(Xp, yp, maskp, sv)
+        out = _round_jit(Xp, yp, maskp, sv, params, cfg=cfg)
         sv = out.sv
         risks = np.asarray(out.risks)
         l_star = int(np.argmin(risks))
@@ -221,7 +236,7 @@ def fit_mapreduce(X: jax.Array, y: jax.Array, num_partitions: int,
         prev_risk = r_star
 
     # Final consolidated model: retrain on SV_global alone (cascade-style).
-    final = fit_binary(sv.x, sv.y, sv.mask, cfg.svm, params=params)
+    final = _final_fit_jit(sv, params, cfg=cfg)
     return MapReduceSVM(w=best[1], b=best[2], sv=sv, final=final,
                         risk=jnp.asarray(best[0]), rounds=rounds_done,
                         history=tuple(history))
@@ -254,6 +269,7 @@ def decision_values(model: MapReduceSVM, X: jax.Array,
 def update_mapreduce(model: MapReduceSVM, X_new: jax.Array,
                      y_new: jax.Array, num_partitions: int,
                      cfg: MRSVMConfig,
+                     params: Optional[SolverParams] = None,
                      verbose: bool = False) -> MapReduceSVM:
     """Incremental model update — the paper's stated future work
     (§SONUÇ: "zaman içerisinde kendini güncelleyen eğitim veri seti
@@ -263,13 +279,24 @@ def update_mapreduce(model: MapReduceSVM, X_new: jax.Array,
     updating on a new message batch trains on (new data ∪ old SVs) —
     old non-support examples never travel, the same bandwidth argument
     as the original shuffle. Returns a fresh converged model.
+
+    Pass the same ``params`` the model was trained with (if any): the
+    carried SV alphas were solved at that kernel scale, so re-fitting
+    with the config defaults would silently change gamma/coef0/C under
+    a sweep-trained model.
     """
+    d_model = model.sv.x.shape[1]
+    if X_new.shape[1] != d_model:
+        raise ValueError(
+            f"update batch has {X_new.shape[1]} features but the model's "
+            f"SV buffer holds {d_model}-dim rows — vectorize new messages "
+            "with the SAME featurizer (hash space / idf) as training")
     X = jnp.concatenate([X_new, model.sv.x], axis=0)
     y = jnp.concatenate([y_new.astype(X_new.dtype), model.sv.y], axis=0)
     mask = jnp.concatenate([jnp.ones((X_new.shape[0],), X_new.dtype),
                             model.sv.mask], axis=0)
     return fit_mapreduce(X, y, num_partitions, cfg, mask=mask,
-                         verbose=verbose)
+                         params=params, verbose=verbose)
 
 
 # ---------------------------------------------------------------------------
@@ -341,7 +368,9 @@ def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
         if cfg.risk_loss == "hinge":
             per_ex = jnp.maximum(0.0, 1.0 - yl[:, None] * scores)
         else:
-            per_ex = (jnp.sign(scores) != jnp.sign(yl)[:, None]).astype(Xl.dtype)
+            # Shared decision convention (score >= 0 → +1) with
+            # risk_lib.zero_one_loss / predict — see that docstring.
+            per_ex = risk_lib.zero_one_loss(scores, yl[:, None]).astype(Xl.dtype)
         part = jnp.sum(per_ex * ml[:, None], axis=0)
         cnt = jnp.sum(ml)
         risks = compat.psum(part, axes) / jnp.maximum(

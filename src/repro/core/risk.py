@@ -13,7 +13,15 @@ def hinge_loss(scores: jax.Array, y: jax.Array) -> jax.Array:
 
 
 def zero_one_loss(scores: jax.Array, y: jax.Array) -> jax.Array:
-    return (jnp.sign(scores) != jnp.sign(y)).astype(scores.dtype)
+    """ℓ(h(x), y) = 1[h(x) ≠ y] with the served decision convention.
+
+    ``predict`` / ``predict_sign`` map the boundary score==0 to +1, so
+    the loss must too — ``sign(0) = 0`` would count a boundary score as
+    an error against BOTH classes, making eq. 6 risk disagree with the
+    predictions actually served.
+    """
+    pred = jnp.where(scores >= 0.0, 1.0, -1.0).astype(scores.dtype)
+    return (pred != jnp.sign(y)).astype(scores.dtype)
 
 
 def empirical_risk(scores: jax.Array, y: jax.Array,

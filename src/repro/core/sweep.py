@@ -37,6 +37,7 @@ Two execution modes mirror :mod:`repro.core.mapreduce_svm`:
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -172,57 +173,86 @@ def _run_rounds(step, svb: SVBuffer, d: int, cfg: MRSVMConfig,
 # Functional sweep driver.
 # ---------------------------------------------------------------------------
 
+# Module-level jits keyed on the frozen cfg (+ which inputs carry the
+# (S,) job axis): repeated sweep calls with the same shapes hit the jit
+# cache — the streaming service folds a wave per admission, and a
+# per-call ``jax.jit`` would retrace every wave (see the twin note in
+# repro.core.mapreduce_svm).
+@functools.partial(jax.jit, static_argnames=("cfg", "x_ax", "m_ax"))
+def _sweep_round_jit(Xp, ypb, maskp, sv_b, eff, cfg, x_ax, m_ax):
+    out = jax.vmap(
+        lambda Xq, yp, mp, sv, p: mapreduce_round(
+            Xq, yp, mp, sv, cfg, params=p),
+        in_axes=(x_ax, 0, m_ax, 0, 0))(Xp, ypb, maskp, sv_b, eff)
+    # The per-config best-reducer pick (eq. 7) happens ON DEVICE so the
+    # host transfer is (S, d), not the full (S, L, d) hypothesis tensor.
+    l_star = jnp.argmin(out.risks, axis=1)               # (S,)
+    r_sel = jnp.take_along_axis(out.risks, l_star[:, None], 1)[:, 0]
+    w_sel = jnp.take_along_axis(out.ws, l_star[:, None, None], 1)[:, 0]
+    b_sel = jnp.take_along_axis(out.bs, l_star[:, None], 1)[:, 0]
+    return out.sv, r_sel, w_sel, b_sel
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _sweep_final_jit(svb: SVBuffer, params: SolverParams, cfg):
+    return jax.vmap(
+        lambda sv, p: fit_binary(sv.x, sv.y, sv.mask, cfg.svm, params=p))(
+            svb, params)
+
+
 def fit_mapreduce_sweep(X: jax.Array, y: jax.Array, num_partitions: int,
                         cfg: MRSVMConfig, params: SolverParams,
                         mask: Optional[jax.Array] = None,
                         verbose: bool = False) -> SweepResult:
     """Run S MapReduce-SVM jobs in one batched computation.
 
-    ``X``/``mask`` are shared across configs; ``y`` is either ``(n,)``
-    (same labels for every job) or ``(S, n)`` (per-job labels — the
-    one-vs-rest folding). Per-config eq. 8 masking freezes converged
+    Every data input is either shared or carries a leading (S,) job
+    axis: ``X`` is ``(n, d)`` (shared) or ``(S, n, d)`` (per-job rows —
+    the multi-tenant streaming fold); ``y`` is ``(n,)`` or ``(S, n)``
+    (per-job labels — the one-vs-rest folding); ``mask`` is ``None``,
+    ``(n,)`` or ``(S, n)``. Per-config eq. 8 masking freezes converged
     configs (see module docstring); each config's trajectory is
     identical to a sequential ``fit_mapreduce`` call with its
-    ``params`` slice.
+    ``params``/data slice.
     """
     S = _num_configs(params)
-    n, d = X.shape
+    n, d = X.shape[-2], X.shape[-1]
     L = num_partitions
     per = -(-n // L)
     pad = L * per - n
-    Xp = jnp.pad(X, ((0, pad), (0, 0))).reshape(L, per, d)
-    yb = jnp.broadcast_to(jnp.atleast_2d(y.astype(X.dtype)), (S, n))
+    if X.ndim == 3:
+        if X.shape[0] != S:
+            raise ValueError(f"per-job X has leading axis {X.shape[0]}, "
+                             f"expected S={S}")
+        Xp = jnp.pad(X, ((0, 0), (0, pad), (0, 0))).reshape(S, L, per, d)
+        x_ax = 0
+    else:
+        Xp = jnp.pad(X, ((0, pad), (0, 0))).reshape(L, per, d)
+        x_ax = None
+    yb = jnp.broadcast_to(jnp.atleast_2d(y.astype(Xp.dtype)), (S, n))
     ypb = jnp.pad(yb, ((0, 0), (0, pad))).reshape(S, L, per)
-    base_mask = jnp.ones((n,), X.dtype) if mask is None else mask.astype(X.dtype)
-    maskp = jnp.pad(base_mask, (0, pad)).reshape(L, per)
+    base_mask = (jnp.ones((n,), Xp.dtype) if mask is None
+                 else mask.astype(Xp.dtype))
+    if base_mask.ndim == 2:
+        maskp = jnp.pad(base_mask, ((0, 0), (0, pad))).reshape(S, L, per)
+        m_ax = 0
+    else:
+        maskp = jnp.pad(base_mask, (0, pad)).reshape(L, per)
+        m_ax = None
 
-    sv0 = init_sv_buffer(cfg.sv_capacity, d, X.dtype)
+    sv0 = init_sv_buffer(cfg.sv_capacity, d, Xp.dtype)
     svb = compat.tree_map(
         lambda a: jnp.broadcast_to(a, (S,) + a.shape), sv0)
 
-    # The per-config best-reducer pick (eq. 7) happens ON DEVICE so the
-    # host transfer is (S, d), not the full (S, L, d) hypothesis tensor.
-    def _round(ypb_, sv_b, eff):
-        out = jax.vmap(lambda yp, sv, p: mapreduce_round(
-            Xp, yp, maskp, sv, cfg, params=p))(ypb_, sv_b, eff)
-        l_star = jnp.argmin(out.risks, axis=1)               # (S,)
-        r_sel = jnp.take_along_axis(out.risks, l_star[:, None], 1)[:, 0]
-        w_sel = jnp.take_along_axis(out.ws, l_star[:, None, None], 1)[:, 0]
-        b_sel = jnp.take_along_axis(out.bs, l_star[:, None], 1)[:, 0]
-        return out.sv, r_sel, w_sel, b_sel
-
-    round_fn = jax.jit(_round)
-
     def step(sv_b, eff):
-        return round_fn(ypb, sv_b, eff)
+        return _sweep_round_jit(Xp, ypb, maskp, sv_b, eff,
+                                cfg=cfg, x_ax=x_ax, m_ax=m_ax)
 
     svb, best_risk, best_w, best_b, rounds, history = _run_rounds(
         step, svb, d, cfg, params, verbose, "sweep")
 
     # Final consolidated models: retrain each config on its SV_global.
-    final = jax.jit(jax.vmap(
-        lambda sv, p: fit_binary(sv.x, sv.y, sv.mask, cfg.svm, params=p)))(
-            svb, params)
+    final = _sweep_final_jit(svb, params, cfg=cfg)
     return SweepResult(params=params, risks=jnp.asarray(best_risk),
                        ws=jnp.asarray(best_w), bs=jnp.asarray(best_b),
                        sv=svb, final=final, rounds=rounds, history=history)
@@ -306,42 +336,58 @@ def fit_one_vs_rest_sweep(X: jax.Array, y: jax.Array,
 # ---------------------------------------------------------------------------
 
 def make_sharded_sweep_round(cfg: MRSVMConfig, axis_names: Sequence[str],
-                             num_devices: int, rows_per_device: int):
+                             num_devices: int, rows_per_device: int,
+                             per_config_data: bool = False):
     """Per-device body solving S local subproblems per round.
 
     Wraps :func:`make_sharded_round`'s body in an inner ``vmap`` over
     the leading config axis of ``(sv, params)``; the shuffle becomes S
-    all-gathers batched into one collective per buffer leaf.
+    all-gathers batched into one collective per buffer leaf. With
+    ``per_config_data`` the rows/labels/mask also carry the (S,) job
+    axis — S *streams* with distinct data updating in one device pass
+    (the multi-tenant streaming wave, :mod:`repro.serving.svm_stream`).
     """
     body = make_sharded_round(cfg, axis_names, num_devices, rows_per_device)
 
     def sweep_body(Xl, yl, ml, sv_b: SVBuffer, params_b: SolverParams):
+        if per_config_data:
+            return jax.vmap(body)(Xl, yl, ml, sv_b, params_b)
         return jax.vmap(lambda sv, p: body(Xl, yl, ml, sv, p))(sv_b, params_b)
 
     return sweep_body
 
 
 def sharded_sweep_program(mesh, data_axes: Sequence[str],
-                          cfg: MRSVMConfig, rows_per_device: int):
+                          cfg: MRSVMConfig, rows_per_device: int,
+                          per_config_data: bool = False):
     """shard_map-wrapped sweep round + its partition-spec contract.
 
     Single source of the sweep round's sharding: rows sharded over the
     data axes, SV buffers and params replicated with a leading (S,)
-    config axis. Returns ``(fn, in_specs, out_specs)`` — consumed by
-    both the jitted driver (:func:`build_sharded_sweep_round`) and the
-    dry-run step builder (``launch.steps.build_svm_sweep_step``), so
-    the program the dry-run validates is the program actually run.
+    config axis; with ``per_config_data`` the row inputs are
+    ``(S, n, …)``, sharded on their SECOND axis. Returns
+    ``(fn, in_specs, out_specs)`` — consumed by the jitted driver
+    (:func:`build_sharded_sweep_round`) and the dry-run step builders
+    (``launch.steps.build_svm_sweep_step`` /
+    ``build_svm_serve_step``), so the program the dry-run validates is
+    the program actually run.
     """
     from jax.sharding import PartitionSpec as P
 
     axes = tuple(data_axes)
     ndev = int(np.prod([mesh.shape[a] for a in axes]))
-    body = make_sharded_sweep_round(cfg, axes, ndev, rows_per_device)
+    body = make_sharded_sweep_round(cfg, axes, ndev, rows_per_device,
+                                    per_config_data=per_config_data)
     row_spec = P(axes if len(axes) > 1 else axes[0])
+    if per_config_data:
+        data_spec = P(None, axes if len(axes) > 1 else axes[0])
+        in_rows = (data_spec, data_spec, data_spec)
+    else:
+        in_rows = (row_spec, row_spec, row_spec)
     rep_buf = SVBuffer(x=P(), y=P(), alpha=P(), ids=P(), mask=P())
     rep_par = SolverParams(C=P(), tol=P(), sv_threshold=P(),
                            gamma=P(), coef0=P())
-    in_specs = (row_spec, row_spec, row_spec, rep_buf, rep_par)
+    in_specs = in_rows + (rep_buf, rep_par)
     out_specs = (rep_buf, P(), P(), P())
     fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_vma=False)
@@ -349,15 +395,17 @@ def sharded_sweep_program(mesh, data_axes: Sequence[str],
 
 
 def build_sharded_sweep_round(mesh, data_axes: Sequence[str],
-                              cfg: MRSVMConfig, rows_per_device: int):
+                              cfg: MRSVMConfig, rows_per_device: int,
+                              per_config_data: bool = False):
     """jit(shard_map(...)) one batched sweep round on ``mesh``.
 
     Returns ``f(X, y, mask, sv_b, params_b) -> (sv_b', risks (S, ndev),
     ws (S, d), bs (S,))`` where ``X`` is the GLOBAL array sharded on its
-    leading axis and ``sv_b``/``params_b`` carry the replicated (S,)
-    config axis.
+    leading axis (second axis when ``per_config_data``) and
+    ``sv_b``/``params_b`` carry the replicated (S,) config axis.
     """
-    fn, _, _ = sharded_sweep_program(mesh, data_axes, cfg, rows_per_device)
+    fn, _, _ = sharded_sweep_program(mesh, data_axes, cfg, rows_per_device,
+                                     per_config_data=per_config_data)
     return jax.jit(fn)
 
 
@@ -380,11 +428,13 @@ def run_sharded_sweep(round_fn, X: jax.Array, y: jax.Array,
                       params: SolverParams,
                       verbose: bool = False) -> ShardedSweep:
     """Host round loop over :func:`build_sharded_sweep_round` with the
-    same per-config eq. 8 masking as :func:`fit_mapreduce_sweep`."""
-    n, d = X.shape
+    same per-config eq. 8 masking as :func:`fit_mapreduce_sweep`.
+    When ``round_fn`` was built with ``per_config_data``, pass
+    ``X (S, n, d)`` / ``y (S, n)`` / ``mask (S, n)``."""
+    n, d = X.shape[-2], X.shape[-1]
     S = _num_configs(params)
     if mask is None:
-        mask = jnp.ones((n,), X.dtype)
+        mask = jnp.ones(((S, n) if X.ndim == 3 else (n,)), X.dtype)
     sv0 = init_sv_buffer(cfg.sv_capacity, d, X.dtype)
     svb = compat.tree_map(lambda a: jnp.broadcast_to(a, (S,) + a.shape), sv0)
 

@@ -55,6 +55,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             if shape_name == "svm_sweep":
                 bundle = steps_lib.build_svm_sweep_step(cfg, mesh,
                                                         num_configs=8)
+            elif shape_name == "svm_serve":
+                bundle = steps_lib.build_svm_serve_step(cfg, mesh,
+                                                        num_streams=4)
             else:
                 bundle = steps_lib.build_svm_round_step(cfg, mesh)
             shape = None
@@ -174,7 +177,8 @@ def main():
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default="train_4k",
                     choices=list(("train_4k", "prefill_32k", "decode_32k",
-                                  "long_500k", "svm", "svm_sweep")))
+                                  "long_500k", "svm", "svm_sweep",
+                                  "svm_serve")))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--rules", default="baseline")
     ap.add_argument("--all", action="store_true",

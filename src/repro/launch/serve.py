@@ -1,7 +1,17 @@
-"""Production serving entry point: sharded single-token decode loop.
+"""Production serving entry points.
+
+LLM family — sharded single-token decode loop:
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --smoke --batch 4 --tokens 16
+
+svm family — streaming polarization service: micro-batches of drifting
+messages fold into each tenant's SV_global behind the async wave
+scheduler (repro.serving.svm_stream); S streams update in one batched
+device pass:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch svm-tfidf \
+        --smoke --streams 4 --waves 3
 """
 from __future__ import annotations
 
@@ -19,6 +29,68 @@ from repro.launch.steps import InputShape, build_serve_step
 from repro.models.config import smoke_variant
 
 
+def serve_svm(svm_cfg, args) -> None:
+    """Streaming polarization serve mode (``--arch svm-tfidf``)."""
+    import dataclasses as dc
+
+    from repro.core import MRSVMConfig, SVMConfig, fit_mapreduce
+    from repro.serving import StreamingSVMService
+
+    if args.smoke:
+        svm_cfg = dc.replace(svm_cfg, num_features=128, sv_capacity=64,
+                             stream_rows_per_wave=256, dtype="float32")
+    d = svm_cfg.num_features
+    rows = svm_cfg.stream_rows_per_wave
+    L = args.data_par if args.data_par > 1 else 8   # partitions (default 8)
+    cfg = MRSVMConfig(sv_capacity=svm_cfg.sv_capacity, gamma=1e-4,
+                      max_rounds=3,
+                      svm=SVMConfig(C=svm_cfg.C,
+                                    max_epochs=svm_cfg.max_epochs))
+    dt = jnp.dtype(svm_cfg.dtype)
+
+    def batch(stream: int, wave: int, drift: float = 0.4):
+        """Synthetic drifting message batch: stream s's true separator
+        rotates steadily along a per-stream drift direction."""
+        kx = jax.random.PRNGKey(1000 * stream + wave)
+        w0 = jax.random.normal(jax.random.PRNGKey(stream), (d,))
+        wd = jax.random.normal(jax.random.PRNGKey(500 + stream), (d,))
+        w = w0 + drift * wave * wd
+        X = jax.random.normal(kx, (rows, d), dt)
+        y = jnp.sign((X @ w).astype(jnp.float32)).astype(dt)
+        return X, y
+
+    svc = StreamingSVMService(cfg, num_partitions=L,
+                              max_batches_per_wave=args.streams)
+    print(f"svm-serve: {args.streams} streams × {rows} rows/wave, "
+          f"{d} features, {L} partitions")
+    for s in range(args.streams):
+        X0, y0 = batch(s, 0)
+        svc.register(f"stream{s}", fit_mapreduce(X0, y0, L, cfg))
+
+    svc.start()
+    for wave in range(1, args.waves + 1):
+        batches = [batch(s, wave) for s in range(args.streams)]
+        stale = [float(jnp.mean(svc.predict(f"stream{s}", X) == y))
+                 for s, (X, y) in enumerate(batches)]
+        t0 = time.time()
+        for s, (X, y) in enumerate(batches):
+            svc.submit(f"stream{s}", X, y)
+        deadline = time.time() + 300
+        while any(svc.snapshot(f"stream{s}").version < wave
+                  for s in range(args.streams)):
+            if svc.scheduler_error is not None or time.time() > deadline:
+                raise RuntimeError(
+                    f"wave {wave} never folded") from svc.scheduler_error
+            time.sleep(0.01)
+        fresh = [float(jnp.mean(svc.predict(f"stream{s}", X) == y))
+                 for s, (X, y) in enumerate(batches)]
+        print(f"wave {wave}: stale acc={sum(stale)/len(stale):.3f} → "
+              f"folded acc={sum(fresh)/len(fresh):.3f} "
+              f"({time.time() - t0:.2f}s)")
+    svc.stop()
+    print(svc.throughput_report())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -28,9 +100,15 @@ def main():
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--data-par", type=int, default=1)
     ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--streams", type=int, default=4,
+                    help="svm family: tenant streams served")
+    ap.add_argument("--waves", type=int, default=3,
+                    help="svm family: update waves to run")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
+    if getattr(cfg, "family", None) == "svm":
+        return serve_svm(cfg, args)
     if args.smoke:
         cfg = smoke_variant(cfg)
     mesh = make_host_mesh(args.data_par, args.model_par)

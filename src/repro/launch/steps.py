@@ -281,3 +281,50 @@ def build_svm_sweep_step(svm_cfg, mesh, num_configs: int) -> StepBundle:
         out_shardings=out_specs,
         donate_argnums=(),
         model=None)
+
+
+def build_svm_serve_step(svm_cfg, mesh, num_streams: int = 4) -> StepBundle:
+    """One streaming update WAVE on the production mesh: S tenant
+    streams each fold (new rows ∪ carried SVs) in a single jitted
+    device pass — the sweep program with per-stream data
+    (repro.core.sweep.sharded_sweep_program(per_config_data=True),
+    the device-side shape of repro.serving.svm_stream's batched fold).
+    Rows per stream = stream_rows_per_wave new messages + the carried
+    SV capacity, sharded over the data axes."""
+    import numpy as np
+    from repro.core.mapreduce_svm import MRSVMConfig, SVBuffer
+    from repro.core.svm import SolverParams, SVMConfig
+    from repro.core.sweep import sharded_sweep_program
+
+    axes = batch_axes(mesh)
+    ndev = int(np.prod([mesh.shape[a] for a in axes]))
+    cap = svm_cfg.sv_capacity
+    wave_rows = svm_cfg.stream_rows_per_wave + cap
+    per = -(-wave_rows // ndev)
+    n, d = ndev * per, svm_cfg.num_features
+    S = num_streams
+    mr_cfg = MRSVMConfig(
+        sv_capacity=cap,
+        svm=SVMConfig(C=svm_cfg.C, max_epochs=svm_cfg.max_epochs))
+    fn, in_specs, out_specs = sharded_sweep_program(
+        mesh, axes, mr_cfg, per, per_config_data=True)
+
+    dt = jnp.dtype(svm_cfg.dtype)
+    f32 = jnp.float32
+    args = (jax.ShapeDtypeStruct((S, n, d), dt),
+            jax.ShapeDtypeStruct((S, n), dt),
+            jax.ShapeDtypeStruct((S, n), dt),
+            SVBuffer(
+                x=jax.ShapeDtypeStruct((S, cap, d), dt),
+                y=jax.ShapeDtypeStruct((S, cap), dt),
+                alpha=jax.ShapeDtypeStruct((S, cap), dt),
+                ids=jax.ShapeDtypeStruct((S, cap), jnp.int32),
+                mask=jax.ShapeDtypeStruct((S, cap), dt)),
+            SolverParams(*(jax.ShapeDtypeStruct((S,), f32)
+                           for _ in range(5))))
+    return StepBundle(
+        fn=fn, args=args,
+        in_shardings=in_specs,
+        out_shardings=out_specs,
+        donate_argnums=(),
+        model=None)

@@ -1,1 +1,3 @@
 from repro.serving.scheduler import BatchScheduler, Request, WaveStats
+from repro.serving.svm_stream import (MicroBatch, ModelSnapshot,
+                                      StreamingSVMService, StreamWaveStats)

@@ -109,16 +109,19 @@ class BatchScheduler:
         out = [[] for _ in batch]
         live = np.array([True] * B)
         live[len(batch):] = False
+        done_at = np.zeros(B)            # admit → slot's EOS step, per slot
         tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
         steps = 0
         while live.any() and steps < max_new:
             tok_np = np.asarray(tok)[:, 0]
+            now = time.time()
             for j, r in enumerate(batch):
                 if live[j]:
                     out[j].append(int(tok_np[j]))
                     if (r.eos_id is not None and tok_np[j] == r.eos_id) \
                             or len(out[j]) >= r.max_new_tokens:
                         live[j] = False
+                        done_at[j] = now
             if not live.any():
                 break
             logits, state = self._step(self.params, state, tok)
@@ -128,7 +131,10 @@ class BatchScheduler:
         wall = time.time() - t0
         for j, r in enumerate(batch):
             r.output = out[j]
-            r.latency_s = wall
+            # Per-slot latency: a request is done at its own EOS step,
+            # not when the whole wave drains — stamping every slot with
+            # the wave wall time made throughput uniformly pessimistic.
+            r.latency_s = (done_at[j] - t0) if done_at[j] > 0 else wall
             self.done.append(r)
         self.stats.append(WaveStats(wave=wave, batch=len(batch),
                                     prompt_steps=max_prompt,
@@ -137,7 +143,9 @@ class BatchScheduler:
     def throughput_report(self) -> Dict[str, float]:
         total_tok = sum(len(r.output or []) for r in self.done)
         total_s = sum(s.wall_s for s in self.stats)
+        lats = [r.latency_s for r in self.done]
         return {"requests": len(self.done), "tokens": total_tok,
                 "wall_s": round(total_s, 3),
                 "tok_per_s": round(total_tok / max(total_s, 1e-9), 1),
+                "mean_latency_s": round(float(np.mean(lats)), 4) if lats else 0.0,
                 "waves": len(self.stats)}

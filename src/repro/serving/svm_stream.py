@@ -1,0 +1,435 @@
+"""Streaming polarization service: fold live message batches into
+SV_global behind an async wave scheduler (the paper's §SONUÇ future
+work, productionized).
+
+The converged global SV set is the model's sufficient statistic
+(CloudSVM arXiv:1301.0082, binary MapReduce-SVM arXiv:1312.4108): a
+drifted month of messages is absorbed by retraining on
+(new batch ∪ carried SVs) — old non-support rows never travel, the
+same bandwidth argument as the MapReduce shuffle itself.
+
+Architecture (DESIGN.md §9):
+
+  submit  : vectorized micro-batches queue per tenant *stream*
+  admit   : the scheduler pops ≤ ``max_batches_per_wave`` batches per
+            stream into one *wave*
+  fold    : each admitted stream retrains on (its new rows ∪ its
+            carried SVs) via ``update_mapreduce``; when several streams
+            are admitted, the wave rides the sweep machinery — S
+            streams become S jobs on the config/batch axis of
+            :func:`~repro.core.sweep.fit_mapreduce_sweep` (per-job X /
+            y / mask + stacked per-stream ``SolverParams``), so all S
+            tenants update in ONE jitted device pass; a single admitted
+            stream falls back to the plain round
+  swap    : ``predict`` / ``decision_values`` keep serving from a
+            double-buffered immutable :class:`ModelSnapshot`; the new
+            model is fully materialized on device
+            (``block_until_ready``) BEFORE the reference swap, so a
+            reader never observes a half-updated model
+
+Per-slot accounting mirrors the corrected decode scheduler
+(:mod:`repro.serving.scheduler`): every micro-batch records submit →
+admit → completion, so queue wait and fold service time are separable
+and throughput reports aren't uniformly pessimistic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.core.mapreduce_svm import (MapReduceSVM, MRSVMConfig,
+                                      decision_values as mr_decision_values,
+                                      predict as mr_predict,
+                                      update_mapreduce)
+from repro.core.svm import SolverParams
+from repro.core.sweep import fit_mapreduce_sweep, stack_params
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    """One vectorized message micro-batch queued for a stream."""
+    uid: int
+    stream: str
+    X: Optional[jax.Array]      # dropped (None) once the batch folds
+    y: Optional[jax.Array]
+    # per-slot accounting (stamped by the service):
+    submitted_s: float = 0.0
+    admitted_s: float = 0.0
+    completed_s: float = 0.0
+    wave: int = -1
+
+    @property
+    def queue_s(self) -> float:
+        """Time spent waiting for admission."""
+        return max(self.admitted_s - self.submitted_s, 0.0)
+
+    @property
+    def latency_s(self) -> float:
+        """Submit → the batch's model swap (NOT the whole-wave wall)."""
+        return max(self.completed_s - self.submitted_s, 0.0)
+
+
+class ModelSnapshot(NamedTuple):
+    """Immutable served state of one stream.
+
+    Snapshots are never mutated: a fold builds a NEW snapshot off-line
+    (double buffer) and the service swaps the reference atomically.
+    ``version`` increments per swap — readers can tag results with the
+    exact model that produced them.
+    """
+    model: MapReduceSVM
+    params: Optional[SolverParams]
+    version: int
+
+
+@dataclasses.dataclass
+class StreamWaveStats:
+    """One admission wave of the streaming service."""
+    wave: int
+    streams: int        # tenants folded this wave
+    batches: int        # micro-batches admitted
+    rows: int           # new message rows folded
+    batched: bool       # True: one jitted sweep pass; False: plain round
+    wall_s: float
+
+
+class StreamingSVMService:
+    """Multi-tenant streaming polarization service.
+
+    One service hosts many tenant *streams* sharing a static
+    :class:`MRSVMConfig` shell (shapes / kernel family / loop bounds);
+    per-stream hyper-params ride the traced :class:`SolverParams`
+    pytree, which is exactly what lets S streams update in one batched
+    device pass (DESIGN.md §8/§9).
+    """
+
+    def __init__(self, cfg: MRSVMConfig, num_partitions: int = 8,
+                 max_batches_per_wave: int = 4,
+                 keep_history: bool = False):
+        self.cfg = cfg
+        self.L = num_partitions
+        self.max_batches_per_wave = max_batches_per_wave
+        self.keep_history = keep_history
+        self._snapshots: Dict[str, ModelSnapshot] = {}
+        self._queues: Dict[str, List[MicroBatch]] = {}
+        self._history: Dict[str, Dict[int, ModelSnapshot]] = {}
+        self._lock = threading.Lock()          # queues + snapshot refs
+        self._cv = threading.Condition(self._lock)
+        self._wave_lock = threading.Lock()     # serializes folds
+        self._uid = 0
+        self._wave = 0
+        self.done: List[MicroBatch] = []
+        self.stats: List[StreamWaveStats] = []
+        self._thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+        self._scheduler_error: Optional[BaseException] = None
+
+    # -- stream lifecycle --------------------------------------------------
+
+    def register(self, stream: str, model: MapReduceSVM,
+                 params: Optional[SolverParams] = None) -> ModelSnapshot:
+        """Install a stream's initial model (its version-0 snapshot).
+
+        ``params`` must be the :class:`SolverParams` the model was
+        trained with (sweep-selected streams), else the config defaults
+        are assumed — the same contract as :func:`update_mapreduce`.
+        """
+        snap = ModelSnapshot(model=model, params=params, version=0)
+        with self._lock:
+            if stream in self._snapshots:
+                raise ValueError(f"stream {stream!r} already registered")
+            self._snapshots[stream] = snap
+            self._queues[stream] = []
+            if self.keep_history:
+                self._history[stream] = {0: snap}
+        return snap
+
+    def streams(self) -> List[str]:
+        with self._lock:
+            return list(self._snapshots)
+
+    def snapshot(self, stream: str) -> ModelSnapshot:
+        """The stream's current served snapshot (atomic reference read)."""
+        with self._lock:
+            return self._snapshots[stream]
+
+    def history(self, stream: str) -> Dict[int, ModelSnapshot]:
+        """version → snapshot (only populated with ``keep_history``)."""
+        with self._lock:
+            return dict(self._history.get(stream, {}))
+
+    # -- ingest ------------------------------------------------------------
+
+    def submit(self, stream: str, X: jax.Array, y: jax.Array) -> int:
+        """Queue one vectorized micro-batch; returns its uid."""
+        X = jnp.asarray(X)
+        y = jnp.asarray(y)
+        if X.ndim != 2 or y.shape[0] != X.shape[0]:
+            raise ValueError(f"micro-batch must be (n, d) rows with (n,) "
+                             f"labels; got X{X.shape} y{y.shape}")
+        with self._cv:
+            if stream not in self._snapshots:
+                raise KeyError(f"unregistered stream {stream!r}")
+            d_model = self._snapshots[stream].model.sv.x.shape[1]
+            if X.shape[1] != d_model:
+                raise ValueError(
+                    f"stream {stream!r} serves {d_model}-dim features but "
+                    f"the batch has {X.shape[1]} — vectorize with the same "
+                    "featurizer as training")
+            self._uid += 1
+            mb = MicroBatch(uid=self._uid, stream=stream, X=X, y=y,
+                            submitted_s=time.time())
+            self._queues[stream].append(mb)
+            self._cv.notify_all()
+            return mb.uid
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(q) for q in self._queues.values())
+
+    # -- serve -------------------------------------------------------------
+
+    def decision_values(self, stream: str, X: jax.Array) -> jax.Array:
+        """Scores from the stream's CURRENT snapshot. The snapshot
+        reference is read once, so an update swapping mid-call can never
+        yield a half-updated model (snapshots are immutable)."""
+        snap = self.snapshot(stream)
+        return mr_decision_values(snap.model, X, self.cfg, params=snap.params)
+
+    def predict(self, stream: str, X: jax.Array,
+                with_version: bool = False):
+        """±1 polarization labels from the current snapshot."""
+        snap = self.snapshot(stream)
+        pred = mr_predict(snap.model, X, self.cfg, params=snap.params)
+        return (pred, snap.version) if with_version else pred
+
+    # -- wave admission + fold --------------------------------------------
+
+    def _admit(self) -> Dict[str, Tuple[ModelSnapshot, List[MicroBatch]]]:
+        """Pop ≤ max_batches_per_wave batches per stream, pairing each
+        admitted stream with the snapshot whose SVs the fold carries."""
+        now = time.time()
+        admitted: Dict[str, Tuple[ModelSnapshot, List[MicroBatch]]] = {}
+        with self._lock:
+            for stream, q in self._queues.items():
+                if not q:
+                    continue
+                take, self._queues[stream] = (q[:self.max_batches_per_wave],
+                                              q[self.max_batches_per_wave:])
+                for mb in take:
+                    mb.admitted_s = now
+                    mb.wave = self._wave
+                admitted[stream] = (self._snapshots[stream], take)
+        return admitted
+
+    def _swap(self, stream: str, model: MapReduceSVM,
+              params: Optional[SolverParams]) -> ModelSnapshot:
+        """Atomically publish a fully-materialized new snapshot."""
+        jax.block_until_ready((model.sv, model.final, model.w, model.b))
+        with self._lock:
+            old = self._snapshots[stream]
+            snap = ModelSnapshot(model=model, params=params,
+                                 version=old.version + 1)
+            self._snapshots[stream] = snap
+            if self.keep_history:
+                self._history[stream][snap.version] = snap
+        return snap
+
+    def run_wave(self) -> Optional[StreamWaveStats]:
+        """Admit one wave and fold it. Returns its stats, or ``None``
+        when every queue was empty. Thread-safe; folds are serialized."""
+        with self._wave_lock:
+            t0 = time.time()
+            admitted = self._admit()
+            if not admitted:
+                return None
+            wave_id = self._wave
+            self._wave += 1
+
+            names = sorted(admitted)
+            joined = {}
+            for s in names:
+                snap, batches = admitted[s]
+                Xn = jnp.concatenate([mb.X for mb in batches], axis=0)
+                yn = jnp.concatenate([mb.y.astype(Xn.dtype)
+                                      for mb in batches], axis=0)
+                joined[s] = (snap, batches, Xn, yn)
+
+            if len(names) == 1:
+                # single tenant: the plain incremental round
+                s = names[0]
+                snap, batches, Xn, yn = joined[s]
+                model = update_mapreduce(snap.model, Xn, yn, self.L,
+                                         self.cfg, params=snap.params)
+                self._swap(s, model, snap.params)
+            else:
+                self._fold_batched(joined, names)
+
+            now = time.time()
+            n_batches = n_rows = 0
+            for s in names:
+                _, batches, Xn, _ = joined[s]
+                n_batches += len(batches)
+                n_rows += int(Xn.shape[0])
+                for mb in batches:
+                    mb.completed_s = now
+                    # Folded rows live on in SV_global (or were
+                    # discarded as non-support); keeping every
+                    # historical batch pinned in ``done`` would grow
+                    # memory without bound in a long-running service —
+                    # only the accounting fields survive.
+                    mb.X = mb.y = None
+                    self.done.append(mb)
+            st = StreamWaveStats(wave=wave_id, streams=len(names),
+                                 batches=n_batches, rows=n_rows,
+                                 batched=len(names) > 1,
+                                 wall_s=now - t0)
+            self.stats.append(st)
+            return st
+
+    def _fold_batched(self, joined, names) -> None:
+        """S admitted streams = S jobs on the sweep's config/batch axis:
+        per-job (X, y, mask) + stacked per-stream SolverParams, one
+        jitted device pass (DESIGN.md §9)."""
+        cap = self.cfg.sv_capacity
+        d = joined[names[0]][0].model.sv.x.shape[1]
+        n_max = max(int(joined[s][2].shape[0]) for s in names) + cap
+
+        Xs, ys, ms, ps = [], [], [], []
+        for s in names:
+            snap, _, Xn, yn = joined[s]
+            sv = snap.model.sv
+            n_new = int(Xn.shape[0])
+            pad = n_max - n_new - cap
+            Xs.append(jnp.concatenate(
+                [Xn, sv.x, jnp.zeros((pad, d), Xn.dtype)], axis=0))
+            ys.append(jnp.concatenate(
+                [yn, sv.y, jnp.zeros((pad,), Xn.dtype)], axis=0))
+            ms.append(jnp.concatenate(
+                [jnp.ones((n_new,), Xn.dtype), sv.mask,
+                 jnp.zeros((pad,), Xn.dtype)], axis=0))
+            ps.append(snap.params if snap.params is not None
+                      else self.cfg.svm.params())
+        Xb = jnp.stack(Xs)                       # (S, n_max, d)
+        yb = jnp.stack(ys)                       # (S, n_max)
+        mb_ = jnp.stack(ms)                      # (S, n_max)
+        params_b = stack_params(ps)
+
+        res = fit_mapreduce_sweep(Xb, yb, self.L, self.cfg, params_b,
+                                  mask=mb_)
+        for i, s in enumerate(names):
+            snap = joined[s][0]
+            model = MapReduceSVM(
+                w=res.ws[i], b=res.bs[i],
+                sv=compat.tree_map(lambda a: a[i], res.sv),
+                final=compat.tree_map(lambda a: a[i], res.final),
+                risk=res.risks[i], rounds=int(res.rounds[i]), history=())
+            self._swap(s, model, snap.params)
+
+    def drain(self) -> int:
+        """Run waves until every queue is empty; returns waves run."""
+        waves = 0
+        while self.run_wave() is not None:
+            waves += 1
+        return waves
+
+    # -- async scheduler ---------------------------------------------------
+
+    def start(self, idle_poll_s: float = 0.05) -> None:
+        """Start the background wave scheduler: batches submitted after
+        this fold in continuously without blocking the submitter."""
+        with self._lock:
+            if self._thread is not None:
+                return
+            self._stop_evt.clear()
+            self._scheduler_error = None
+            self._thread = threading.Thread(
+                target=self._scheduler_loop, args=(idle_poll_s,),
+                name="svm-stream-scheduler", daemon=True)
+            self._thread.start()
+
+    @property
+    def scheduler_error(self) -> Optional[BaseException]:
+        """The exception that killed the background scheduler, if any."""
+        return self._scheduler_error
+
+    def _scheduler_loop(self, idle_poll_s: float) -> None:
+        while not self._stop_evt.is_set():
+            with self._cv:
+                while (not self._stop_evt.is_set()
+                       and not any(self._queues.values())):
+                    self._cv.wait(timeout=idle_poll_s)
+                if self._stop_evt.is_set():
+                    return
+            try:
+                self.run_wave()
+            except BaseException as e:
+                # A silently dead daemon thread would leave queues
+                # growing and readers on the stale snapshot forever —
+                # record the error (wait_idle/stop re-raise it) and
+                # shut the loop down loudly.
+                self._scheduler_error = e
+                self._stop_evt.set()
+                import traceback
+                traceback.print_exc()
+                return
+
+    def wait_idle(self, timeout_s: float = 120.0,
+                  poll_s: float = 0.01) -> bool:
+        """Block until every queue is empty AND no wave is in flight.
+        Only meaningful while the background scheduler is running (an
+        idle service with queued work but no scheduler never drains —
+        returns False at the timeout). Raises if the scheduler died."""
+        deadline = time.time() + timeout_s
+        while time.time() < deadline:
+            if self._scheduler_error is not None:
+                raise RuntimeError(
+                    "streaming scheduler died") from self._scheduler_error
+            if self.pending() == 0 and not self._wave_lock.locked():
+                return True
+            time.sleep(poll_s)
+        return False
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the scheduler thread; optionally fold what's queued.
+        Re-raises the error that killed the scheduler, if any."""
+        thread = self._thread
+        if thread is None:
+            return
+        self._stop_evt.set()
+        with self._cv:
+            self._cv.notify_all()
+        thread.join(timeout=60)
+        self._thread = None
+        if self._scheduler_error is not None:
+            raise RuntimeError(
+                "streaming scheduler died") from self._scheduler_error
+        if drain:
+            self.drain()
+
+    # -- reporting ---------------------------------------------------------
+
+    def throughput_report(self) -> Dict[str, float]:
+        lats = [mb.latency_s for mb in self.done]
+        queues = [mb.queue_s for mb in self.done]
+        rows = sum(s.rows for s in self.stats)
+        wall = sum(s.wall_s for s in self.stats)
+        return {
+            "batches": len(self.done),
+            "rows": rows,
+            "waves": len(self.stats),
+            "wall_s": round(wall, 3),
+            "rows_per_s": round(rows / max(wall, 1e-9), 1),
+            "mean_latency_s": round(float(np.mean(lats)), 4) if lats else 0.0,
+            "p95_latency_s": (round(float(np.percentile(lats, 95)), 4)
+                              if lats else 0.0),
+            "mean_queue_s": (round(float(np.mean(queues)), 4)
+                             if queues else 0.0),
+        }
