@@ -4,18 +4,34 @@ writes each bench's rows as a machine-readable
 ``benchmarks/artifacts/BENCH_<name>.json`` (uploaded from CI so the
 perf trajectory is tracked across PRs).
 
-    PYTHONPATH=src python -m benchmarks.run [--only tableX]
+    PYTHONPATH=src python -m benchmarks.run [--only sweep,streaming]
+
+CI perf gate (ISSUE 4 satellite)::
+
+    python -m benchmarks.run --only sweep,streaming,shuffle_overlap \
+        --artifacts /tmp/bench-fresh --check-regression
+
+runs the selected benches into a FRESH artifact dir and compares them
+against the committed ``benchmarks/artifacts/`` baselines, failing on a
+>25% slowdown of any tracked metric. Tracked metrics are the
+machine-relative ``x=<speedup>`` ratios embedded in ``derived`` —
+absolute microseconds vary wildly across runners, ratios don't; pass
+``--abs`` to additionally gate raw ``us_per_call`` rows (same-machine
+comparisons only).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import re
 import sys
 import time
 import traceback
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+_RATIO_RE = re.compile(r"(?:^|\s)x=([0-9.]+)")
 
 
 def parse_rows(lines) -> list:
@@ -45,12 +61,101 @@ def write_bench_json(bench: str, lines, out_dir: str = None,
     return path
 
 
+# ---------------------------------------------------------------------------
+# Regression gate against committed baselines.
+# ---------------------------------------------------------------------------
+
+def _tracked_metrics(record: dict, with_abs: bool) -> dict:
+    """name → (kind, value) for every gated metric of one BENCH json.
+
+    ``ratio`` metrics are the ``x=<float>`` speedups parsed from
+    ``derived`` (higher is better); ``us`` metrics are positive
+    ``us_per_call`` timings (lower is better, only with ``--abs``).
+    """
+    metrics = {}
+    for row in record.get("rows", []):
+        m = _RATIO_RE.search(row.get("derived") or "")
+        if m:
+            metrics[row["name"]] = ("ratio", float(m.group(1)))
+        elif with_abs and (row.get("us_per_call") or 0) > 0:
+            metrics[row["name"]] = ("us", float(row["us_per_call"]))
+    return metrics
+
+
+def check_regressions(fresh_dir: str, baseline_dir: str,
+                      threshold: float = 0.25,
+                      with_abs: bool = False) -> int:
+    """Compare fresh BENCH_*.json against committed baselines.
+
+    Returns the number of regressions (>threshold slowdown of a
+    tracked metric). Benches present on only one side are reported but
+    don't fail — new benches gain a baseline when their json is
+    committed.
+    """
+    import glob
+    failures = 0
+    fresh_files = sorted(glob.glob(os.path.join(fresh_dir, "BENCH_*.json")))
+    if not fresh_files:
+        print(f"[perf-gate] no fresh BENCH_*.json under {fresh_dir}")
+        return 1
+    for path in fresh_files:
+        name = os.path.basename(path)
+        base_path = os.path.join(baseline_dir, name)
+        if not os.path.exists(base_path):
+            print(f"[perf-gate] {name}: no committed baseline — skipped")
+            continue
+        with open(path) as f:
+            fresh = json.load(f)
+        with open(base_path) as f:
+            base = json.load(f)
+        if fresh.get("status") != "ok":
+            print(f"[perf-gate] {name}: fresh run status="
+                  f"{fresh.get('status')} — FAIL")
+            failures += 1
+            continue
+        fm = _tracked_metrics(fresh, with_abs)
+        bm = _tracked_metrics(base, with_abs)
+        for metric, (kind, bval) in sorted(bm.items()):
+            if metric not in fm or fm[metric][0] != kind:
+                print(f"[perf-gate] {name}:{metric}: missing from fresh "
+                      "run — FAIL")
+                failures += 1
+                continue
+            fval = fm[metric][1]
+            # slowdown fraction: ratios shrink, timings grow
+            slow = (bval / max(fval, 1e-9) - 1.0) if kind == "ratio" \
+                else (fval / max(bval, 1e-9) - 1.0)
+            verdict = "FAIL" if slow > threshold else "ok"
+            print(f"[perf-gate] {name}:{metric} [{kind}] baseline={bval:.2f} "
+                  f"fresh={fval:.2f} slowdown={slow:+.0%} {verdict}")
+            if slow > threshold:
+                failures += 1
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters")
     ap.add_argument("--artifacts", default=ARTIFACT_DIR,
                     help="directory for BENCH_<name>.json records")
+    ap.add_argument("--check-regression", action="store_true",
+                    help="after running, gate fresh artifacts against "
+                         "the committed --baseline-dir (fails on >"
+                         "--threshold slowdown of any tracked metric)")
+    ap.add_argument("--baseline-dir", default=ARTIFACT_DIR,
+                    help="committed baseline BENCH_*.json directory")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed fractional slowdown (default 0.25)")
+    ap.add_argument("--abs", action="store_true",
+                    help="also gate absolute us_per_call rows (only "
+                         "meaningful comparing runs of one machine)")
     args = ap.parse_args()
+    if args.check_regression and \
+            os.path.abspath(args.artifacts) == os.path.abspath(
+                args.baseline_dir):
+        ap.error("--check-regression would overwrite its own baselines; "
+                 "pass a fresh --artifacts dir")
 
     from benchmarks.tables import (table5_dataset, table6_confusion2,
                                    table7_rank2, table8_confusion3,
@@ -60,6 +165,7 @@ def main() -> None:
     from benchmarks.roofline import roofline_rows, summarize
     from benchmarks.sweep import sweep_bench
     from benchmarks.streaming import streaming_bench
+    from benchmarks.shuffle_overlap import shuffle_overlap_bench
 
     benches = [
         ("table5", table5_dataset),
@@ -73,11 +179,13 @@ def main() -> None:
         ("roofline_summary", summarize),
         ("sweep", sweep_bench),
         ("streaming", streaming_bench),
+        ("shuffle_overlap", shuffle_overlap_bench),
     ]
+    only = [s.strip() for s in args.only.split(",")] if args.only else None
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in benches:
-        if args.only and args.only not in name:
+        if only and not any(s in name for s in only):
             continue
         t0 = time.time()
         try:
@@ -93,6 +201,9 @@ def main() -> None:
                              args.artifacts, status="error")
             traceback.print_exc(file=sys.stderr)
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if args.check_regression:
+        failures += check_regressions(args.artifacts, args.baseline_dir,
+                                      args.threshold, args.abs)
     sys.exit(1 if failures else 0)
 
 

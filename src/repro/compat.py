@@ -27,6 +27,7 @@ import inspect
 from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -237,3 +238,71 @@ def all_gather(x, axis_names, *, axis: int = 0, tiled: bool = False):
     name = tuple(axis_names) if not isinstance(axis_names, str) \
         else axis_names
     return jax.lax.all_gather(x, name, axis=axis, tiled=tiled)
+
+
+def axis_size(axis_names) -> int:
+    """Product of the named manual-axis sizes (trace-time constant)."""
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    n = 1
+    for a in axis_names:
+        n *= jax.lax.psum(1, a)
+    return n
+
+
+def ppermute(x, axis_names, perm):
+    """``jax.lax.ppermute`` accepting a tuple of axis names.
+
+    ``perm`` is over the row-major FLATTENED index of ``axis_names``
+    (matching :func:`axis_index`). Newer JAX takes the tuple directly;
+    on versions that reject multi-name ppermute the only shape this
+    module needs — a cyclic shift of the flattened ring — is
+    reconstructed from per-axis permutes (see :func:`ring_shift`).
+    """
+    if isinstance(axis_names, str) or len(tuple(axis_names)) == 1:
+        name = axis_names if isinstance(axis_names, str) \
+            else tuple(axis_names)[0]
+        return jax.lax.ppermute(x, name, perm)
+    return jax.lax.ppermute(x, tuple(axis_names), perm)
+
+
+def ring_shift(tree: Any, axis_names) -> Any:
+    """Send each device's pytree to its flattened-ring successor.
+
+    Device ``i`` (row-major flattened index over ``axis_names``)
+    receives the value of device ``i-1 mod N`` — one stage of the
+    ring-pipelined SV shuffle. Tries the flattened multi-axis
+    ``ppermute`` first; where the installed JAX only permutes a single
+    named axis, the same ring is built from a cyclic shift on the
+    innermost axis plus a wrap-correcting shift on the outer axes:
+    only the innermost-last devices take the outer-shifted value, so
+    exactly one logical hop happens either way (at 2× wire cost on
+    those versions — correctness over bandwidth).
+    """
+    axes = tuple((axis_names,) if isinstance(axis_names, str)
+                 else axis_names)
+    n = axis_size(axes)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    if len(axes) == 1:
+        return tree_map(lambda x: jax.lax.ppermute(x, axes[0], perm), tree)
+    try:
+        return tree_map(lambda x: jax.lax.ppermute(x, axes, perm), tree)
+    except (TypeError, ValueError, NotImplementedError, KeyError):
+        pass
+    # Fallback: row-major ring = inner-axis shift, plus an outer-ring
+    # shift taken only by the wrapping (inner-last → inner-first)
+    # devices. The outer correction is itself a flattened ring over the
+    # remaining axes, so the decomposition recurses until single-name
+    # ppermutes remain.
+    inner = axes[-1]
+    inner_n = jax.lax.psum(1, inner)
+    inner_perm = [(i, (i + 1) % inner_n) for i in range(inner_n)]
+    outer = axes[:-1]
+    inner_idx = jax.lax.axis_index(inner)
+
+    def shift_one(x):
+        stepped = jax.lax.ppermute(x, inner, inner_perm)
+        wrapped = ring_shift(stepped, outer)
+        return jnp.where(inner_idx == 0, wrapped, stepped)
+
+    return tree_map(shift_one, tree)

@@ -15,6 +15,8 @@ class SVMTfidfConfig:
     max_epochs: int = 10
     stream_rows_per_wave: int = 8192  # new message rows folded per serve wave
     dtype: str = "bfloat16"   # §Perf it.5: bf16 feature stream, f32 solver state
+    shuffle_impl: str = "ring"  # SV merge transport (DESIGN.md §10);
+    #                             'allgather' keeps the monolithic collective
     citation: str = "Çatak 2014 (the reproduced paper)"
 
 

@@ -12,9 +12,12 @@ from repro.core.multiclass import (OneVsOneSVM, OneVsRestSVM,
                                    confusion_matrix, fit_one_vs_one,
                                    fit_one_vs_rest)
 from repro.core.risk import converged, empirical_risk, hinge_loss, zero_one_loss
-from repro.core.sweep import (ShardedSweep, SweepOneVsRest, SweepResult,
-                              build_sharded_sweep_round, fit_mapreduce_sweep,
-                              fit_one_vs_rest_sweep, make_sharded_sweep_round,
+from repro.core.sweep import (DedupChunk, ShardedSweep, SweepOneVsRest,
+                              SweepResult, build_sharded_sweep_round,
+                              dedup_candidates, dedup_unique_cap,
+                              expand_chunk, expand_sweep_sv,
+                              fit_mapreduce_sweep, fit_one_vs_rest_sweep,
+                              init_sharded_sweep_sv, make_sharded_sweep_round,
                               predict_sweep, run_sharded_sweep, stack_params,
                               sweep_decision_values, sweep_grid)
 
@@ -28,9 +31,11 @@ __all__ = [
     "OneVsOneSVM", "OneVsRestSVM", "confusion_matrix", "fit_one_vs_one",
     "fit_one_vs_rest", "converged", "empirical_risk", "hinge_loss",
     "zero_one_loss",
-    "ShardedSweep", "SweepOneVsRest", "SweepResult",
-    "build_sharded_sweep_round", "fit_mapreduce_sweep",
-    "fit_one_vs_rest_sweep", "make_sharded_sweep_round", "predict_sweep",
+    "DedupChunk", "ShardedSweep", "SweepOneVsRest", "SweepResult",
+    "build_sharded_sweep_round", "dedup_candidates", "dedup_unique_cap",
+    "expand_chunk", "expand_sweep_sv", "fit_mapreduce_sweep",
+    "fit_one_vs_rest_sweep", "init_sharded_sweep_sv",
+    "make_sharded_sweep_round", "predict_sweep",
     "run_sharded_sweep", "stack_params", "sweep_decision_values",
     "sweep_grid",
 ]

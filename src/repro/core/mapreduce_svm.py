@@ -23,8 +23,10 @@ TPU-native adaptations (see DESIGN.md §2):
     reducers run under `vmap`. Used by tests, benchmarks, examples.
   - **sharded** (`make_sharded_round`): partitions = devices of the
     ``("data",)`` / ``("pod", "data")`` mesh axes under `shard_map`;
-    the merge is a `lax.all_gather` (the ICI analogue of the Hadoop
-    shuffle). Used by the launcher and the multi-pod dry-run.
+    the merge — the ICI analogue of the Hadoop shuffle — is either a
+    tiled `lax.all_gather` or the ring-pipelined `ppermute` transport
+    (``MRSVMConfig.shuffle_impl``, DESIGN.md §10). Used by the
+    launcher and the multi-pod dry-run.
 """
 from __future__ import annotations
 
@@ -61,12 +63,47 @@ class RoundResult(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class MRSVMConfig:
-    """Driver configuration for the iterative MapReduce SVM."""
+    """Driver configuration for the iterative MapReduce SVM.
+
+    ``shuffle_impl`` selects the merge-collective transport of the
+    sharded mode (DESIGN.md §10):
+
+    * ``"allgather"`` — one blocking tiled ``all_gather`` of the full
+      candidate buffer (the historical transport);
+    * ``"ring"`` — the merge is split into ``num_devices`` ring stages
+      over ``ppermute``, double-buffered so stage t's permute is in
+      flight while stage t-1's chunk is consumed (buffer assembly +
+      eq. 7 hypothesis scoring overlap the collective), with feature
+      rows shipped in ``shuffle_wire_dtype`` (f32 α/ids sideband).
+
+    Both transports converge to the same model; the ring additionally
+    dedups cross-config SV rows on the sweep axis (``sweep_dedup``,
+    :mod:`repro.core.sweep`): ``dedup_max_unique`` caps the unique-row
+    slots a device ships per round — ``None`` means ``min(S·k, per)``,
+    which can never drop a live row (lossless) while shrinking the S×
+    payload whenever configs share rows or ``per < S·k``.
+    """
     sv_capacity: int = 256
     svm: SVMConfig = SVMConfig()
     gamma: float = 1e-3          # eq. 8 convergence tolerance on R_emp
     max_rounds: int = 10
     risk_loss: str = "hinge"     # 'hinge' (used in eq. 6) or 'zero_one'
+    shuffle_impl: str = "allgather"       # 'allgather' | 'ring'
+    shuffle_wire_dtype: str = "bfloat16"  # ring: SV feature-row wire dtype
+    sweep_dedup: bool = True              # ring sweep: cross-config dedup
+    dedup_max_unique: Optional[int] = None  # unique slots/chunk; None=lossless
+
+    def __post_init__(self):
+        if self.shuffle_impl not in ("allgather", "ring"):
+            raise ValueError(
+                f"shuffle_impl must be 'allgather' or 'ring', "
+                f"got {self.shuffle_impl!r}")
+        wdt = jnp.dtype(self.shuffle_wire_dtype)
+        if wdt.itemsize not in (2, 4) or \
+                not jnp.issubdtype(wdt, jnp.floating):
+            raise ValueError(
+                "shuffle_wire_dtype must be a 2- or 4-byte float "
+                f"(bf16/f16/f32), got {self.shuffle_wire_dtype!r}")
 
 
 def init_sv_buffer(capacity: int, d: int, dtype=jnp.float32) -> SVBuffer:
@@ -303,6 +340,163 @@ def update_mapreduce(model: MapReduceSVM, X_new: jax.Array,
 # Sharded (shard_map) mode — partitions = devices.
 # ---------------------------------------------------------------------------
 
+def _round_candidates(Xl, yl, ml, sv: SVBuffer, cfg: MRSVMConfig,
+                      axes, idx, k: int, per: int,
+                      params: Optional[SolverParams]):
+    """map + reduce + union-fold + balanced top-k of ONE device.
+
+    Returns ``(cand, w, b)``: the device's (k,)-row candidate SV chunk
+    and its reducer hypothesis. Shared by both merge transports and
+    vmapped over the config axis by the sweep subsystem.
+    """
+    p = cfg.svm.params() if params is None else params
+    # map + reduce (original ``params``, not ``p`` — see mapreduce_round)
+    Xa, ya, ma = _augment(Xl, yl, ml, sv)
+    res = fit_binary(Xa, ya, ma, cfg.svm, params=params, vma_axes=axes)
+    home_alpha = res.alpha[:per]
+    copy_alpha = res.alpha[per:] * sv.mask
+
+    # union semantics: fold the max appended-copy α back into the
+    # home rows (buffer row with global id g lives on device g//per).
+    buf_alpha = compat.pmax(copy_alpha, axes)           # (cap,)
+    mine = jnp.logical_and(sv.ids >= 0, sv.ids // per == idx)
+    pos = jnp.where(mine, sv.ids % per, 0)
+    folded = jnp.zeros((per,), Xl.dtype).at[pos].max(
+        jnp.where(mine, buf_alpha, 0.0))
+    home_alpha = jnp.maximum(home_alpha, folded) * ml
+
+    # balanced top-k per device — the candidate chunk of the shuffle
+    topv, topi = jax.lax.top_k(home_alpha, k)
+    live = (topv > p.sv_threshold).astype(Xl.dtype)
+    cand_ids = (idx * per + topi).astype(jnp.int32)
+    cand = SVBuffer(
+        x=Xl[topi] * live[:, None],
+        y=yl[topi] * live,
+        alpha=topv * live,
+        ids=jnp.where(live > 0, cand_ids, -1),
+        mask=live,
+    )
+    return cand, res.w, res.b
+
+
+def _device_risks(scores, yl, ml, cfg: MRSVMConfig, axes):
+    """eq. 7 empirical risks from per-device (per, ndev) scores."""
+    if cfg.risk_loss == "hinge":
+        per_ex = jnp.maximum(0.0, 1.0 - yl[:, None] * scores)
+    else:
+        # Shared decision convention (score >= 0 → +1) with
+        # risk_lib.zero_one_loss / predict — see that docstring.
+        per_ex = risk_lib.zero_one_loss(scores, yl[:, None]).astype(
+            scores.dtype)
+    part = jnp.sum(per_ex * ml[:, None], axis=0)
+    cnt = jnp.sum(ml)
+    return compat.psum(part, axes) / jnp.maximum(
+        compat.psum(cnt, axes), 1.0)
+
+
+def pack_wire_rows(x, wire_dt):
+    """Flatten feature rows into f32 lanes for the coalesced ring
+    message: 2-byte wire dtypes (bf16/f16) pack element PAIRS into one
+    f32 via bitcast (lossless — the bits just ride along), f32 passes
+    through. Returns ``(flat, wslots)`` with ``wslots`` f32 lanes per
+    row."""
+    n, d = x.shape
+    xw = x.astype(jnp.dtype(wire_dt))
+    size = jnp.dtype(wire_dt).itemsize
+    if size == 2:
+        dp = d + (d % 2)
+        xw = jnp.pad(xw, ((0, 0), (0, dp - d)))
+        packed = jax.lax.bitcast_convert_type(
+            xw.reshape(n, dp // 2, 2), jnp.float32)
+        return packed.reshape(n * (dp // 2)), dp // 2
+    if size != 4:
+        raise ValueError(f"unsupported shuffle_wire_dtype {wire_dt}")
+    return jax.lax.bitcast_convert_type(xw, jnp.float32).reshape(n * d), d
+
+
+def unpack_wire_rows(flat, n: int, d: int, wire_dt, wslots: int):
+    """Inverse of :func:`pack_wire_rows`: (rows, wslots·…) f32 lanes →
+    (n, d) wire-dtype feature rows."""
+    wire_dt = jnp.dtype(wire_dt)
+    arr = flat.reshape(n, wslots)
+    if wire_dt.itemsize == 2:
+        rows = jax.lax.bitcast_convert_type(arr, wire_dt)   # (n, wslots, 2)
+        return rows.reshape(n, 2 * wslots)[:, :d]
+    return jax.lax.bitcast_convert_type(arr, wire_dt)
+
+
+def _ring_merge(cand: SVBuffer, w, b, Xl, cfg: MRSVMConfig, axes,
+                ndev: int, k: int):
+    """Ring-pipelined merge + eq. 7 scoring (DESIGN.md §10).
+
+    The monolithic all_gather is split into ``ndev`` ring stages: at
+    stage t each device consumes the chunk that originated at device
+    ``(idx - t) mod ndev`` — writing it into the assembling buffer and
+    scoring that origin's hypothesis on the local rows — while the
+    ``ppermute`` carrying stage t+1's chunk is already in flight
+    (XLA's collective-permute-start/done pair brackets the stage's
+    compute, so the wire time hides behind it). Feature rows travel in
+    ``cfg.shuffle_wire_dtype`` (bf16 halves the dominant payload,
+    matching the bf16-feature convention of :mod:`repro.core.svm`);
+    α/ids/y/mask and the (w, b) hypotheses stay a full-precision
+    sideband — solver state is never quantized.
+
+    Every device applies the identical wire round-trip to every chunk
+    (including its own), so the assembled buffer is bit-identical and
+    replicated across devices, exactly like the all_gather's output.
+    The buffer's feature rows STAY in the wire dtype — candidates are
+    re-gathered from the local f32/bf16 rows every round, so rounding
+    never compounds, and the next round's augment reads ½ the bytes.
+    """
+    per, d = Xl.shape
+    wire_dt = jnp.dtype(cfg.shuffle_wire_dtype)
+    f32 = jnp.float32
+    idx = compat.axis_index(axes)
+
+    # ONE coalesced f32 message per hop: the wire-dtype feature rows
+    # (bf16 pairs bitcast into f32 lanes) followed by the packed
+    # sideband [y | α | mask | ids | w | b]. Per-leaf permutes would
+    # pay the collective's fixed launch/rendezvous cost 7× per stage.
+    # ids/int values are exact in f32 below 2^24 rows.
+    xf, wslots = pack_wire_rows(cand.x, wire_dt)
+    side = jnp.concatenate([
+        xf, cand.y.astype(f32), cand.alpha.astype(f32),
+        cand.mask.astype(f32), cand.ids.astype(f32),
+        w.astype(f32), b.reshape(1).astype(f32)])
+    o_x = k * wslots
+    o_w = o_x + 4 * k
+    L = side.shape[0]
+    msgs = []
+    part_scores = []
+    cur = side
+    for t in range(ndev):
+        nxt = compat.ring_shift(cur, axes) if t < ndev - 1 else None
+        msgs.append(cur)
+        wt, bt = cur[o_w:o_w + d], cur[o_w + d]
+        part_scores.append((Xl @ wt + bt).astype(w.dtype))  # eq. 7 stage
+        cur = nxt
+    # Reorder arrivals back to device order in ONE roll — stage t
+    # carried origin (idx-t) mod ndev, so the REVERSED arrival list is
+    # origins idx+1, idx+2, … (contiguous mod ndev) and rolling by
+    # (idx+1) message blocks is the device-order layout. A per-stage
+    # dynamic-update-slice chain would rewrite the whole buffer every
+    # hop, costing ndev× the assembly traffic.
+    M = jnp.roll(jnp.concatenate(msgs[::-1]),
+                 (idx + 1) * L).reshape(ndev, L)
+    col = lambda a, b2: M[:, o_x + a * k:o_x + b2 * k].reshape(ndev * k)
+    bt_ = Xl.dtype
+    sv_acc = SVBuffer(
+        x=unpack_wire_rows(M[:, :o_x], ndev * k, d, wire_dt, wslots),
+        y=col(0, 1).astype(bt_),
+        alpha=col(1, 2).astype(bt_),
+        ids=col(3, 4).astype(jnp.int32),
+        mask=col(2, 3).astype(bt_))
+    W = M[:, o_w:o_w + d]                            # (ndev, d)
+    B = M[:, o_w + d]                                # (ndev,)
+    scores = jnp.roll(jnp.stack(part_scores[::-1]), idx + 1, axis=0).T
+    return sv_acc, W, B, scores
+
+
 def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
                        num_devices: int, rows_per_device: int):
     """Build the per-device body of one MapReduce round for `shard_map`.
@@ -311,10 +505,23 @@ def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
       Xl (per, d), yl (per,), ml (per,), sv (replicated SVBuffer)
     and returns (new_sv, risks (ndev,), best_w (d,), best_b ()).
 
-    The merge collective is a tiled `all_gather` over ``axis_names`` —
-    the ICI analogue of the Hadoop shuffle. Hypothesis selection
-    (eq. 7) all-gathers the per-device (w, b) and psums partial risks so
-    every device evaluates every hypothesis on the full distributed set.
+    The merge collective — the ICI analogue of the Hadoop shuffle — is
+    selected by ``cfg.shuffle_impl``:
+
+    * ``"allgather"``: one tiled `all_gather` of the candidate chunks
+      over ``axis_names``; hypothesis selection (eq. 7) all-gathers the
+      per-device (w, b) and psums partial risks afterwards — reducer-
+      side compute waits on the full collective.
+    * ``"ring"``: :func:`_ring_merge` — the chunk exchange is pipelined
+      into ``num_devices`` `ppermute` stages, double-buffered so buffer
+      assembly and the eq. 7 scoring of each arrived hypothesis overlap
+      the next stage's wire time, with feature rows shipped in
+      ``cfg.shuffle_wire_dtype``.
+
+    Both transports produce the same converged model (the ring is
+    bit-identical up to the wire-dtype round-trip of the feature rows;
+    exactly identical when ``shuffle_wire_dtype`` matches the data
+    dtype) — enforced by ``tests/test_sharded_round.py``.
 
     The body takes an optional trailing ``params`` (a replicated traced
     :class:`~repro.core.svm.SolverParams`); the sweep subsystem vmaps
@@ -330,51 +537,20 @@ def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
 
     def round_body(Xl, yl, ml, sv: SVBuffer,
                    params: Optional[SolverParams] = None):
-        p = cfg.svm.params() if params is None else params
         idx = compat.axis_index(axes)           # flattened device index
-        # map + reduce (original ``params``, not ``p`` — see mapreduce_round)
-        Xa, ya, ma = _augment(Xl, yl, ml, sv)
-        res = fit_binary(Xa, ya, ma, cfg.svm, params=params, vma_axes=axes)
-        home_alpha = res.alpha[:per]
-        copy_alpha = res.alpha[per:] * sv.mask
-
-        # union semantics: fold the max appended-copy α back into the
-        # home rows (buffer row with global id g lives on device g//per).
-        buf_alpha = compat.pmax(copy_alpha, axes)           # (cap,)
-        mine = jnp.logical_and(sv.ids >= 0, sv.ids // per == idx)
-        pos = jnp.where(mine, sv.ids % per, 0)
-        folded = jnp.zeros((per,), Xl.dtype).at[pos].max(
-            jnp.where(mine, buf_alpha, 0.0))
-        home_alpha = jnp.maximum(home_alpha, folded) * ml
-
-        # merge: balanced top-k per device, all-gathered (the shuffle)
-        topv, topi = jax.lax.top_k(home_alpha, k)
-        live = (topv > p.sv_threshold).astype(Xl.dtype)
-        cand_ids = (idx * per + topi).astype(jnp.int32)
-        cand = SVBuffer(
-            x=Xl[topi] * live[:, None],
-            y=yl[topi] * live,
-            alpha=topv * live,
-            ids=jnp.where(live > 0, cand_ids, -1),
-            mask=live,
-        )
-        new_sv = compat.tree_map(
-            lambda a: compat.all_gather(a, axes, tiled=True), cand)
-
-        # driver: eq. 7 over all-gathered hypotheses
-        W = compat.all_gather(res.w, axes)                  # (ndev, d)
-        B = compat.all_gather(res.b, axes)                  # (ndev,)
-        scores = Xl @ W.T + B[None, :]                      # (per, ndev)
-        if cfg.risk_loss == "hinge":
-            per_ex = jnp.maximum(0.0, 1.0 - yl[:, None] * scores)
+        cand, w, b = _round_candidates(Xl, yl, ml, sv, cfg, axes, idx,
+                                       k, per, params)
+        if cfg.shuffle_impl == "ring":
+            new_sv, W, B, scores = _ring_merge(cand, w, b, Xl, cfg, axes,
+                                               num_devices, k)
         else:
-            # Shared decision convention (score >= 0 → +1) with
-            # risk_lib.zero_one_loss / predict — see that docstring.
-            per_ex = risk_lib.zero_one_loss(scores, yl[:, None]).astype(Xl.dtype)
-        part = jnp.sum(per_ex * ml[:, None], axis=0)
-        cnt = jnp.sum(ml)
-        risks = compat.psum(part, axes) / jnp.maximum(
-            compat.psum(cnt, axes), 1.0)
+            new_sv = compat.tree_map(
+                lambda a: compat.all_gather(a, axes, tiled=True), cand)
+            # driver: eq. 7 over all-gathered hypotheses
+            W = compat.all_gather(w, axes)                  # (ndev, d)
+            B = compat.all_gather(b, axes)                  # (ndev,)
+            scores = Xl @ W.T + B[None, :]                  # (per, ndev)
+        risks = _device_risks(scores, yl, ml, cfg, axes)
         l_star = jnp.argmin(risks)
         return new_sv, risks, W[l_star], B[l_star]
 

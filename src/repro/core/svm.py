@@ -56,12 +56,21 @@ class SolverParams(NamedTuple):
     through ``vmap`` (the sweep subsystem in :mod:`repro.core.sweep`).
     ``KernelConfig.degree`` stays static: a traced integer exponent
     would lower to a float ``pow`` whose negative-base branch NaNs.
+
+    ``max_epochs`` is the traced *cutoff*: the dual-CD while_loop stops
+    at ``min(cfg.max_epochs, params.max_epochs)``. The static shell
+    keeps the program's loop bound; the traced value lets a sweep give
+    each config its own epoch budget — and lets the sweep driver freeze
+    a converged config at a cutoff of 0 (zero epochs) instead of
+    spinning it to the shared bound. Kept float32 so the pytree stays
+    leaf-uniform under ``stack_params``/``sweep_grid``.
     """
     C: jax.Array             # () box constraint (eq. 2)
     tol: jax.Array           # () max projected-gradient violation to stop
     sv_threshold: jax.Array  # () α above this counts as a support vector
     gamma: jax.Array         # () rbf / poly scale
     coef0: jax.Array         # () poly offset
+    max_epochs: jax.Array    # () traced epoch cutoff ≤ the static bound
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +97,7 @@ class SVMConfig:
             sv_threshold=jnp.asarray(self.sv_threshold, dtype),
             gamma=jnp.asarray(self.kernel.gamma, dtype),
             coef0=jnp.asarray(self.kernel.coef0, dtype),
+            max_epochs=jnp.asarray(float(self.max_epochs), dtype),
         )
 
 
@@ -129,6 +139,10 @@ def fit_binary_linear(X: jax.Array, y: jax.Array,
     qdiag = jnp.where(m > 0, qdiag, 1.0)
     C = p.C.astype(ct)
     tol = p.tol.astype(ct)
+    # Static bound × traced cutoff (DESIGN.md §8): the program's loop
+    # bound stays cfg.max_epochs; a per-config traced budget can only
+    # tighten it.
+    ecap = jnp.minimum(jnp.asarray(cfg.max_epochs, ct), p.max_epochs.astype(ct))
 
     def body_i(i, carry):
         alpha, w, b, viol = carry
@@ -157,7 +171,7 @@ def fit_binary_linear(X: jax.Array, y: jax.Array,
 
     def cond(carry):
         _, _, _, viol, t = carry
-        return jnp.logical_and(t < cfg.max_epochs,
+        return jnp.logical_and(t < ecap,
                                jnp.logical_or(t == 0, viol > tol))
 
     init = _pvary((jnp.zeros((n,), ct), jnp.zeros((d,), ct),
@@ -174,17 +188,20 @@ def fit_binary_linear(X: jax.Array, y: jax.Array,
 GramFn = Callable[[jax.Array, jax.Array], jax.Array]
 
 
-def _pallas_gram_fn(cfg: SVMConfig) -> GramFn:
+def _pallas_gram_fn(cfg: SVMConfig, p: SolverParams) -> GramFn:
     """Route the reducer's Gram build through the Pallas TPU kernel
-    (:mod:`repro.kernels.gram`). The Pallas call bakes the kernel
-    transform in at trace time, so this path uses the *static*
-    ``cfg.kernel`` values — sweeps over traced gamma stay on XLA."""
+    (:mod:`repro.kernels.gram`). ``gamma``/``coef0`` are *traced* scalar
+    operands of the kernel (SMEM-style scalar inputs), so rbf/poly
+    sweeps over :class:`SolverParams` run on the Pallas path — and every
+    config shares ONE compiled kernel instead of re-specializing per
+    value. Only the operator choice (``kernel.name``/``degree``) stays
+    baked in at trace time."""
     from repro.kernels import gram as gram_lib
     kc = cfg.kernel
 
     def fn(X, Z):
-        K = gram_lib.gram(X, Z, kind=kc.name, gamma=kc.gamma,
-                          coef0=kc.coef0, degree=kc.degree)
+        K = gram_lib.gram(X, Z, p.gamma, p.coef0, kind=kc.name,
+                          degree=kc.degree)
         return K.astype(X.dtype)
     return fn
 
@@ -201,15 +218,7 @@ def fit_binary_kernel(X: jax.Array, y: jax.Array,
     m = jnp.ones((n,), X.dtype) if mask is None else mask.astype(X.dtype)
 
     if gram_fn is None and cfg.gram_impl == "pallas":
-        if params is not None and cfg.kernel.name != "linear":
-            # The Pallas Gram bakes gamma/coef0 in at trace time; training
-            # on a static-γ Gram while scoring with a traced override
-            # would silently produce models that were never trained.
-            raise ValueError(
-                "gram_impl='pallas' uses static kernel params; traced "
-                "SolverParams sweeps over rbf/poly kernels must use the "
-                "XLA Gram path (gram_impl='xla')")
-        gram_fn = _pallas_gram_fn(cfg)
+        gram_fn = _pallas_gram_fn(cfg, p)
     if gram_fn is None:
         K = apply_kernel(X, X, cfg=cfg.kernel, gamma=p.gamma, coef0=p.coef0)
     else:
@@ -221,6 +230,8 @@ def fit_binary_kernel(X: jax.Array, y: jax.Array,
     qdiag = jnp.where(m > 0, jnp.diagonal(Q), 1.0)
     C = p.C.astype(X.dtype)
     tol = p.tol.astype(X.dtype)
+    ecap = jnp.minimum(jnp.asarray(cfg.max_epochs, jnp.float32),
+                       p.max_epochs.astype(jnp.float32))
 
     def body_i(i, carry):
         alpha, g, viol = carry
@@ -245,7 +256,7 @@ def fit_binary_kernel(X: jax.Array, y: jax.Array,
 
     def cond(carry):
         _, _, viol, t = carry
-        return jnp.logical_and(t < cfg.max_epochs,
+        return jnp.logical_and(t < ecap,
                                jnp.logical_or(t == 0, viol > tol))
 
     init = _pvary((jnp.zeros((n,), X.dtype), -jnp.ones((n,), X.dtype) * m,

@@ -45,8 +45,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
-from repro.core.mapreduce_svm import (MRSVMConfig, SVBuffer, init_sv_buffer,
-                                      make_sharded_round, mapreduce_round)
+from repro.core.mapreduce_svm import (MRSVMConfig, SVBuffer,
+                                      _device_risks, _round_candidates,
+                                      init_sv_buffer, make_sharded_round,
+                                      mapreduce_round, pack_wire_rows,
+                                      unpack_wire_rows)
 from repro.core.svm import (BinarySVM, SolverParams, SVMConfig,
                             decision_kernel, fit_binary)
 
@@ -88,12 +91,15 @@ def sweep_grid(cfg: SVMConfig,
                gamma: Optional[Sequence[float]] = None,
                tol: Optional[Sequence[float]] = None,
                sv_threshold: Optional[Sequence[float]] = None,
-               coef0: Optional[Sequence[float]] = None) -> SolverParams:
+               coef0: Optional[Sequence[float]] = None,
+               max_epochs: Optional[Sequence[int]] = None) -> SolverParams:
     """Cartesian grid over the traced hyper-params, defaults from ``cfg``.
 
     Returns a (S,)-batched :class:`SolverParams` with
     S = Π len(axis). Axis order is C-major, matching
-    ``itertools.product(C, gamma, tol, sv_threshold, coef0)``.
+    ``itertools.product(C, gamma, tol, sv_threshold, coef0, max_epochs)``.
+    ``max_epochs`` entries are traced *cutoffs*: they can only tighten
+    the static ``cfg.max_epochs`` loop bound (DESIGN.md §8).
     """
     base = cfg.params()
     axes = [np.atleast_1d(np.asarray(v, np.float32)) if v is not None
@@ -101,11 +107,13 @@ def sweep_grid(cfg: SVMConfig,
             for v, dflt in ((C, base.C), (gamma, base.gamma),
                             (tol, base.tol),
                             (sv_threshold, base.sv_threshold),
-                            (coef0, base.coef0))]
+                            (coef0, base.coef0),
+                            (max_epochs, base.max_epochs))]
     grid = np.meshgrid(*axes, indexing="ij")
     flat = [jnp.asarray(g.reshape(-1)) for g in grid]
-    c, g, t, s, c0 = flat
-    return SolverParams(C=c, tol=t, sv_threshold=s, gamma=g, coef0=c0)
+    c, g, t, s, c0, me = flat
+    return SolverParams(C=c, tol=t, sv_threshold=s, gamma=g, coef0=c0,
+                        max_epochs=me)
 
 
 def _num_configs(params: SolverParams) -> int:
@@ -124,16 +132,27 @@ def _freeze(done: np.ndarray, old, new):
     return compat.tree_map(sel, old, new)
 
 
-def _run_rounds(step, svb: SVBuffer, d: int, cfg: MRSVMConfig,
-                params: SolverParams, verbose: bool, tag: str):
+def _run_rounds(step, svb, d: int, cfg: MRSVMConfig,
+                params: SolverParams, verbose: bool, tag: str,
+                snapshot=None):
     """Shared eq. 8-masked host round loop of both sweep modes.
 
     ``step(svb, eff_params) -> (sv_new, r_star (S,), ws (S, d), bs (S,))``
     where r_star/ws/bs are already reduced to each config's best
-    reducer. Finished configs get ``tol=+inf`` (their solver
-    while_loop exits after one epoch; vmap select-freezes the lane) and
-    their SV buffer / best hypothesis frozen on the host; the loop
-    exits when every config has converged.
+    reducer. Finished configs get ``tol=+inf`` AND an epoch cutoff of 0
+    (their solver while_loop runs ZERO epochs; vmap select-freezes the
+    lane) and their SV buffer / best hypothesis frozen on the host; the
+    loop exits when every config has converged.
+
+    ``snapshot`` handles round states that are NOT per-config buffers
+    (the dedup ring's shared-row :class:`DedupChunk`): the raw state
+    threads through ``step`` unfrozen — finished configs must be inert
+    in the round itself, which the 0-epoch cutoff guarantees (their
+    candidates die, so they can neither claim unique slots nor change
+    active configs' results) — and ``snapshot(state)`` materializes the
+    per-config (S, cap, …) buffer ONLY on rounds where a config
+    converges (its frozen view) and on the last active round, keeping
+    the expansion off the per-round hot path.
     """
     S = _num_configs(params)
     done = np.zeros(S, bool)
@@ -143,12 +162,17 @@ def _run_rounds(step, svb: SVBuffer, d: int, cfg: MRSVMConfig,
     best_b = np.zeros(S, np.float32)
     rounds = np.zeros(S, np.int64)
     history = []
+    frozen = None if snapshot is not None else svb
     inf = jnp.asarray(np.inf, params.tol.dtype)
     for t in range(cfg.max_rounds):
-        eff = params._replace(tol=jnp.where(jnp.asarray(done), inf,
-                                            params.tol))
+        dmask = jnp.asarray(done)
+        eff = params._replace(
+            tol=jnp.where(dmask, inf, params.tol),
+            max_epochs=jnp.where(dmask, 0.0, params.max_epochs))
         sv_new, r_star, ws, bs = step(svb, eff)
-        svb = _freeze(done, svb, sv_new)
+        if snapshot is None:
+            frozen = _freeze(done, frozen, sv_new)
+        svb = frozen if snapshot is None else sv_new
         r_star = np.asarray(r_star)
         act = ~done
         improved = act & (r_star < best_risk)
@@ -162,11 +186,16 @@ def _run_rounds(step, svb: SVBuffer, d: int, cfg: MRSVMConfig,
         if verbose:
             print(f"[{tag}] round={t} active={int(act.sum())}/{S} "
                   f"best_R_emp={np.nanmin(np.where(act, r_star, np.nan)):.5f}")
-        done |= act & (t > 0) & (np.abs(prev - r_star) <= cfg.gamma)  # eq. 8
+        newly = act & (t > 0) & (np.abs(prev - r_star) <= cfg.gamma)  # eq. 8
+        if snapshot is not None and (newly.any()
+                                     or t == cfg.max_rounds - 1):
+            exp = snapshot(sv_new)
+            frozen = exp if frozen is None else _freeze(done, frozen, exp)
+        done |= newly
         prev = np.where(act, r_star, prev)
         if done.all():
             break
-    return svb, best_risk, best_w, best_b, rounds, tuple(history)
+    return frozen, best_risk, best_w, best_b, rounds, tuple(history)
 
 
 # ---------------------------------------------------------------------------
@@ -332,21 +361,364 @@ def fit_one_vs_rest_sweep(X: jax.Array, y: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Cross-config SV dedup: the ring sweep's wire format (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+
+class DedupChunk(NamedTuple):
+    """Deduplicated per-device candidate chunk of a sweep round.
+
+    S configs solving the SAME sharded data converge onto overlapping
+    support sets — the margin of the data doesn't move much across
+    nearby (C, γ). Shipping every config's (k, d) candidate rows
+    therefore moves each shared row S times. The dedup layout collapses
+    the chunk to its *unique home rows* plus per-config sidebands:
+
+      x (U, d)      unique feature rows (wire dtype), each shipped once
+      y (U,)        labels of the unique rows
+      ids (U,)      global row ids (-1 on dead slots)
+      ptr (S, k)    each config's j-th candidate → its unique slot (-1
+                    when dead or evicted)
+      alpha (S, k)  per-config α columns (full precision, never shared)
+      mask (S, k)   per-config live flags
+
+    Payload: U·d rows instead of S·k·d — the S× row traffic stops
+    scaling in duplicated rows. With ``U = min(S·k, per)`` (the
+    default) no live row can ever be evicted, so
+    :func:`expand_chunk` ∘ :func:`dedup_candidates` is lossless
+    (hypothesis-tested in ``tests/test_property.py``); a smaller
+    explicit ``dedup_max_unique`` trades eviction of the
+    lowest-evidence unique rows for wire bytes, the same
+    capacity-bounding the SV buffer itself applies.
+    """
+    x: jax.Array
+    y: jax.Array
+    ids: jax.Array
+    ptr: jax.Array
+    alpha: jax.Array
+    mask: jax.Array
+
+
+def dedup_unique_cap(cfg: MRSVMConfig, num_configs: int, k: int,
+                     per: int) -> int:
+    """Unique-row slots a device ships per round (see DedupChunk)."""
+    if cfg.dedup_max_unique is not None:
+        return max(1, min(cfg.dedup_max_unique, num_configs * k, per))
+    return min(num_configs * k, per)
+
+
+def dedup_candidates(cand: SVBuffer, Xl: jax.Array, yl: jax.Array,
+                     idx, per: int, unique_cap: int,
+                     wire_dtype=jnp.bfloat16) -> DedupChunk:
+    """Collapse (S, k) candidate chunks to unique home rows + sidebands.
+
+    ``cand`` leaves carry a leading (S, k) config axis; all its ids
+    point into THIS device's home rows ``[idx·per, (idx+1)·per)``, so a
+    (per,)-slot scoreboard (max α across configs = eviction priority)
+    finds the unique set without sorting. Assumes ``sv_threshold ≥ 0``
+    (live candidates have α > 0), which the solver's box constraint
+    already guarantees.
+    """
+    live = cand.mask > 0
+    r = jnp.where(live, cand.ids - idx * per, 0)          # local row ids
+    score = jnp.zeros((per,), jnp.float32).at[r].max(
+        jnp.where(live, cand.alpha.astype(jnp.float32), 0.0))
+    U = unique_cap
+    top_score, top_r = jax.lax.top_k(score, U)            # evidence-ranked
+    live_u = top_score > 0
+    slot = jnp.where(live_u, jnp.arange(U, dtype=jnp.int32), -1)
+    inv = jnp.full((per,), -1, jnp.int32).at[top_r].set(slot)
+    return DedupChunk(
+        x=(Xl[top_r] * live_u[:, None].astype(Xl.dtype)).astype(wire_dtype),
+        y=yl[top_r] * live_u.astype(yl.dtype),
+        ids=jnp.where(live_u, (idx * per + top_r).astype(jnp.int32), -1),
+        ptr=jnp.where(live, inv[r], -1),
+        alpha=cand.alpha,
+        mask=cand.mask)
+
+
+def expand_chunk(chunk: DedupChunk, buf_dtype=jnp.float32) -> SVBuffer:
+    """Inverse of :func:`dedup_candidates`: per-config (S, k) chunks.
+
+    Candidates whose unique row was evicted (``ptr == -1``) come back
+    dead; with the lossless default capacity that never happens and the
+    round-trip reproduces the undeduplicated chunks exactly (up to the
+    wire-dtype round-trip of ``x``).
+    """
+    safe = jnp.maximum(chunk.ptr, 0)
+    valid = jnp.logical_and(chunk.ptr >= 0, chunk.mask > 0)
+    vf = valid.astype(buf_dtype)
+    return SVBuffer(
+        x=chunk.x[safe].astype(buf_dtype) * vf[..., None],
+        y=chunk.y[safe].astype(buf_dtype) * vf,
+        alpha=chunk.alpha.astype(buf_dtype) * vf,
+        ids=jnp.where(valid, chunk.ids[safe], -1),
+        mask=vf)
+
+
+# ---------------------------------------------------------------------------
 # Sharded sweep: vmap-over-configs inside the shard_map round body.
 # ---------------------------------------------------------------------------
+
+def uses_dedup_state(cfg: MRSVMConfig, per_config_data: bool) -> bool:
+    """True when the sharded sweep's SV state IS the dedup wire format.
+
+    Per-config-data waves (streams with distinct rows) keep per-config
+    buffers — their global ids index different datasets, so cross-config
+    dedup has no shared rows to collapse.
+    """
+    return (cfg.shuffle_impl == "ring" and cfg.sweep_dedup
+            and not per_config_data)
+
+
+def init_sharded_sweep_sv(cfg: MRSVMConfig, num_configs: int, d: int,
+                          num_devices: int, rows_per_device: int,
+                          dtype=jnp.float32, per_config_data: bool = False):
+    """Empty round-0 SV state of the sharded sweep.
+
+    Allgather rounds carry the (S, cap, …) :class:`SVBuffer`; the dedup
+    ring carries the shared-row :class:`DedupChunk` state directly —
+    the expanded per-config buffer never materializes between rounds
+    (DESIGN.md §10); the per-config-data ring keeps per-config buffers
+    with wire-dtype feature rows.
+    """
+    cap = cfg.sv_capacity
+    if uses_dedup_state(cfg, per_config_data):
+        k = cap // num_devices
+        U = dedup_unique_cap(cfg, num_configs, k, rows_per_device)
+        R = num_devices * U
+        wire_dt = jnp.dtype(cfg.shuffle_wire_dtype)
+        return DedupChunk(
+            x=jnp.zeros((R, d), wire_dt),
+            y=jnp.zeros((R,), dtype),
+            ids=jnp.full((R,), -1, jnp.int32),
+            ptr=jnp.full((num_configs, cap), -1, jnp.int32),
+            alpha=jnp.zeros((num_configs, cap), dtype),
+            mask=jnp.zeros((num_configs, cap), dtype))
+    sv0 = init_sv_buffer(cap, d, dtype)
+    if cfg.shuffle_impl == "ring":
+        sv0 = sv0._replace(
+            x=sv0.x.astype(jnp.dtype(cfg.shuffle_wire_dtype)))
+    return compat.tree_map(
+        lambda a: jnp.broadcast_to(a, (num_configs,) + a.shape), sv0)
+
+
+def _state_views(state: DedupChunk, buf_dt):
+    """Per-config :class:`SVBuffer` views of the shared-row state.
+
+    Only the (S, cap) sidebands are per-config; the (cap, d) feature
+    rows of config s are gathered from the shared unique rows — the
+    same read volume the expanded buffer would cost, from a buffer
+    S× smaller (and in the wire dtype).
+    """
+    def view(ptr_s, alpha_s, mask_s):
+        safe = jnp.maximum(ptr_s, 0)
+        valid = jnp.logical_and(ptr_s >= 0, mask_s > 0)
+        vf = valid.astype(buf_dt)
+        return SVBuffer(
+            x=state.x[safe] * vf[:, None].astype(state.x.dtype),
+            y=state.y[safe].astype(buf_dt) * vf,
+            alpha=alpha_s.astype(buf_dt) * vf,
+            ids=jnp.where(valid, state.ids[safe], -1),
+            mask=vf)
+    return view
+
+
+def _make_ring_sweep_body(cfg: MRSVMConfig, axes, ndev: int, per: int,
+                          per_config_data: bool):
+    """Ring-pipelined sweep round: one transport for all S configs.
+
+    The per-config solve/top-k (vmapped :func:`_round_candidates`) is
+    followed by ONE ring over the round's wire payload — stage t's
+    ppermute is in flight while stage t-1's chunk is written into the
+    assembling state and its S hypotheses are scored (eq. 7). On
+    shared-data sweeps the SV state IS the cross-config dedup format
+    (:class:`DedupChunk` with ptr rebased to the global slot axis):
+    unique rows are shipped AND stored once, so neither the wire nor
+    the replicated round state scales in duplicated rows — the
+    (S, cap, d) per-config buffer exists only as transient per-config
+    gathers inside the reducer augment. Per-config-data waves (streams
+    with distinct rows — ids aren't comparable) keep per-config buffers
+    and ship the plain chunk with wire-dtype feature rows.
+    """
+    cap = cfg.sv_capacity
+    k = cap // ndev
+    wire_dt = jnp.dtype(cfg.shuffle_wire_dtype)
+    dedup = uses_dedup_state(cfg, per_config_data)
+
+    def sweep_body(Xl, yl, ml, sv_state, params_b: SolverParams):
+        idx = compat.axis_index(axes)
+        S = params_b.C.shape[0]
+        buf_dt = Xl.dtype
+        d = Xl.shape[-1]
+        comp = lambda X1, y1, m1, sv, p: _round_candidates(
+            X1, y1, m1, sv, cfg, axes, idx, k, per, p)
+        if per_config_data:
+            cand_b, w_b, b_b = jax.vmap(comp)(Xl, yl, ml, sv_state,
+                                              params_b)
+        elif dedup:
+            view = _state_views(sv_state, buf_dt)
+            cand_b, w_b, b_b = jax.vmap(
+                lambda pt, al, mk, p: comp(Xl, yl, ml, view(pt, al, mk), p))(
+                    sv_state.ptr, sv_state.alpha, sv_state.mask, params_b)
+        else:
+            cand_b, w_b, b_b = jax.vmap(
+                lambda sv, p: comp(Xl, yl, ml, sv, p))(sv_state, params_b)
+
+        # The wire payload stays in chunk format through the ring —
+        # each stage's consumption is the eq. 7 scoring of the arrived
+        # hypotheses; the state is assembled AFTER the last hop with
+        # one roll (a per-stage dynamic-update-slice chain would
+        # rewrite the whole state every hop). ONE coalesced f32 message
+        # per hop — the bitcast-packed wire rows plus the sidebands and
+        # hypotheses — because per-leaf permutes would pay the
+        # collective's fixed rendezvous cost 8× per stage.
+        f32 = jnp.float32
+        if dedup:
+            U = dedup_unique_cap(cfg, S, k, per)
+            chunk0 = dedup_candidates(cand_b, Xl, yl, idx, per, U, wire_dt)
+            xf, wslots = pack_wire_rows(chunk0.x, wire_dt)
+            n_rows = U
+            side0 = jnp.concatenate([
+                xf, chunk0.y.astype(f32), chunk0.ids.astype(f32),
+                chunk0.ptr.astype(f32).reshape(-1),
+                chunk0.alpha.astype(f32).reshape(-1),
+                chunk0.mask.astype(f32).reshape(-1),
+                w_b.astype(f32).reshape(-1), b_b.astype(f32)])
+            o_w = U * wslots + 2 * U + 3 * S * k
+        else:
+            U = k
+            xf, wslots = pack_wire_rows(
+                cand_b.x.reshape(S * k, d), wire_dt)
+            n_rows = S * k
+            side0 = jnp.concatenate([
+                xf,
+                cand_b.y.astype(f32).reshape(-1),
+                cand_b.alpha.astype(f32).reshape(-1),
+                cand_b.mask.astype(f32).reshape(-1),
+                cand_b.ids.astype(f32).reshape(-1),
+                w_b.astype(f32).reshape(-1), b_b.astype(f32)])
+            o_w = S * k * wslots + 4 * S * k
+        o_x = n_rows * wslots
+        L = side0.shape[0]
+        msgs = []
+        part_scores = []
+        cur = side0
+        for t in range(ndev):
+            nxt = compat.ring_shift(cur, axes) if t < ndev - 1 else None
+            msgs.append(cur)
+            wt = cur[o_w:o_w + S * d].reshape(S, d)
+            bt = cur[o_w + S * d:]
+            if per_config_data:
+                s = jnp.einsum("spd,sd->sp", Xl, wt) + bt[:, None]
+            else:
+                s = jnp.einsum("pd,sd->sp", Xl, wt) + bt[:, None]
+            part_scores.append(s.astype(w_b.dtype))
+            cur = nxt
+
+        # Stage t carried origin (idx-t) mod ndev → device order is ONE
+        # roll of the reversed-arrival concat (see _ring_merge's note).
+        M = jnp.roll(jnp.concatenate(msgs[::-1]),
+                     (idx + 1) * L).reshape(ndev, L)
+        xs = unpack_wire_rows(M[:, :o_x], ndev * n_rows, d, wire_dt,
+                              wslots)
+        if not dedup:
+            xs = jnp.swapaxes(xs.reshape(ndev, S, k, d), 0, 1) \
+                    .reshape(S, cap, d)
+        acc = _assemble_chunks(xs, M, o_x, dedup, ndev, U, k, S, buf_dt)
+        W = jnp.swapaxes(M[:, o_w:o_w + S * d].reshape(ndev, S, d), 0, 1)
+        B = M[:, o_w + S * d:].T                     # (S, ndev)
+        scores = jnp.transpose(
+            jnp.roll(jnp.stack(part_scores[::-1]), idx + 1, axis=0),
+            (1, 2, 0))                               # (S, per, ndev)
+
+        if per_config_data:
+            risks = jax.vmap(
+                lambda sc, y1, m1: _device_risks(sc, y1, m1, cfg, axes))(
+                    scores, yl, ml)
+        else:
+            risks = jax.vmap(
+                lambda sc: _device_risks(sc, yl, ml, cfg, axes))(scores)
+        l_star = jnp.argmin(risks, axis=1)                   # (S,)
+        w_sel = jnp.take_along_axis(W, l_star[:, None, None], axis=1)[:, 0]
+        b_sel = jnp.take_along_axis(B, l_star[:, None], axis=1)[:, 0]
+        return acc, risks, w_sel, b_sel
+
+    return sweep_body
+
+
+def _assemble_chunks(xs, M, o_x: int, dedup: bool, ndev: int, U: int,
+                     k: int, S: int, buf_dt):
+    """Device-order state from the ring's reordered messages.
+
+    ``xs`` is the unpacked wire-dtype row buffer already in device
+    order — (ndev·U, d) for dedup chunks, (S, ndev·k, d) for plain
+    chunks — and ``M`` the (ndev, L) message matrix in device order
+    with the packed sidebands starting at column ``o_x``. Dedup chunks:
+    the per-config ptr columns are rebased onto the global slot axis
+    (block o adds o·U). Plain chunks (per-config-data waves): sideband
+    leaves concatenate into the (S, ndev·k) columns.
+    """
+    cap = ndev * k
+    sides = M[:, o_x:]
+    if dedup:
+        col = lambda a, b: sides[:, a:b]
+        ptr = col(2 * U, 2 * U + S * k).reshape(ndev, S, k)
+        base = jnp.arange(ndev, dtype=jnp.float32)[:, None, None] * U
+        ptr = jnp.where(ptr >= 0, ptr + base, -1.0)
+        per_cfg = lambda a: jnp.swapaxes(
+            a.reshape(ndev, S, k), 0, 1).reshape(S, cap)
+        return DedupChunk(
+            x=xs,
+            y=col(0, U).reshape(ndev * U).astype(buf_dt),
+            ids=col(U, 2 * U).reshape(ndev * U).astype(jnp.int32),
+            ptr=jnp.swapaxes(ptr, 0, 1).reshape(S, cap).astype(jnp.int32),
+            alpha=per_cfg(col(2 * U + S * k, 2 * U + 2 * S * k)
+                          ).astype(buf_dt),
+            mask=per_cfg(col(2 * U + 2 * S * k, 2 * U + 3 * S * k)
+                         ).astype(buf_dt))
+    per_cfg = lambda a: jnp.swapaxes(
+        a.reshape(ndev, S, k), 0, 1).reshape(S, cap)
+    col = lambda i: sides[:, i * S * k:(i + 1) * S * k]
+    return SVBuffer(
+        x=xs,
+        y=per_cfg(col(0)).astype(buf_dt),
+        alpha=per_cfg(col(1)).astype(buf_dt),
+        ids=per_cfg(col(3)).astype(jnp.int32),
+        mask=per_cfg(col(2)).astype(buf_dt))
+
+
+def expand_sweep_sv(state, buf_dtype=jnp.float32) -> SVBuffer:
+    """Materialize the per-config (S, cap, …) SVBuffer from a round
+    state — identity for per-config states, one gather for the dedup
+    state (its ``ptr`` is already on the global slot axis). The sharded
+    driver calls this only when a config converges (to freeze its
+    buffer) and once at the end — never on the per-round hot path."""
+    if isinstance(state, DedupChunk):
+        return expand_chunk(state, buf_dtype)
+    if state.x.dtype != jnp.dtype(buf_dtype):
+        return state._replace(x=state.x.astype(buf_dtype))
+    return state
+
 
 def make_sharded_sweep_round(cfg: MRSVMConfig, axis_names: Sequence[str],
                              num_devices: int, rows_per_device: int,
                              per_config_data: bool = False):
     """Per-device body solving S local subproblems per round.
 
-    Wraps :func:`make_sharded_round`'s body in an inner ``vmap`` over
-    the leading config axis of ``(sv, params)``; the shuffle becomes S
+    With ``cfg.shuffle_impl == "allgather"`` this wraps
+    :func:`make_sharded_round`'s body in an inner ``vmap`` over the
+    leading config axis of ``(sv, params)``; the shuffle becomes S
     all-gathers batched into one collective per buffer leaf. With
+    ``"ring"`` the transport is the ring-pipelined, cross-config-
+    deduplicated merge of :func:`_make_ring_sweep_body`. With
     ``per_config_data`` the rows/labels/mask also carry the (S,) job
     axis — S *streams* with distinct data updating in one device pass
     (the multi-tenant streaming wave, :mod:`repro.serving.svm_stream`).
     """
+    axes = tuple(axis_names)
+    if cfg.shuffle_impl == "ring":
+        return _make_ring_sweep_body(cfg, axes, num_devices,
+                                     rows_per_device, per_config_data)
     body = make_sharded_round(cfg, axis_names, num_devices, rows_per_device)
 
     def sweep_body(Xl, yl, ml, sv_b: SVBuffer, params_b: SolverParams):
@@ -384,9 +756,11 @@ def sharded_sweep_program(mesh, data_axes: Sequence[str],
         in_rows = (data_spec, data_spec, data_spec)
     else:
         in_rows = (row_spec, row_spec, row_spec)
-    rep_buf = SVBuffer(x=P(), y=P(), alpha=P(), ids=P(), mask=P())
-    rep_par = SolverParams(C=P(), tol=P(), sv_threshold=P(),
-                           gamma=P(), coef0=P())
+    if uses_dedup_state(cfg, per_config_data):
+        rep_buf = DedupChunk(*(P() for _ in DedupChunk._fields))
+    else:
+        rep_buf = SVBuffer(x=P(), y=P(), alpha=P(), ids=P(), mask=P())
+    rep_par = SolverParams(*(P() for _ in SolverParams._fields))
     in_specs = in_rows + (rep_buf, rep_par)
     out_specs = (rep_buf, P(), P(), P())
     fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
@@ -402,11 +776,30 @@ def build_sharded_sweep_round(mesh, data_axes: Sequence[str],
     Returns ``f(X, y, mask, sv_b, params_b) -> (sv_b', risks (S, ndev),
     ws (S, d), bs (S,))`` where ``X`` is the GLOBAL array sharded on its
     leading axis (second axis when ``per_config_data``) and
-    ``sv_b``/``params_b`` carry the replicated (S,) config axis.
+    ``sv_b``/``params_b`` carry the replicated (S,) config axis — on
+    the dedup ring, ``sv_b`` is the shared-row :class:`DedupChunk`
+    state instead.
+
+    The returned callable carries two helpers so drivers don't have to
+    know which state layout the transport uses: ``.init_sv(S, d,
+    dtype)`` builds the empty round-0 state and ``.expand_sv(state)``
+    materializes the per-config (S, cap, …) :class:`SVBuffer` view.
     """
+    axes = tuple(data_axes)
+    ndev = int(np.prod([mesh.shape[a] for a in axes]))
     fn, _, _ = sharded_sweep_program(mesh, data_axes, cfg, rows_per_device,
                                      per_config_data=per_config_data)
-    return jax.jit(fn)
+    jf = jax.jit(fn)
+
+    def round_fn(X, y, mask, sv_b, params_b):
+        return jf(X, y, mask, sv_b, params_b)
+
+    round_fn.init_sv = lambda S, d, dtype=jnp.float32: init_sharded_sweep_sv(
+        cfg, S, d, ndev, rows_per_device, dtype,
+        per_config_data=per_config_data)
+    round_fn.expand_sv = jax.jit(expand_sweep_sv) \
+        if uses_dedup_state(cfg, per_config_data) else None
+    return round_fn
 
 
 class ShardedSweep(NamedTuple):
@@ -430,13 +823,24 @@ def run_sharded_sweep(round_fn, X: jax.Array, y: jax.Array,
     """Host round loop over :func:`build_sharded_sweep_round` with the
     same per-config eq. 8 masking as :func:`fit_mapreduce_sweep`.
     When ``round_fn`` was built with ``per_config_data``, pass
-    ``X (S, n, d)`` / ``y (S, n)`` / ``mask (S, n)``."""
+    ``X (S, n, d)`` / ``y (S, n)`` / ``mask (S, n)``.
+
+    On the dedup ring, ``round_fn`` threads the shared-row state and
+    the driver snapshots per-config buffers only at convergence (see
+    :func:`_run_rounds`); the returned :class:`ShardedSweep` always
+    carries the standard (S, cap, …) :class:`SVBuffer`."""
     n, d = X.shape[-2], X.shape[-1]
     S = _num_configs(params)
     if mask is None:
         mask = jnp.ones(((S, n) if X.ndim == 3 else (n,)), X.dtype)
-    sv0 = init_sv_buffer(cfg.sv_capacity, d, X.dtype)
-    svb = compat.tree_map(lambda a: jnp.broadcast_to(a, (S,) + a.shape), sv0)
+    init = getattr(round_fn, "init_sv", None)
+    if init is not None:
+        svb = init(S, d, X.dtype)
+    else:
+        sv0 = init_sv_buffer(cfg.sv_capacity, d, X.dtype)
+        svb = compat.tree_map(
+            lambda a: jnp.broadcast_to(a, (S,) + a.shape), sv0)
+    snapshot = getattr(round_fn, "expand_sv", None)
 
     def step(sv_b, eff):
         sv_new, risks, ws, bs = round_fn(X, y, mask, sv_b, eff)
@@ -444,7 +848,8 @@ def run_sharded_sweep(round_fn, X: jax.Array, y: jax.Array,
         return sv_new, np.asarray(risks).min(axis=1), ws, bs
 
     svb, best_risk, best_w, best_b, rounds, history = _run_rounds(
-        step, svb, d, cfg, params, verbose, "sharded-sweep")
+        step, svb, d, cfg, params, verbose, "sharded-sweep",
+        snapshot=snapshot)
     return ShardedSweep(risks=jnp.asarray(best_risk), ws=jnp.asarray(best_w),
                         bs=jnp.asarray(best_b), sv=svb, rounds=rounds,
                         history=history)

@@ -7,6 +7,15 @@ VMEM blocks accumulating into a float32 (bm, bn) output block; the
 kernel transform (rbf/poly) is fused into the last k-step so K never
 round-trips to HBM in raw dot-product form.
 
+``gamma``/``coef0`` are TRACED scalar operands, not trace-time
+constants: they ride in as (1, 1) blocks (the SMEM scalar-input
+pattern), so a :class:`~repro.core.svm.SolverParams` sweep over kernel
+scales reuses ONE compiled kernel — and the sweep subsystem's
+vmap-over-configs batches straight through the pallas_call. Only the
+operator choice stays static: ``kind`` picks the fused transform and
+``degree`` must be an integer exponent (a traced float ``pow`` would
+NaN on negative bases).
+
 Block shapes default to 256×256×512 — MXU-aligned (multiples of 128)
 and ≤ ~1.3 MB/input block, comfortably inside the ~16 MB/core VMEM
 budget with double buffering.
@@ -21,8 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _gram_kernel(x_ref, z_ref, rownorm_ref, colnorm_ref, o_ref, *,
-                 kind: str, gamma: float, coef0: float, degree: int,
+def _gram_kernel(gamma_ref, coef0_ref, x_ref, z_ref, rownorm_ref,
+                 colnorm_ref, o_ref, *, kind: str, degree: int,
                  k_steps: int):
     """One (bm, bn) output tile; grid dim 2 walks the shared d axis."""
     @pl.when(pl.program_id(2) == 0)
@@ -38,6 +47,8 @@ def _gram_kernel(x_ref, z_ref, rownorm_ref, colnorm_ref, o_ref, *,
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _finalize():
         acc = o_ref[...]
+        gamma = gamma_ref[0, 0]
+        coef0 = coef0_ref[0, 0]
         if kind == "poly":
             o_ref[...] = (gamma * acc + coef0) ** degree
         elif kind == "rbf":
@@ -46,14 +57,17 @@ def _gram_kernel(x_ref, z_ref, rownorm_ref, colnorm_ref, o_ref, *,
         # linear: accumulator already is K
 
 
-@functools.partial(jax.jit, static_argnames=("kind", "gamma", "coef0",
-                                             "degree", "bm", "bn", "bk",
-                                             "interpret"))
-def gram(X: jax.Array, Z: jax.Array, *, kind: str = "linear",
-         gamma: float = 1.0, coef0: float = 0.0, degree: int = 3,
+@functools.partial(jax.jit, static_argnames=("kind", "degree", "bm", "bn",
+                                             "bk", "interpret"))
+def gram(X: jax.Array, Z: jax.Array, gamma=1.0, coef0=0.0, *,
+         kind: str = "linear", degree: int = 3,
          bm: int = 256, bn: int = 256, bk: int = 512,
          interpret: bool = True) -> jax.Array:
-    """K (n, m) = k(X (n, d), Z (m, d)). Pads to block multiples."""
+    """K (n, m) = k(X (n, d), Z (m, d)). Pads to block multiples.
+
+    ``gamma``/``coef0`` may be Python floats or traced scalars — they
+    are operands of the compiled kernel either way.
+    """
     n, d = X.shape
     m = Z.shape[0]
     bm_, bn_, bk_ = min(bm, _ceil(n)), min(bn, _ceil(m)), min(bk, _ceil(d))
@@ -62,13 +76,18 @@ def gram(X: jax.Array, Z: jax.Array, *, kind: str = "linear",
     Zp = jnp.pad(Z, ((0, m_p - m), (0, d_p - d)))
     rown = jnp.sum(Xp.astype(jnp.float32) ** 2, axis=1, keepdims=True)  # (n,1)
     coln = jnp.sum(Zp.astype(jnp.float32) ** 2, axis=1, keepdims=True).T
+    g = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    c0 = jnp.asarray(coef0, jnp.float32).reshape(1, 1)
 
     k_steps = d_p // bk_
+    scalar = pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))
     out = pl.pallas_call(
-        functools.partial(_gram_kernel, kind=kind, gamma=gamma, coef0=coef0,
-                          degree=degree, k_steps=k_steps),
+        functools.partial(_gram_kernel, kind=kind, degree=degree,
+                          k_steps=k_steps),
         grid=(n_p // bm_, m_p // bn_, k_steps),
         in_specs=[
+            scalar,
+            scalar,
             pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
             pl.BlockSpec((bn_, bk_), lambda i, j, k: (j, k)),
             pl.BlockSpec((1, bm_), lambda i, j, k: (0, i)),
@@ -77,7 +96,7 @@ def gram(X: jax.Array, Z: jax.Array, *, kind: str = "linear",
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n_p, m_p), jnp.float32),
         interpret=interpret,
-    )(Xp, Zp, rown.T, coln)
+    )(g, c0, Xp, Zp, rown.T, coln)
     return out[:n, :m]
 
 

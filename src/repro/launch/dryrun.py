@@ -25,7 +25,8 @@ import traceback
 
 def run_one(arch: str, shape_name: str, multi_pod: bool,
             rules_name: str = "baseline", out_dir: str = "benchmarks/artifacts",
-            verbose: bool = True, measure_layers: bool = True) -> dict:
+            verbose: bool = True, measure_layers: bool = True,
+            shuffle: str = None) -> dict:
     import jax
     import numpy as np
 
@@ -52,14 +53,21 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     try:
         if getattr(cfg, "family", None) == "svm":
+            # SV merge transport: the ring-pipelined shuffle or the
+            # monolithic all-gather (DESIGN.md §10); default from the
+            # arch config, overridable per dry-run for A/B roofline runs.
+            record["shuffle"] = steps_lib._svm_shuffle(cfg, shuffle)
             if shape_name == "svm_sweep":
                 bundle = steps_lib.build_svm_sweep_step(cfg, mesh,
-                                                        num_configs=8)
+                                                        num_configs=8,
+                                                        shuffle_impl=shuffle)
             elif shape_name == "svm_serve":
                 bundle = steps_lib.build_svm_serve_step(cfg, mesh,
-                                                        num_streams=4)
+                                                        num_streams=4,
+                                                        shuffle_impl=shuffle)
             else:
-                bundle = steps_lib.build_svm_round_step(cfg, mesh)
+                bundle = steps_lib.build_svm_round_step(cfg, mesh,
+                                                        shuffle_impl=shuffle)
             shape = None
         else:
             shape = steps_lib.INPUT_SHAPES[shape_name]
@@ -166,8 +174,10 @@ def _model_flops(cfg, shape) -> float:
 
 def _write(record: dict, out_dir: str) -> None:
     os.makedirs(out_dir, exist_ok=True)
+    shuffle = f"_{record['shuffle']}" if "shuffle" in record else ""
     name = (f"dryrun_{record['arch']}_{record.get('shape')}"
-            f"_{record['mesh']}_{record.get('rules', 'baseline')}.json")
+            f"_{record['mesh']}_{record.get('rules', 'baseline')}"
+            f"{shuffle}.json")
     with open(os.path.join(out_dir, name.replace("/", "_")), "w") as f:
         json.dump(record, f, indent=2, default=str)
 
@@ -181,6 +191,10 @@ def main():
                                   "svm_serve")))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--rules", default="baseline")
+    ap.add_argument("--shuffle", default=None,
+                    choices=("allgather", "ring"),
+                    help="svm family: SV merge transport (default: the "
+                         "arch config's shuffle_impl)")
     ap.add_argument("--all", action="store_true",
                     help="run every (assigned arch × shape) on this mesh")
     ap.add_argument("--out", default="benchmarks/artifacts")
@@ -192,7 +206,7 @@ def main():
         for arch in ARCH_IDS:
             if arch == "svm_tfidf":
                 rec = run_one(arch, "svm", args.multi_pod, args.rules,
-                              args.out)
+                              args.out, shuffle=args.shuffle)
                 ok &= rec["status"] in ("ok", "skip")
                 continue
             for shape in ("train_4k", "prefill_32k", "decode_32k",
@@ -202,7 +216,8 @@ def main():
                 ok &= rec["status"] in ("ok", "skip")
         sys.exit(0 if ok else 1)
 
-    rec = run_one(args.arch, args.shape, args.multi_pod, args.rules, args.out)
+    rec = run_one(args.arch, args.shape, args.multi_pod, args.rules, args.out,
+                  shuffle=args.shuffle)
     sys.exit(0 if rec["status"] in ("ok", "skip") else 1)
 
 

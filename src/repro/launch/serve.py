@@ -42,8 +42,9 @@ def serve_svm(svm_cfg, args) -> None:
     d = svm_cfg.num_features
     rows = svm_cfg.stream_rows_per_wave
     L = args.data_par if args.data_par > 1 else 8   # partitions (default 8)
+    shuffle = args.shuffle or getattr(svm_cfg, "shuffle_impl", "allgather")
     cfg = MRSVMConfig(sv_capacity=svm_cfg.sv_capacity, gamma=1e-4,
-                      max_rounds=3,
+                      max_rounds=3, shuffle_impl=shuffle,
                       svm=SVMConfig(C=svm_cfg.C,
                                     max_epochs=svm_cfg.max_epochs))
     dt = jnp.dtype(svm_cfg.dtype)
@@ -104,6 +105,10 @@ def main():
                     help="svm family: tenant streams served")
     ap.add_argument("--waves", type=int, default=3,
                     help="svm family: update waves to run")
+    ap.add_argument("--shuffle", default=None,
+                    choices=("allgather", "ring"),
+                    help="svm family: SV merge transport of the sharded "
+                         "fold programs (default: the arch config's)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

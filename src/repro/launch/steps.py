@@ -200,9 +200,17 @@ def build_step(cfg: ModelConfig, mesh, shape: InputShape,
 # The paper's own workload as a dry-runnable step (svm-tfidf "arch").
 # ---------------------------------------------------------------------------
 
-def build_svm_round_step(svm_cfg, mesh) -> StepBundle:
+def _svm_shuffle(svm_cfg, shuffle_impl: Optional[str]) -> str:
+    """Merge-transport choice: explicit override > config default."""
+    return shuffle_impl if shuffle_impl is not None \
+        else getattr(svm_cfg, "shuffle_impl", "allgather")
+
+
+def build_svm_round_step(svm_cfg, mesh,
+                         shuffle_impl: Optional[str] = None) -> StepBundle:
     """One MapReduce-SVM round on the production mesh: rows sharded over
-    (pod,)data; the SV merge is the all-gather 'shuffle' (DESIGN.md §2)."""
+    (pod,)data; the SV merge 'shuffle' is the all-gather or the
+    ring-pipelined transport per ``shuffle_impl`` (DESIGN.md §2/§10)."""
     import numpy as np
     from repro.core.mapreduce_svm import (MRSVMConfig, SVBuffer,
                                           init_sv_buffer, make_sharded_round)
@@ -214,6 +222,7 @@ def build_svm_round_step(svm_cfg, mesh) -> StepBundle:
     n, d = ndev * per, svm_cfg.num_features
     mr_cfg = MRSVMConfig(
         sv_capacity=svm_cfg.sv_capacity,
+        shuffle_impl=_svm_shuffle(svm_cfg, shuffle_impl),
         svm=SVMConfig(C=svm_cfg.C, max_epochs=svm_cfg.max_epochs))
     body = make_sharded_round(mr_cfg, axes, ndev, per)
     row_spec = P(axes if len(axes) > 1 else axes[0])
@@ -242,14 +251,17 @@ def build_svm_round_step(svm_cfg, mesh) -> StepBundle:
         model=None)
 
 
-def build_svm_sweep_step(svm_cfg, mesh, num_configs: int) -> StepBundle:
+def build_svm_sweep_step(svm_cfg, mesh, num_configs: int,
+                         shuffle_impl: Optional[str] = None) -> StepBundle:
     """S MapReduce-SVM jobs per round on the production mesh: one jit,
     one device pass, S models — the sweep subsystem's vmap-over-configs
-    inside the shard_map round body (repro.core.sweep)."""
+    inside the shard_map round body (repro.core.sweep). Under the ring
+    transport the S buffers additionally ride the cross-config dedup
+    wire format (DESIGN.md §10)."""
     import numpy as np
-    from repro.core.mapreduce_svm import MRSVMConfig, SVBuffer
+    from repro.core.mapreduce_svm import MRSVMConfig
     from repro.core.svm import SolverParams, SVMConfig
-    from repro.core.sweep import sharded_sweep_program
+    from repro.core.sweep import init_sharded_sweep_sv, sharded_sweep_program
 
     axes = batch_axes(mesh)
     ndev = int(np.prod([mesh.shape[a] for a in axes]))
@@ -259,22 +271,22 @@ def build_svm_sweep_step(svm_cfg, mesh, num_configs: int) -> StepBundle:
     cap = svm_cfg.sv_capacity
     mr_cfg = MRSVMConfig(
         sv_capacity=cap,
+        shuffle_impl=_svm_shuffle(svm_cfg, shuffle_impl),
         svm=SVMConfig(C=svm_cfg.C, max_epochs=svm_cfg.max_epochs))
     fn, in_specs, out_specs = sharded_sweep_program(mesh, axes, mr_cfg, per)
 
     dt = jnp.dtype(svm_cfg.dtype)
     f32 = jnp.float32
+    # abstract SV state: the (S, cap, …) buffer, or the shared-row dedup
+    # state under the ring transport (same pytree the driver would init)
+    sv_abs = jax.eval_shape(
+        lambda: init_sharded_sweep_sv(mr_cfg, S, d, ndev, per, dt))
     args = (jax.ShapeDtypeStruct((n, d), dt),
             jax.ShapeDtypeStruct((n,), dt),
             jax.ShapeDtypeStruct((n,), dt),
-            SVBuffer(
-                x=jax.ShapeDtypeStruct((S, cap, d), dt),
-                y=jax.ShapeDtypeStruct((S, cap), dt),
-                alpha=jax.ShapeDtypeStruct((S, cap), dt),
-                ids=jax.ShapeDtypeStruct((S, cap), jnp.int32),
-                mask=jax.ShapeDtypeStruct((S, cap), dt)),
+            sv_abs,
             SolverParams(*(jax.ShapeDtypeStruct((S,), f32)
-                           for _ in range(5))))
+                           for _ in SolverParams._fields)))
     return StepBundle(
         fn=fn, args=args,
         in_shardings=in_specs,
@@ -283,7 +295,8 @@ def build_svm_sweep_step(svm_cfg, mesh, num_configs: int) -> StepBundle:
         model=None)
 
 
-def build_svm_serve_step(svm_cfg, mesh, num_streams: int = 4) -> StepBundle:
+def build_svm_serve_step(svm_cfg, mesh, num_streams: int = 4,
+                         shuffle_impl: Optional[str] = None) -> StepBundle:
     """One streaming update WAVE on the production mesh: S tenant
     streams each fold (new rows ∪ carried SVs) in a single jitted
     device pass — the sweep program with per-stream data
@@ -292,9 +305,9 @@ def build_svm_serve_step(svm_cfg, mesh, num_streams: int = 4) -> StepBundle:
     Rows per stream = stream_rows_per_wave new messages + the carried
     SV capacity, sharded over the data axes."""
     import numpy as np
-    from repro.core.mapreduce_svm import MRSVMConfig, SVBuffer
+    from repro.core.mapreduce_svm import MRSVMConfig
     from repro.core.svm import SolverParams, SVMConfig
-    from repro.core.sweep import sharded_sweep_program
+    from repro.core.sweep import init_sharded_sweep_sv, sharded_sweep_program
 
     axes = batch_axes(mesh)
     ndev = int(np.prod([mesh.shape[a] for a in axes]))
@@ -305,23 +318,22 @@ def build_svm_serve_step(svm_cfg, mesh, num_streams: int = 4) -> StepBundle:
     S = num_streams
     mr_cfg = MRSVMConfig(
         sv_capacity=cap,
+        shuffle_impl=_svm_shuffle(svm_cfg, shuffle_impl),
         svm=SVMConfig(C=svm_cfg.C, max_epochs=svm_cfg.max_epochs))
     fn, in_specs, out_specs = sharded_sweep_program(
         mesh, axes, mr_cfg, per, per_config_data=True)
 
     dt = jnp.dtype(svm_cfg.dtype)
     f32 = jnp.float32
+    sv_abs = jax.eval_shape(
+        lambda: init_sharded_sweep_sv(mr_cfg, S, d, ndev, per, dt,
+                                      per_config_data=True))
     args = (jax.ShapeDtypeStruct((S, n, d), dt),
             jax.ShapeDtypeStruct((S, n), dt),
             jax.ShapeDtypeStruct((S, n), dt),
-            SVBuffer(
-                x=jax.ShapeDtypeStruct((S, cap, d), dt),
-                y=jax.ShapeDtypeStruct((S, cap), dt),
-                alpha=jax.ShapeDtypeStruct((S, cap), dt),
-                ids=jax.ShapeDtypeStruct((S, cap), jnp.int32),
-                mask=jax.ShapeDtypeStruct((S, cap), dt)),
+            sv_abs,
             SolverParams(*(jax.ShapeDtypeStruct((S,), f32)
-                           for _ in range(5))))
+                           for _ in SolverParams._fields)))
     return StepBundle(
         fn=fn, args=args,
         in_shardings=in_specs,

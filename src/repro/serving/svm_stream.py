@@ -112,7 +112,16 @@ class StreamingSVMService:
 
     def __init__(self, cfg: MRSVMConfig, num_partitions: int = 8,
                  max_batches_per_wave: int = 4,
-                 keep_history: bool = False):
+                 keep_history: bool = False,
+                 shuffle_impl: Optional[str] = None):
+        # ``shuffle_impl`` overrides the SV merge transport of the
+        # config (DESIGN.md §10). The functional folds this host-local
+        # service runs have no collective, but the config is the single
+        # source of truth for any sharded program derived from the
+        # service (launch.steps.build_svm_serve_step / dryrun
+        # --shape svm_serve), so the override is applied here.
+        if shuffle_impl is not None:
+            cfg = dataclasses.replace(cfg, shuffle_impl=shuffle_impl)
         self.cfg = cfg
         self.L = num_partitions
         self.max_batches_per_wave = max_batches_per_wave

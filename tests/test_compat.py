@@ -108,3 +108,50 @@ def test_all_gather_and_pmax():
                           out_specs=(P(), P()), check_vma=False)
     g, m = jax.jit(fn)(jnp.arange(4.0))
     assert g.shape == (4,) and float(m) == 3.0
+
+
+# ---------------------------------------------------------------------------
+# Ring-pipelined shuffle primitives (ISSUE 4 tentpole).
+# ---------------------------------------------------------------------------
+
+def test_ring_shift_single_device_identity():
+    """A 1-device ring is the identity — and ring_shift must map over a
+    whole pytree (the SV chunk + packed sideband of the ring merge)."""
+    mesh = compat.make_mesh((1,), ("data",))
+    fn = compat.shard_map(
+        lambda x: compat.ring_shift((x, x * 2.0), ("data",)),
+        mesh=mesh, in_specs=(P("data"),), out_specs=(P("data"), P("data")),
+        check_vma=False)
+    a, b = jax.jit(fn)(jnp.arange(4.0))
+    np.testing.assert_array_equal(np.asarray(a), np.arange(4.0))
+    np.testing.assert_array_equal(np.asarray(b), 2.0 * np.arange(4.0))
+
+
+def test_ring_shift_multi_axis_fallback(monkeypatch):
+    """Where jax.lax.ppermute rejects a tuple of axis names, ring_shift
+    must rebuild the flattened ring from per-axis permutes (inner shift
+    + wrap-correcting outer shift) instead of failing."""
+    orig = jax.lax.ppermute
+
+    def single_axis_only(x, axis_name, perm):
+        if not isinstance(axis_name, str):
+            raise TypeError("tuple axis names unsupported (old JAX)")
+        return orig(x, axis_name, perm)
+
+    monkeypatch.setattr(jax.lax, "ppermute", single_axis_only)
+    mesh = compat.make_mesh((1, 1), ("a", "b"))
+    fn = compat.shard_map(lambda x: compat.ring_shift(x, ("a", "b")),
+                          mesh=mesh, in_specs=(P(),), out_specs=P(),
+                          check_vma=False)
+    out = jax.jit(fn)(jnp.arange(3.0))
+    np.testing.assert_array_equal(np.asarray(out), np.arange(3.0))
+
+
+def test_ppermute_single_axis():
+    mesh = compat.make_mesh((1,), ("data",))
+    fn = compat.shard_map(
+        lambda x: compat.ppermute(x, ("data",), [(0, 0)]),
+        mesh=mesh, in_specs=(P("data"),), out_specs=P("data"),
+        check_vma=False)
+    np.testing.assert_array_equal(np.asarray(jax.jit(fn)(jnp.arange(2.0))),
+                                  np.arange(2.0))

@@ -218,3 +218,63 @@ def test_sweep_batched_equals_sequential(problem):
         # delta lands within float-reassociation distance of gamma; the
         # deterministic tests in test_sweep.py assert exact equality.
         assert abs(int(res.rounds[s]) - seq.rounds) <= 1
+
+
+@st.composite
+def dedup_candidates_problem(draw):
+    """A device's per-config candidate chunks, as _round_candidates
+    would emit them: distinct home-row picks per config (top_k), α
+    above the SV threshold on live slots, arbitrary dead slots."""
+    per = draw(st.integers(8, 24))
+    k = draw(st.integers(2, 8))
+    k = min(k, per)
+    S = draw(st.integers(1, 4))
+    d = draw(st.integers(2, 5))
+    idx = draw(st.integers(0, 3))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    Xl = rng.normal(0, 1, (per, d)).astype(np.float32)
+    yl = np.where(rng.random(per) < 0.5, -1.0, 1.0).astype(np.float32)
+    topi = np.stack([rng.choice(per, size=k, replace=False)
+                     for _ in range(S)])
+    live = (rng.random((S, k)) < 0.8).astype(np.float32)
+    alpha = rng.uniform(1e-3, 1.0, (S, k)).astype(np.float32) * live
+    return Xl, yl, topi, live, alpha, idx, per
+
+
+@given(dedup_candidates_problem())
+@settings(max_examples=20, deadline=None)
+def test_dedup_roundtrip_lossless(problem):
+    """Cross-config SV dedup (ISSUE 4): expand_chunk ∘ dedup_candidates
+    must reproduce every config's (x, y, α, ids, mask) chunk exactly —
+    order included — whenever the unique capacity is the lossless
+    default min(S·k, per)."""
+    from repro.core.mapreduce_svm import SVBuffer
+    from repro.core.sweep import dedup_candidates, expand_chunk
+
+    Xl, yl, topi, live, alpha, idx, per = problem
+    S, k = live.shape
+    Xl_j, yl_j = jnp.asarray(Xl), jnp.asarray(yl)
+    cand = SVBuffer(
+        x=jnp.asarray(Xl[topi] * live[..., None]),
+        y=jnp.asarray(yl[topi] * live),
+        alpha=jnp.asarray(alpha),
+        ids=jnp.asarray(np.where(live > 0, idx * per + topi, -1)
+                        .astype(np.int32)),
+        mask=jnp.asarray(live))
+    U = min(S * k, per)
+    chunk = dedup_candidates(cand, Xl_j, yl_j, idx, per, U,
+                             wire_dtype=jnp.float32)
+    # unique rows really are unique (each live id appears once)
+    ids_u = np.asarray(chunk.ids)
+    live_ids = ids_u[ids_u >= 0]
+    assert len(live_ids) == len(set(live_ids.tolist()))
+    back = expand_chunk(chunk, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(back.ids),
+                                  np.asarray(cand.ids))
+    np.testing.assert_array_equal(np.asarray(back.mask),
+                                  np.asarray(cand.mask))
+    np.testing.assert_array_equal(np.asarray(back.alpha),
+                                  np.asarray(cand.alpha))
+    np.testing.assert_array_equal(np.asarray(back.y), np.asarray(cand.y))
+    np.testing.assert_array_equal(np.asarray(back.x), np.asarray(cand.x))

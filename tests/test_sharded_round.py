@@ -44,14 +44,20 @@ def _functional_reference(X, y, mask, cfg, rounds):
     return sv, risks
 
 
-def _assert_round_equivalence(mesh_shape, mesh_axes, rounds=3):
+def _assert_round_equivalence(mesh_shape, mesh_axes, rounds=3,
+                              shuffle_impl="allgather"):
     from repro import compat
     from repro.core import MRSVMConfig, SVMConfig
     from repro.core.mapreduce_svm import build_sharded_round, init_sv_buffer
 
     X, y, mask = _problem()
     n, d = X.shape
-    cfg = MRSVMConfig(sv_capacity=64, svm=SVMConfig(C=1.0, max_epochs=15))
+    # ring: wire dtype = data dtype so the transport is bit-exact and
+    # the functional reference stays the strict oracle (the bf16 wire
+    # is exercised separately with bf16-representable data)
+    cfg = MRSVMConfig(sv_capacity=64, svm=SVMConfig(C=1.0, max_epochs=15),
+                      shuffle_impl=shuffle_impl,
+                      shuffle_wire_dtype="float32")
 
     mesh = compat.make_mesh(mesh_shape, mesh_axes)
     data_axes = tuple(a for a in mesh_axes if a != "model")
@@ -140,6 +146,76 @@ def _check_pod_2d():
     _assert_round_equivalence((2, NDEV // 2), ("pod", "data"))
 
 
+def _check_ring_1d():
+    # ISSUE 4 tentpole: the ring-pipelined merge must reproduce the
+    # functional round exactly (f32 wire ≡ no quantization)
+    _assert_round_equivalence((NDEV,), ("data",), shuffle_impl="ring")
+
+
+def _check_ring_pod_2d():
+    # ring over the flattened ("pod", "data") index — multi-axis ppermute
+    _assert_round_equivalence((2, NDEV // 2), ("pod", "data"),
+                              shuffle_impl="ring")
+
+
+def _check_ring_fallback_pod_2d():
+    """Old-JAX decomposition path: force single-axis-only ppermute so
+    compat.ring_shift rebuilds the flattened ("pod","data") ring from
+    the inner shift + wrap-correcting outer shift, and re-run the full
+    pod-mesh ring equivalence against the functional oracle — the
+    1×1-mesh unit test can't catch a misrouted wrap."""
+    import jax.lax as _lax
+    orig = _lax.ppermute
+
+    def single_axis_only(x, axis_name, perm):
+        if not isinstance(axis_name, str):
+            raise TypeError("tuple axis names unsupported (forced)")
+        return orig(x, axis_name, perm)
+
+    _lax.ppermute = single_axis_only
+    try:
+        _assert_round_equivalence((2, NDEV // 2), ("pod", "data"),
+                                  shuffle_impl="ring")
+    finally:
+        _lax.ppermute = orig
+
+
+def _check_ring_bf16_wire(rounds=3):
+    """The production wire dtype: with bf16-representable rows the wire
+    round-trip is lossless, so ring ≡ allgather stays strict."""
+    import dataclasses as dc
+
+    import jax.numpy as jnp
+    from repro import compat
+    from repro.core import MRSVMConfig, SVMConfig
+    from repro.core.mapreduce_svm import build_sharded_round, init_sv_buffer
+
+    X, y, mask = _problem()
+    X = X.astype(jnp.bfloat16).astype(jnp.float32)
+    y = jnp.sign(X @ jax.random.normal(jax.random.PRNGKey(1), (X.shape[1],)))
+    n, d = X.shape
+    cfg_a = MRSVMConfig(sv_capacity=64, svm=SVMConfig(C=1.0, max_epochs=15))
+    cfg_r = dc.replace(cfg_a, shuffle_impl="ring")   # bf16 wire default
+    mesh = compat.make_mesh((NDEV,), ("data",))
+    fa = build_sharded_round(mesh, ("data",), cfg_a, n // NDEV)
+    fr = build_sharded_round(mesh, ("data",), cfg_r, n // NDEV)
+    sv_a = init_sv_buffer(cfg_a.sv_capacity, d)
+    sv_r = sv_a._replace(x=sv_a.x.astype(jnp.bfloat16))
+    for _ in range(rounds):
+        sv_a, risks_a, w_a, b_a = fa(X, y, mask, sv_a)
+        sv_r, risks_r, w_r, b_r = fr(X, y, mask, sv_r)
+    np.testing.assert_allclose(np.asarray(risks_a), np.asarray(risks_r),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(sv_a.ids), np.asarray(sv_r.ids))
+    np.testing.assert_allclose(np.asarray(sv_a.alpha),
+                               np.asarray(sv_r.alpha), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(sv_a.x),
+                               np.asarray(sv_r.x).astype(np.float32),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(w_a), np.asarray(w_r),
+                               rtol=1e-5, atol=1e-6)
+
+
 def _check_gram_xla():
     _assert_gram_round_equivalence("xla")
 
@@ -174,3 +250,31 @@ def test_sharded_round_pallas_gram_path():
         _check_gram_pallas()
     else:
         _in_subprocess("_check_gram_pallas")
+
+
+def test_ring_round_matches_functional():
+    if len(jax.devices()) >= NDEV:
+        _check_ring_1d()
+    else:
+        _in_subprocess("_check_ring_1d")
+
+
+def test_ring_round_matches_functional_pod_mesh():
+    if len(jax.devices()) >= NDEV:
+        _check_ring_pod_2d()
+    else:
+        _in_subprocess("_check_ring_pod_2d")
+
+
+def test_ring_round_bf16_wire_matches_allgather():
+    if len(jax.devices()) >= NDEV:
+        _check_ring_bf16_wire()
+    else:
+        _in_subprocess("_check_ring_bf16_wire")
+
+
+def test_ring_round_single_axis_ppermute_fallback():
+    if len(jax.devices()) >= NDEV:
+        _check_ring_fallback_pod_2d()
+    else:
+        _in_subprocess("_check_ring_fallback_pod_2d")

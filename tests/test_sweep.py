@@ -148,22 +148,29 @@ def test_ovr_folds_into_batch_axis():
     assert ovr.risks()[1] < ovr.risks()[0]
 
 
-def test_pallas_gram_rejects_traced_kernel_sweep():
-    """gram_impl='pallas' bakes γ at trace time; a traced rbf sweep over
-    it would train on a Gram the scores never saw — must raise, not
-    silently select a meaningless winner."""
-    from repro.core import fit_binary
-    X, y = _problem(n=32, d=4)
-    cfg = SVMConfig(C=1.0, max_epochs=2, use_gram=True, gram_impl="pallas",
-                    kernel=KernelConfig("rbf", gamma=1.0))
-    with pytest.raises(ValueError, match="pallas"):
-        fit_binary(X, y, cfg=cfg, params=cfg.params())
-    # linear Gram doesn't involve gamma — traced params stay legal
-    cfg_lin = SVMConfig(C=1.0, max_epochs=2, use_gram=True,
-                        gram_impl="pallas")
-    fit_binary(X, y, cfg=cfg_lin, params=cfg_lin.params())
-    # and the static (non-sweep) rbf Pallas path stays legal
-    fit_binary(X, y, cfg=cfg)
+def test_pallas_gram_traced_kernel_sweep_matches_xla():
+    """γ/coef0 are traced scalar operands of the Pallas Gram kernel
+    (ISSUE 4 satellite): a traced rbf sweep on ``gram_impl='pallas'``
+    must reproduce the XLA Gram path config-for-config — the rejection
+    guard this replaces is gone."""
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(0, 1, (128, 2)).astype(np.float32))
+    y = jnp.sign(X[:, 0] * X[:, 1])
+    kernel = KernelConfig("rbf", gamma=1.0)
+    mk = lambda impl: MRSVMConfig(
+        sv_capacity=32, max_rounds=2, gamma=1e-3,
+        svm=SVMConfig(C=10.0, max_epochs=8, use_gram=True, gram_impl=impl,
+                      kernel=kernel))
+    cfg_p, cfg_x = mk("pallas"), mk("xla")
+    params = sweep_grid(cfg_p.svm, C=[1.0, 10.0], gamma=[0.3, 1.0, 3.0])
+    res_p = fit_mapreduce_sweep(X, y, 4, cfg_p, params)
+    res_x = fit_mapreduce_sweep(X, y, 4, cfg_x, params)
+    np.testing.assert_allclose(np.asarray(res_p.risks),
+                               np.asarray(res_x.risks), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(res_p.sv.alpha),
+                               np.asarray(res_x.sv.alpha),
+                               rtol=1e-4, atol=1e-4)
+    assert res_p.best == res_x.best
 
 
 def test_sweep_rejects_ragged_params():
@@ -173,7 +180,7 @@ def test_sweep_rejects_ragged_params():
     from repro.core import SolverParams
     bad = SolverParams(C=jnp.ones((3,)), tol=jnp.ones((2,)),
                        sv_threshold=jnp.ones((3,)), gamma=jnp.ones((3,)),
-                       coef0=jnp.ones((3,)))
+                       coef0=jnp.ones((3,)), max_epochs=jnp.ones((3,)))
     with pytest.raises(ValueError, match="leading"):
         fit_mapreduce_sweep(X, y, 4, cfg, bad)
 
@@ -219,6 +226,118 @@ def test_sharded_sweep_matches_functional_sweep():
                        capture_output=True, text=True, timeout=600,
                        env=subprocess_env(PYTHONPATH=str(REPO / "src")))
     assert "SHARDED_SWEEP_OK" in r.stdout, r.stdout + r.stderr
+
+
+_RING_SWEEP_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses as dc
+import jax, jax.numpy as jnp, numpy as np
+from repro import compat
+from repro.core import (MRSVMConfig, SVMConfig, sweep_grid, DedupChunk,
+                        build_sharded_sweep_round, run_sharded_sweep,
+                        fit_mapreduce_sweep)
+
+n, d = 512, 12
+X = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+w = jax.random.normal(jax.random.PRNGKey(1), (d,))
+y = jnp.sign(X @ w)
+# a driver gamma that makes configs converge at DIFFERENT rounds, so the
+# dedup ring's snapshot freezing is exercised, not just the happy path
+cfg_a = MRSVMConfig(sv_capacity=64, gamma=5e-3, max_rounds=6,
+                    svm=SVMConfig(C=1.0, max_epochs=15))
+cfg_r = dc.replace(cfg_a, shuffle_impl="ring", shuffle_wire_dtype="float32")
+params = sweep_grid(cfg_a.svm, C=[1e-4, 0.5, 1.0, 5.0])
+
+mesh = compat.make_mesh((8,), ("data",))
+fa = build_sharded_sweep_round(mesh, ("data",), cfg_a, n // 8)
+fr = build_sharded_sweep_round(mesh, ("data",), cfg_r, n // 8)
+assert isinstance(fr.init_sv(4, d), DedupChunk)   # shared-row ring state
+sa = run_sharded_sweep(fa, X, y, None, cfg_a, params)
+sr = run_sharded_sweep(fr, X, y, None, cfg_r, params)
+
+np.testing.assert_array_equal(sa.rounds, sr.rounds)
+np.testing.assert_allclose(np.asarray(sa.risks), np.asarray(sr.risks),
+                           rtol=1e-6)
+np.testing.assert_allclose(np.asarray(sa.ws), np.asarray(sr.ws), rtol=1e-6)
+np.testing.assert_array_equal(np.asarray(sa.sv.ids), np.asarray(sr.sv.ids))
+np.testing.assert_allclose(np.asarray(sa.sv.x), np.asarray(sr.sv.x),
+                           rtol=1e-6)
+np.testing.assert_allclose(np.asarray(sa.sv.alpha), np.asarray(sr.sv.alpha),
+                           rtol=1e-6)
+assert sa.best == sr.best
+
+fres = fit_mapreduce_sweep(X, y, 8, cfg_a, params)
+np.testing.assert_allclose(np.asarray(sr.risks), np.asarray(fres.risks),
+                           rtol=1e-4, atol=1e-5)
+
+# per-stream (per_config_data) wave: ring ≡ allgather with distinct data
+S = 4
+Xs = jax.random.normal(jax.random.PRNGKey(3), (S, n, d))
+ws = jax.random.normal(jax.random.PRNGKey(4), (S, d))
+ys = jnp.sign(jnp.einsum("snd,sd->sn", Xs, ws))
+ms = jnp.ones((S, n))
+p4 = sweep_grid(cfg_a.svm, C=[0.1, 0.5, 1.0, 2.0])
+fa2 = build_sharded_sweep_round(mesh, ("data",), cfg_a, n // 8,
+                                per_config_data=True)
+fr2 = build_sharded_sweep_round(mesh, ("data",), cfg_r, n // 8,
+                                per_config_data=True)
+sa2 = run_sharded_sweep(fa2, Xs, ys, ms, cfg_a, p4)
+sr2 = run_sharded_sweep(fr2, Xs, ys, ms, cfg_r, p4)
+np.testing.assert_allclose(np.asarray(sa2.risks), np.asarray(sr2.risks),
+                           rtol=1e-6)
+np.testing.assert_array_equal(np.asarray(sa2.sv.ids),
+                              np.asarray(sr2.sv.ids))
+np.testing.assert_allclose(np.asarray(sa2.sv.x), np.asarray(sr2.sv.x),
+                           rtol=1e-6)
+print("RING_SWEEP_OK")
+"""
+
+
+def test_ring_sweep_matches_allgather_and_functional():
+    """ISSUE 4 tentpole: the ring-pipelined, cross-config-deduplicated
+    sweep transport must converge to the same models as the allgather
+    sweep AND the functional sweep — including when configs freeze at
+    different rounds (the dedup state is snapshot-frozen, not
+    per-round-frozen)."""
+    from conftest import subprocess_env
+    r = subprocess.run([sys.executable, "-c", _RING_SWEEP_SCRIPT],
+                       capture_output=True, text=True, timeout=600,
+                       env=subprocess_env(PYTHONPATH=str(REPO / "src")))
+    assert "RING_SWEEP_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_per_config_max_epochs_cutoff():
+    """SolverParams.max_epochs is a traced per-config epoch budget:
+    the solver must stop at min(static bound, cutoff) and a sweep over
+    cutoffs must equal per-config sequential runs (ROADMAP sweep
+    follow-up)."""
+    from repro.core import fit_binary
+    X, y = _problem(n=96, d=6, seed=5)
+    cfg = SVMConfig(C=1.0, max_epochs=20, tol=1e-9)
+
+    m4 = fit_binary(X, y, cfg=cfg, params=cfg.params()._replace(
+        max_epochs=jnp.asarray(4.0)))
+    assert int(m4.epochs_run) == 4
+    # the cutoff can only tighten the static bound
+    m_over = fit_binary(X, y, cfg=cfg, params=cfg.params()._replace(
+        max_epochs=jnp.asarray(100.0)))
+    assert int(m_over.epochs_run) <= 20
+
+    mr = MRSVMConfig(sv_capacity=32, gamma=1e-6, max_rounds=2,
+                     svm=cfg)
+    params = sweep_grid(cfg, max_epochs=[2, 5, 20])
+    res = fit_mapreduce_sweep(X, y, 4, mr, params)
+    for s in range(3):
+        p_s = compat.tree_map(lambda a: a[s], params)
+        seq = fit_mapreduce(X, y, 4, mr, params=p_s)
+        np.testing.assert_allclose(float(res.risks[s]), float(seq.risk),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(res.ws[s]), np.asarray(seq.w),
+                                   rtol=1e-4, atol=1e-5)
+    # tighter epoch budgets on a tight tol leave higher risk
+    r = np.asarray(res.risks)
+    assert r[0] >= r[2] - 1e-5
 
 
 @pytest.mark.slow
