@@ -6,7 +6,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-dist test-fast check
+.PHONY: test test-dist test-dist-mp test-fast check
 
 # Tier-1: the ROADMAP verify command.
 test:
@@ -16,6 +16,13 @@ test:
 test-dist:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	$(PY) -m pytest -q tests/test_sharded_round.py tests/test_mapreduce.py
+
+# Multi-process: 2 real jax.distributed CPU processes (localhost
+# coordinator + gloo collectives), per-host loaders, both shuffles ≡
+# the functional reference. The test spawns its own processes, so no
+# XLA flags are needed here (ISSUE 5 / DESIGN.md §11).
+test-dist-mp:
+	$(PY) -m pytest -q tests/test_multihost.py
 
 # Quick signal while iterating (skips the slow dry-run subprocess tests).
 test-fast:

@@ -20,6 +20,12 @@ Drift handled here:
 * ``jax.tree.map`` (0.4.25+) vs ``jax.tree_util.tree_map``.
 * ``jax.lax.axis_index`` over a TUPLE of axis names (flattened index),
   which older versions only accept for a single name.
+* ``jax.distributed.initialize`` kwarg drift (newer versions grow
+  kwargs like ``coordinator_bind_address``/``cluster_detection_method``
+  that 0.4.x lacks), the ``jax_cpu_collectives_implementation`` config
+  (spelled ``jax_cpu_enable_gloo_collectives`` on some versions, absent
+  on others), and ``jax.make_array_from_process_local_data`` (newer)
+  vs hand-assembly over ``make_array_from_single_device_arrays``.
 """
 from __future__ import annotations
 
@@ -306,3 +312,128 @@ def ring_shift(tree: Any, axis_names) -> Any:
         return jnp.where(inner_idx == 0, wrapped, stepped)
 
     return tree_map(shift_one, tree)
+
+
+# ---------------------------------------------------------------------------
+# Multi-process runtime (repro.launch.cluster rides on these).
+# ---------------------------------------------------------------------------
+
+def distributed_initialize(coordinator_address: Optional[str] = None,
+                           num_processes: Optional[int] = None,
+                           process_id: Optional[int] = None,
+                           **kwargs) -> None:
+    """``jax.distributed.initialize`` with unsupported kwargs dropped.
+
+    The core triple (coordinator/num_processes/process_id) is stable
+    back to 0.4.x; the optional extras (``initialization_timeout``,
+    ``coordinator_bind_address``, ``cluster_detection_method``, …)
+    drifted in over the CI version matrix, so they are filtered against
+    the installed signature instead of hard-coded.
+    """
+    impl = jax.distributed.initialize
+    try:
+        params = inspect.signature(impl).parameters
+        kwargs = {k: v for k, v in kwargs.items() if k in params}
+    except (TypeError, ValueError):           # pragma: no cover
+        kwargs = {}
+    impl(coordinator_address=coordinator_address,
+         num_processes=num_processes, process_id=process_id, **kwargs)
+
+
+def enable_cpu_collectives(impl: str = "gloo") -> bool:
+    """Turn on cross-process CPU collectives (needed for any
+    multi-process run on the CPU backend; TPU/GPU ignore it). Config
+    name drift: ``jax_cpu_collectives_implementation`` (current) →
+    ``jax_cpu_enable_gloo_collectives`` (transitional) → absent (no
+    multi-process CPU support; returns False so the caller can raise a
+    readable error instead of hanging in a collective).
+
+    Call ONLY on the distributed path, between
+    :func:`distributed_initialize` being decided and the first backend
+    use: gloo collectives are constructed at CPU-client init from the
+    distributed runtime client, so enabling them in a single-process
+    program breaks backend creation outright (``distributed_client:
+    NoneType``) — which is exactly why ``init_cluster``'s 1-process
+    fast path never touches this."""
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", impl)
+        return True
+    except (AttributeError, ValueError):
+        pass
+    if impl == "gloo":
+        try:
+            jax.config.update("jax_cpu_enable_gloo_collectives", True)
+            return True
+        except (AttributeError, ValueError):
+            pass
+        # 0.5+ builds gloo CPU collectives by default; a missing knob
+        # there means nothing needs enabling.
+        return jax_version() >= (0, 5, 0)
+    return False
+
+
+def make_array_from_process_local_data(sharding, local_data,
+                                       global_shape: Optional[Tuple[int, ...]]
+                                       = None):
+    """Assemble a global ``jax.Array`` from THIS process's shard.
+
+    ``local_data`` is the concatenation (along the sharded dimension)
+    of the shards this process's addressable devices hold.  Newer JAX
+    has ``jax.make_array_from_process_local_data``; the fallback builds
+    the same array by slicing ``local_data`` per addressable device and
+    feeding ``make_array_from_single_device_arrays`` — it supports the
+    shapes this repo uses (at most ONE sharded dimension per array,
+    possibly replicated over further mesh axes).
+    """
+    maker = getattr(jax, "make_array_from_process_local_data", None)
+    if maker is not None:
+        return maker(sharding, local_data, global_shape)
+    local_data = np.asarray(local_data)
+    if global_shape is None:
+        raise ValueError("global_shape is required on JAX without "
+                         "make_array_from_process_local_data")
+    global_shape = tuple(int(s) for s in global_shape)
+    idx_map = sharding.addressable_devices_indices_map(global_shape)
+
+    def bounds(idx):
+        idx = idx if isinstance(idx, tuple) else (idx,)
+        idx = idx + (slice(None),) * (len(global_shape) - len(idx))
+        return tuple((0 if s.start is None else int(s.start),
+                      dim if s.stop is None else int(s.stop))
+                     for s, dim in zip(idx, global_shape))
+
+    uniq = sorted({bounds(i) for i in idx_map.values()})
+    varying = [k for k in range(len(global_shape))
+               if len({u[k] for u in uniq}) > 1]
+    if len(varying) > 1:
+        raise NotImplementedError(
+            "fallback assembly supports one sharded dimension, got "
+            f"{len(varying)} over shape {global_shape}")
+    dim = varying[0] if varying else 0
+    offsets = {}
+    pos = 0
+    for u in uniq:                      # unique shards, ascending offset
+        size = u[dim][1] - u[dim][0]
+        offsets[u] = (pos, size)
+        pos += size
+    if pos != local_data.shape[dim] and varying:
+        raise ValueError(
+            f"local data has {local_data.shape[dim]} rows on dim {dim} "
+            f"but this process's shards cover {pos}")
+    arrays = []
+    for dev, idx in idx_map.items():
+        start, size = offsets[bounds(idx)]
+        sel = [slice(None)] * len(global_shape)
+        if varying:
+            sel[dim] = slice(start, start + size)
+        arrays.append(jax.device_put(local_data[tuple(sel)], dev))
+    return jax.make_array_from_single_device_arrays(
+        global_shape, sharding, arrays)
+
+
+def process_index() -> int:
+    return int(jax.process_index())
+
+
+def process_count() -> int:
+    return int(jax.process_count())

@@ -1,1 +1,2 @@
-from repro.data.pipeline import DataConfig, lm_batch_at, lm_batches, svm_rows
+from repro.data.pipeline import (DataConfig, host_row_range, lm_batch_at,
+                                 lm_batches, svm_rows, svm_rows_shard)

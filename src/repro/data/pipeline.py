@@ -83,19 +83,95 @@ def lm_batch_at(cfg: DataConfig, model_cfg: ModelConfig,
     return batch
 
 
-def svm_rows(num_rows: int, num_features: int, seed: int = 0,
-             signal_dims: int = 64) -> Tuple[np.ndarray, np.ndarray]:
-    """Synthetic sparse-ish TF×IDF-like rows with a linear signal."""
-    rng = np.random.default_rng(seed)
+# ---------------------------------------------------------------------------
+# TF×IDF row stream (MapReduce-SVM), multi-host aware (DESIGN.md §11).
+#
+# Rows are generated in BLOCK-STATELESS chunks: block j draws from
+# default_rng((seed, 1, j)) independently of every other block, so
+#   * generation is fully vectorized (no per-row Python loop — the old
+#     host-side bottleneck at dry-run/bench scale), and
+#   * a process can materialize exactly its own row range
+#     (svm_rows_shard) while the union over processes is, by
+#     construction, the single-host dataset svm_rows would return.
+# NB the vectorization changed the raw random stream vs the historical
+# per-row rng.choice loop (deliberate — no fixture pins exact values;
+# the distribution, normalization and linear signal are unchanged).
+# ---------------------------------------------------------------------------
+
+_ROW_BLOCK = 1024     # rows per stateless block (host memory granule)
+
+
+def _svm_signal(num_features: int, seed: int, signal_dims: int) -> np.ndarray:
+    """The planted linear separator — identical on every host."""
+    rng = np.random.default_rng((seed, 0))
+    signal_dims = min(signal_dims, num_features)
     w = np.zeros(num_features, np.float32)
     idx = rng.choice(num_features, signal_dims, replace=False)
     w[idx] = rng.normal(0, 1, signal_dims)
-    X = np.zeros((num_rows, num_features), np.float32)
-    nnz = max(4, num_features // 256)
-    for i in range(num_rows):
-        cols = rng.choice(num_features, nnz, replace=False)
-        X[i, cols] = rng.random(nnz).astype(np.float32)
+    return w
+
+
+def _svm_row_block(block: int, rows: int, num_features: int,
+                   seed: int) -> np.ndarray:
+    """``rows`` normalized sparse-ish rows of stateless block ``block``."""
+    rng = np.random.default_rng((seed, 1, block))
+    nnz = min(num_features, max(4, num_features // 256))
+    # nnz distinct columns per row without a Python loop: the nnz
+    # smallest of d iid uniforms are a uniform no-replacement sample
+    scores = rng.random((rows, num_features), dtype=np.float32)
+    cols = np.argpartition(scores, nnz - 1, axis=1)[:, :nnz]
+    X = np.zeros((rows, num_features), np.float32)
+    np.put_along_axis(X, cols, rng.random((rows, nnz), dtype=np.float32),
+                      axis=1)
     norm = np.linalg.norm(X, axis=1, keepdims=True)
-    X /= np.maximum(norm, 1e-9)
+    return X / np.maximum(norm, 1e-9)
+
+
+def host_row_range(num_rows: int, process_index: int,
+                   process_count: int) -> Tuple[int, int]:
+    """Balanced contiguous ``[start, stop)`` of one process's rows.
+
+    Ranges are pairwise disjoint and cover ``range(num_rows)`` exactly;
+    contiguity matches the process-major device order of
+    :func:`repro.launch.mesh.make_cluster_mesh`, so global row id
+    ``g`` lives on the host whose range contains ``g``.
+    """
+    if not 0 <= process_index < process_count:
+        raise ValueError(f"process_index {process_index} outside "
+                         f"[0, {process_count})")
+    return (process_index * num_rows // process_count,
+            (process_index + 1) * num_rows // process_count)
+
+
+def svm_rows(num_rows: int, num_features: int, seed: int = 0,
+             signal_dims: int = 64) -> Tuple[np.ndarray, np.ndarray]:
+    """Synthetic sparse-ish TF×IDF-like rows with a linear signal."""
+    X, y = svm_rows_shard(num_rows, num_features, seed, signal_dims)
+    return X, y
+
+
+def svm_rows_shard(num_rows: int, num_features: int, seed: int = 0,
+                   signal_dims: int = 64, *, process_index: int = 0,
+                   process_count: int = 1
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """THIS process's disjoint shard of the ``svm_rows`` dataset.
+
+    Materializes only the stateless blocks covering the host's row
+    range (plus at most one partial block per edge), never the full
+    matrix: the per-host loading half of the multi-host substrate. With
+    the defaults (one process) it IS the full dataset.
+    """
+    start, stop = host_row_range(num_rows, process_index, process_count)
+    w = _svm_signal(num_features, seed, signal_dims)
+    if stop == start:
+        X = np.zeros((0, num_features), np.float32)
+    else:
+        parts = []
+        for block in range(start // _ROW_BLOCK, (stop - 1) // _ROW_BLOCK + 1):
+            b0 = block * _ROW_BLOCK
+            rows = min(num_rows - b0, _ROW_BLOCK)
+            full = _svm_row_block(block, rows, num_features, seed)
+            parts.append(full[max(start - b0, 0):stop - b0])
+        X = np.concatenate(parts, axis=0)
     y = np.sign(X @ w + 1e-3).astype(np.float32)
     return X, y

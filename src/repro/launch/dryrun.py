@@ -26,13 +26,14 @@ import traceback
 def run_one(arch: str, shape_name: str, multi_pod: bool,
             rules_name: str = "baseline", out_dir: str = "benchmarks/artifacts",
             verbose: bool = True, measure_layers: bool = True,
-            shuffle: str = None) -> dict:
+            shuffle: str = None, processes: int = 1) -> dict:
     import jax
     import numpy as np
 
     from repro import compat
     from repro.configs import get_config
     from repro.launch import steps as steps_lib
+    from repro.launch.cluster import simulated_topology
     from repro.launch.costs import analytic_costs
     from repro.launch.hlo_analysis import (collective_stats,
                                            combine_with_layer, dominant_term,
@@ -49,9 +50,20 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     record = {"arch": arch, "shape": shape_name,
               "mesh": "2x16x16" if multi_pod else "16x16",
               "chips": chips, "rules": rules_name, "status": "ok"}
+    if processes > 1:
+        record["processes"] = processes
 
     t0 = time.time()
     try:
+        if processes > 1:
+            # Simulated multi-host split (DESIGN.md §11): what each of
+            # the N processes would hold of the job. Recorded in the
+            # artifact — and in its NAME, so single- and multi-host
+            # rooflines of the same (arch, shape, mesh) never clobber
+            # each other. Inside the try: an indivisible split becomes
+            # a structured status:error record like every other
+            # invalid input, not a raw traceback.
+            record["topology"] = simulated_topology(processes, chips)
         if getattr(cfg, "family", None) == "svm":
             # SV merge transport: the ring-pipelined shuffle or the
             # monolithic all-gather (DESIGN.md §10); default from the
@@ -80,6 +92,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                 return record
             bundle = steps_lib.build_step(cfg, mesh, shape,
                                           rules=get_rules(rules_name))
+
+        if processes > 1:
+            # per-host input shapes: what each process's loader must
+            # materialize before make_global_array assembly
+            local_abs = steps_lib.per_host_abstract(
+                bundle.args, bundle.in_shardings, mesh, processes)
+            record["per_host_args"] = jax.tree_util.tree_map(
+                lambda a: f"{a.dtype}{list(a.shape)}", local_abs)
 
         with compat.set_mesh(mesh):
             jitted = jax.jit(
@@ -175,9 +195,11 @@ def _model_flops(cfg, shape) -> float:
 def _write(record: dict, out_dir: str) -> None:
     os.makedirs(out_dir, exist_ok=True)
     shuffle = f"_{record['shuffle']}" if "shuffle" in record else ""
+    procs = (f"_p{record['processes']}"
+             if record.get("processes", 1) > 1 else "")
     name = (f"dryrun_{record['arch']}_{record.get('shape')}"
             f"_{record['mesh']}_{record.get('rules', 'baseline')}"
-            f"{shuffle}.json")
+            f"{shuffle}{procs}.json")
     with open(os.path.join(out_dir, name.replace("/", "_")), "w") as f:
         json.dump(record, f, indent=2, default=str)
 
@@ -195,6 +217,10 @@ def main():
                     choices=("allgather", "ring"),
                     help="svm family: SV merge transport (default: the "
                          "arch config's shuffle_impl)")
+    ap.add_argument("--processes", type=int, default=1,
+                    help="simulate the job split over N hosts: records "
+                         "per-host input shapes and suffixes the "
+                         "artifact name with _pN")
     ap.add_argument("--all", action="store_true",
                     help="run every (assigned arch × shape) on this mesh")
     ap.add_argument("--out", default="benchmarks/artifacts")
@@ -217,7 +243,7 @@ def main():
         sys.exit(0 if ok else 1)
 
     rec = run_one(args.arch, args.shape, args.multi_pod, args.rules, args.out,
-                  shuffle=args.shuffle)
+                  shuffle=args.shuffle, processes=args.processes)
     sys.exit(0 if rec["status"] in ("ok", "skip") else 1)
 
 

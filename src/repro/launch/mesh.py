@@ -1,12 +1,19 @@
-"""Production mesh construction (DESIGN.md §5).
+"""Production mesh construction (DESIGN.md §5, §11).
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state — jax locks the device count at first backend init, and only
 ``dryrun.py`` (which sets XLA_FLAGS first) may see 512 host devices.
+
+Meshes are built from CLUSTER topology, not ``len(jax.devices())``
+assumptions: on a multi-process run the devices are global and the
+data axis must enumerate them in process-major order so each host's
+contiguous row block is addressable where it was loaded
+(:meth:`repro.launch.cluster.Cluster.make_global_array`).
 """
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from repro import compat
 
@@ -18,8 +25,36 @@ def make_production_mesh(*, multi_pod: bool = False):
     return compat.make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever local devices exist (tests/examples)."""
+def make_cluster_mesh(cluster, data: int = 0, model: int = 1):
+    """("data", "model") mesh over the cluster's GLOBAL devices.
+
+    Device order is taken verbatim from ``cluster.devices()`` (process-
+    major) rather than ``jax.make_mesh``'s topology-optimized
+    reordering: the per-host loaders materialize the row block of THIS
+    process, so the data axis must keep each process's devices
+    contiguous or ``make_global_array`` would need to ship rows across
+    hosts just to lay the array out.
+    """
+    devs = cluster.devices()
+    n = len(devs)
+    model = max(1, min(model, n))
+    data = data or n // model
+    data = min(data, n // model)
+    from jax.sharding import Mesh
+    arr = np.asarray(devs[:data * model]).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def make_host_mesh(data: int = 1, model: int = 1, cluster=None):
+    """Small mesh over whatever devices exist (tests/examples).
+
+    ``cluster`` makes it process-count-agnostic: the mesh spans the
+    cluster's global devices, in the process-major order multi-host
+    data loading relies on. Without one, the historical single-process
+    behaviour (local devices via ``compat.make_mesh``) is unchanged.
+    """
+    if cluster is not None and cluster.is_distributed:
+        return make_cluster_mesh(cluster, data=data, model=model)
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // max(data, 1)))

@@ -24,13 +24,22 @@ from repro import compat
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.launch.cluster import (add_cluster_flags, cluster_config_from_args,
+                                  init_cluster)
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import InputShape, build_serve_step
 from repro.models.config import smoke_variant
 
 
-def serve_svm(svm_cfg, args) -> None:
-    """Streaming polarization serve mode (``--arch svm-tfidf``)."""
+def serve_svm(svm_cfg, args, cluster) -> None:
+    """Streaming polarization serve mode (``--arch svm-tfidf``).
+
+    Multi-process topology: message admission runs on process 0 (the
+    coordinator owns the queues and drives the folds) while model
+    snapshots stay readable everywhere — non-coordinator processes get
+    a registered service they can ``predict``/``snapshot`` against but
+    not ``submit`` to (DESIGN.md §11).
+    """
     import dataclasses as dc
 
     from repro.core import MRSVMConfig, SVMConfig, fit_mapreduce
@@ -61,12 +70,22 @@ def serve_svm(svm_cfg, args) -> None:
         return X, y
 
     svc = StreamingSVMService(cfg, num_partitions=L,
-                              max_batches_per_wave=args.streams)
+                              max_batches_per_wave=args.streams,
+                              cluster=cluster)
     print(f"svm-serve: {args.streams} streams × {rows} rows/wave, "
-          f"{d} features, {L} partitions")
+          f"{d} features, {L} partitions "
+          f"(process {cluster.process_index}/{cluster.process_count})")
     for s in range(args.streams):
         X0, y0 = batch(s, 0)
         svc.register(f"stream{s}", fit_mapreduce(X0, y0, L, cfg))
+    if not cluster.is_coordinator:
+        # snapshots are served from every process; admission is not.
+        acc = float(jnp.mean(svc.predict("stream0", batch(0, 0)[0])
+                             == batch(0, 0)[1]))
+        print(f"process {cluster.process_index}: read-only replica "
+              f"(stream0 snapshot v{svc.snapshot('stream0').version}, "
+              f"acc={acc:.3f}); admission runs on process 0")
+        return
 
     svc.start()
     for wave in range(1, args.waves + 1):
@@ -109,14 +128,20 @@ def main():
                     choices=("allgather", "ring"),
                     help="svm family: SV merge transport of the sharded "
                          "fold programs (default: the arch config's)")
+    add_cluster_flags(ap)
     args = ap.parse_args()
 
+    # Before first backend use — see launch/cluster.py ordering contract.
+    cluster = init_cluster(cluster_config_from_args(args))
     cfg = get_config(args.arch)
     if getattr(cfg, "family", None) == "svm":
-        return serve_svm(cfg, args)
+        return serve_svm(cfg, args, cluster)
+    if cluster.is_distributed:
+        raise SystemExit(
+            "multi-process launch currently covers the svm family")
     if args.smoke:
         cfg = smoke_variant(cfg)
-    mesh = make_host_mesh(args.data_par, args.model_par)
+    mesh = make_host_mesh(args.data_par, args.model_par, cluster=cluster)
     shape = InputShape("cli", "decode", args.cache_len, args.batch)
     bundle = build_serve_step(cfg, mesh, shape)
     model = bundle.model

@@ -196,6 +196,45 @@ def build_step(cfg: ModelConfig, mesh, shape: InputShape,
     return build_serve_step(cfg, mesh, shape, rules=rules)
 
 
+def per_host_abstract(args, in_shardings, mesh, num_processes: int):
+    """Per-process LOCAL view of a bundle's abstract inputs.
+
+    Step builders consume globally-sharded abstract inputs; at launch
+    each of the ``num_processes`` hosts materializes only its block of
+    every data-sharded dimension and assembles the global array via
+    ``Cluster.make_global_array`` (DESIGN.md §11). This maps the global
+    ``ShapeDtypeStruct`` pytree to that per-host shape — what one
+    host's loader must produce — assuming the data axes span the
+    process dimension (the ``make_cluster_mesh`` layout). Used by
+    ``dryrun --processes N`` to record multi-host input shapes without
+    running multi-host.
+    """
+    from jax.sharding import PartitionSpec
+    data_ax = set(batch_axes(mesh))
+
+    def one(a, spec):
+        if not isinstance(spec, PartitionSpec):
+            return a
+        shape = list(a.shape)
+        for i, ax in enumerate(spec):
+            axes = (ax,) if isinstance(ax, str) else tuple(ax or ())
+            if set(axes) & data_ax:
+                if shape[i] % num_processes:
+                    raise ValueError(
+                        f"dim {i} of {tuple(a.shape)} does not split "
+                        f"over {num_processes} processes")
+                shape[i] //= num_processes
+        return jax.ShapeDtypeStruct(tuple(shape), a.dtype)
+
+    # flatten_up_to stops at the args' leaf positions, so whether the
+    # installed jax treats PartitionSpec as a leaf or a tuple never
+    # matters — each ShapeDtypeStruct pairs with its whole spec.
+    flat, treedef = jax.tree_util.tree_flatten(args)
+    specs = treedef.flatten_up_to(in_shardings)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(a, s) for a, s in zip(flat, specs)])
+
+
 # ---------------------------------------------------------------------------
 # The paper's own workload as a dry-runnable step (svm-tfidf "arch").
 # ---------------------------------------------------------------------------

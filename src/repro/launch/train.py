@@ -1,12 +1,20 @@
 """Production training entry point.
 
-Builds the sharded train_step for ``--arch`` on the local device mesh
-(or the production mesh on a real TPU slice), runs the data pipeline,
-checkpoints, and logs. On this CPU container use ``--smoke`` to train
-the reduced variant; the full configs are exercised by dryrun.py.
+Builds the sharded train_step for ``--arch`` on the cluster's device
+mesh (one process, N CPU processes via --coordinator/--num-processes/
+--process-id, or the production mesh on a real TPU slice), runs the
+data pipeline, checkpoints, and logs. On this CPU container use
+``--smoke`` to train the reduced variant; the full configs are
+exercised by dryrun.py.
 
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
         --smoke --steps 50 --batch 8 --seq 128
+
+Multi-process (each line its own host/process; see
+examples/multihost_svm.py for a self-spawning demo):
+
+    PYTHONPATH=src python -m repro.launch.train --arch svm-tfidf --smoke \
+        --coordinator localhost:9911 --num-processes 2 --process-id 0
 """
 from __future__ import annotations
 
@@ -23,18 +31,26 @@ from jax.sharding import PartitionSpec as P
 from repro import optim
 from repro.ckpt import save
 from repro.configs import get_config
-from repro.data import DataConfig, lm_batch_at
+from repro.data import DataConfig, lm_batch_at, svm_rows_shard
 from repro.launch import sharding as shd
+from repro.launch.cluster import (add_cluster_flags, cluster_config_from_args,
+                                  init_cluster)
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import InputShape, build_train_step
 from repro.models.config import smoke_variant
 
 
-def train_svm(svm_cfg, args) -> None:
+def train_svm(svm_cfg, args, cluster) -> None:
     """MapReduce-SVM training mode (``--arch svm-tfidf``): rows sharded
     over the data mesh, rounds driven on the host. ``--sweep S`` runs S
     (C, γ) hyper-parameter configs per round as one batched program —
-    the vmap-over-configs sweep subsystem (repro.core.sweep)."""
+    the vmap-over-configs sweep subsystem (repro.core.sweep).
+
+    Process-count-agnostic (DESIGN.md §11): each process loads only its
+    disjoint TF×IDF row shard (``svm_rows_shard``) and assembles the
+    global arrays via ``cluster.make_global_array``; the sharded round
+    itself is the SAME program at any process count.
+    """
     import dataclasses as dc
 
     from repro.core.mapreduce_svm import (MRSVMConfig, build_sharded_round,
@@ -46,22 +62,35 @@ def train_svm(svm_cfg, args) -> None:
     if args.smoke:
         svm_cfg = dc.replace(svm_cfg, num_features=256, sv_capacity=64,
                              rows_per_device=64, dtype="float32")
-    ndev = len(jax.devices())
+    say = print if cluster.is_coordinator else (lambda *a, **k: None)
+    ndev = cluster.device_count
     per = args.rows_per_device or svm_cfg.rows_per_device
     n, d = ndev * per, svm_cfg.num_features
-    mesh = make_host_mesh(ndev, 1)
+    mesh = make_host_mesh(ndev, 1, cluster=cluster)
     rounds = max(1, args.rounds)
     cfg = MRSVMConfig(sv_capacity=svm_cfg.sv_capacity,
                       gamma=1e-4, max_rounds=rounds,
                       svm=SVMConfig(C=svm_cfg.C,
                                     max_epochs=svm_cfg.max_epochs))
 
-    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
     dt = jnp.dtype(svm_cfg.dtype)
-    X = jax.random.normal(k1, (n, d), dt)
-    w_true = jax.random.normal(k2, (d,), dt)
-    y = jnp.sign((X @ w_true).astype(jnp.float32)).astype(dt)
-    print(f"svm-tfidf: {n} rows × {d} features over {ndev} devices")
+    Xl, yl = svm_rows_shard(n, d, seed=0,
+                            process_index=cluster.process_index,
+                            process_count=cluster.process_count)
+    X = cluster.make_global_array(mesh, P("data"), Xl.astype(dt), (n, d))
+    y = cluster.make_global_array(mesh, P("data"), yl.astype(dt), (n,))
+    say(f"svm-tfidf: {n} rows × {d} features over {ndev} devices, "
+        f"{cluster.process_count} process(es) "
+        f"({Xl.shape[0]} rows loaded per host)")
+
+    # Accuracy is reported on the process-local shard: the selected
+    # hypothesis (w, b) is replicated, so this needs NO extra collective
+    # and equals the global accuracy at one process.
+    def local_acc(w_, b_):
+        s = Xl.astype(np.float32) @ np.asarray(w_, np.float32).T \
+            + np.asarray(b_, np.float32)
+        return (np.sign(s) == (yl[:, None] if s.ndim > 1
+                               else yl)).mean(axis=0)
 
     if args.sweep >= 1:
         params = sweep_grid(
@@ -70,33 +99,31 @@ def train_svm(svm_cfg, args) -> None:
         round_fn = build_sharded_sweep_round(mesh, ("data",), cfg, per)
         t0 = time.time()
         out = run_sharded_sweep(round_fn, X, y, None, cfg, params,
-                                verbose=True)
+                                verbose=cluster.is_coordinator)
         dt_s = time.time() - t0
-        accs = np.asarray(
-            jnp.mean(jnp.sign(X @ out.ws.T.astype(X.dtype)
-                              + out.bs[None, :].astype(X.dtype))
-                     == y[:, None], axis=0))
+        accs = local_acc(out.ws, out.bs)
         for s in range(args.sweep):
-            print(f"  config C={float(params.C[s]):<8.4g} "
-                  f"R_emp={float(out.risks[s]):.4f} acc={accs[s]:.3f} "
-                  f"rounds={int(out.rounds[s])}")
-        print(f"sweep selected C={float(params.C[out.best]):.4g} "
-              f"({args.sweep} configs, one jit, {dt_s:.1f}s)")
+            say(f"  config C={float(params.C[s]):<8.4g} "
+                f"R_emp={float(out.risks[s]):.4f} acc={accs[s]:.3f} "
+                f"rounds={int(out.rounds[s])}")
+        say(f"sweep selected C={float(params.C[out.best]):.4g} "
+            f"({args.sweep} configs, one jit, {dt_s:.1f}s)")
         return
 
     round_fn = build_sharded_round(mesh, ("data",), cfg, per)
     sv = init_sv_buffer(cfg.sv_capacity, d, X.dtype)
-    mask = jnp.ones((n,), X.dtype)
+    mask = cluster.make_global_array(
+        mesh, P("data"), np.ones((Xl.shape[0],), Xl.dtype).astype(dt), (n,))
     prev = float("inf")
     for t in range(rounds):
         sv, risks, w, b = round_fn(X, y, mask, sv)
         r = float(jnp.min(risks))
-        print(f"round {t}: R_emp={r:.4f} |SV|={int(jnp.sum(sv.mask))}")
+        say(f"round {t}: R_emp={r:.4f} |SV|={int(jnp.sum(sv.mask))}")
         if t > 0 and abs(prev - r) <= cfg.gamma:
             break
         prev = r
-    acc = float(jnp.mean(jnp.sign(X @ w + b) == y))
-    print(f"best-reducer accuracy: {acc:.3f}")
+    say(f"best-reducer accuracy: {float(local_acc(w, b)):.3f}"
+        + (" (host-local shard)" if cluster.is_distributed else ""))
 
 
 def main():
@@ -117,14 +144,22 @@ def main():
                     help="svm family: MapReduce rounds")
     ap.add_argument("--rows-per-device", type=int, default=0,
                     help="svm family: override rows per device")
+    add_cluster_flags(ap)
     args = ap.parse_args()
 
+    # BEFORE anything touches a device: the distributed client and the
+    # CPU collectives wire into the backend at first init (DESIGN.md §11).
+    cluster = init_cluster(cluster_config_from_args(args))
     cfg = get_config(args.arch)
     if getattr(cfg, "family", None) == "svm":
-        return train_svm(cfg, args)
+        return train_svm(cfg, args, cluster)
+    if cluster.is_distributed:
+        raise SystemExit(
+            "multi-process launch currently covers the svm family; the "
+            "LM data pipeline still materializes full global batches")
     if args.smoke:
         cfg = smoke_variant(cfg)
-    mesh = make_host_mesh(args.data_par, args.model_par)
+    mesh = make_host_mesh(args.data_par, args.model_par, cluster=cluster)
     shape = InputShape("cli", "train", args.seq, args.batch)
     bundle = build_train_step(cfg, mesh, shape, remat=False)
     model = bundle.model

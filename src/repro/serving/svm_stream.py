@@ -113,7 +113,8 @@ class StreamingSVMService:
     def __init__(self, cfg: MRSVMConfig, num_partitions: int = 8,
                  max_batches_per_wave: int = 4,
                  keep_history: bool = False,
-                 shuffle_impl: Optional[str] = None):
+                 shuffle_impl: Optional[str] = None,
+                 cluster=None):
         # ``shuffle_impl`` overrides the SV merge transport of the
         # config (DESIGN.md §10). The functional folds this host-local
         # service runs have no collective, but the config is the single
@@ -122,6 +123,14 @@ class StreamingSVMService:
         # --shape svm_serve), so the override is applied here.
         if shuffle_impl is not None:
             cfg = dataclasses.replace(cfg, shuffle_impl=shuffle_impl)
+        # ``cluster`` (repro.launch.cluster.Cluster) makes the service
+        # process-count-aware (DESIGN.md §11): ADMISSION — submit,
+        # run_wave, the background scheduler — runs on process 0 only
+        # (the coordinator owns the queues and drives the folds), while
+        # SNAPSHOTS stay readable everywhere (register/predict/
+        # decision_values/snapshot are process-local). None → the
+        # historical single-process behaviour, every method enabled.
+        self.cluster = cluster
         self.cfg = cfg
         self.L = num_partitions
         self.max_batches_per_wave = max_batches_per_wave
@@ -176,8 +185,24 @@ class StreamingSVMService:
 
     # -- ingest ------------------------------------------------------------
 
+    @property
+    def _admits(self) -> bool:
+        """Whether THIS process runs admission (process 0, or local)."""
+        return self.cluster is None or self.cluster.is_coordinator
+
     def submit(self, stream: str, X: jax.Array, y: jax.Array) -> int:
-        """Queue one vectorized micro-batch; returns its uid."""
+        """Queue one vectorized micro-batch; returns its uid.
+
+        Admission is coordinator-only on a multi-process cluster: a
+        submit on any other process is a routing bug (its queue would
+        silently never fold), so it raises instead of enqueueing.
+        """
+        if not self._admits:
+            raise RuntimeError(
+                f"stream admission runs on process 0; this is process "
+                f"{self.cluster.process_index} of "
+                f"{self.cluster.process_count} (snapshots stay readable "
+                "here — route submissions to the coordinator)")
         X = jnp.asarray(X)
         y = jnp.asarray(y)
         if X.ndim != 2 or y.shape[0] != X.shape[0]:
@@ -253,7 +278,11 @@ class StreamingSVMService:
 
     def run_wave(self) -> Optional[StreamWaveStats]:
         """Admit one wave and fold it. Returns its stats, or ``None``
-        when every queue was empty. Thread-safe; folds are serialized."""
+        when every queue was empty. Thread-safe; folds are serialized.
+        No-op (``None``) off the coordinator — nothing can be queued
+        there (see :meth:`submit`)."""
+        if not self._admits:
+            return None
         with self._wave_lock:
             t0 = time.time()
             admitted = self._admit()
@@ -353,7 +382,11 @@ class StreamingSVMService:
 
     def start(self, idle_poll_s: float = 0.05) -> None:
         """Start the background wave scheduler: batches submitted after
-        this fold in continuously without blocking the submitter."""
+        this fold in continuously without blocking the submitter.
+        No-op off the coordinator, so symmetric SPMD launch code can
+        call it unconditionally."""
+        if not self._admits:
+            return
         with self._lock:
             if self._thread is not None:
                 return

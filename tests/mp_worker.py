@@ -1,0 +1,106 @@
+"""One process of the multi-process equivalence harness (ISSUE 5).
+
+Launched N times by tests/test_multihost.py (argv: process_id
+num_processes port [rounds]). Each process:
+
+  1. joins the cluster via the runtime under test (init_cluster with
+     explicit coordinator/num_processes/process_id and faked local CPU
+     devices — cluster.py sets the XLA flag and the gloo collectives
+     BEFORE first backend use);
+  2. loads ONLY its disjoint TF×IDF row shard (svm_rows_shard) and
+     assembles the global arrays with Cluster.make_global_array;
+  3. runs the sharded MapReduce-SVM round — build_sharded_round
+     UNCHANGED, under both merge transports — over the global mesh;
+  4. checks the result against the single-process functional reference
+     (mapreduce_round over the full dataset, recomputed locally).
+
+Prints MP_ROUND_OK as the last line on success; any assertion failure
+or hang is surfaced by the parent test.
+"""
+import sys
+
+PID, NPROC, PORT = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3]
+ROUNDS = int(sys.argv[4]) if len(sys.argv) > 4 else 3
+NDEV = 8                                     # global devices, any NPROC
+
+from repro.launch.cluster import ClusterConfig, init_cluster  # noqa: E402
+
+cluster = init_cluster(ClusterConfig(
+    coordinator=f"localhost:{PORT}", num_processes=NPROC, process_id=PID,
+    local_device_count=NDEV // NPROC))
+
+import jax                                    # noqa: E402  (backend now up)
+import numpy as np                            # noqa: E402
+from jax.sharding import PartitionSpec as P   # noqa: E402
+
+assert cluster.process_index == PID and cluster.process_count == NPROC
+assert cluster.local_device_count == NDEV // NPROC
+assert cluster.device_count == NDEV, cluster.describe()
+assert cluster.is_coordinator == (PID == 0)
+
+from repro.core import MRSVMConfig, SVMConfig                 # noqa: E402
+from repro.core.mapreduce_svm import (build_sharded_round,    # noqa: E402
+                                      init_sv_buffer, mapreduce_round)
+from repro.data import host_row_range, svm_rows, svm_rows_shard  # noqa: E402
+from repro.launch.mesh import make_host_mesh                  # noqa: E402
+
+N_ROWS, D, SEED = 512, 16, 3
+mesh = make_host_mesh(NDEV, 1, cluster=cluster)
+assert tuple(mesh.shape.values()) == (NDEV, 1)
+
+# -- per-host loading: this process's disjoint shard ------------------------
+Xl, yl = svm_rows_shard(N_ROWS, D, seed=SEED,
+                        process_index=PID, process_count=NPROC)
+start, stop = host_row_range(N_ROWS, PID, NPROC)
+Xf, yf = svm_rows(N_ROWS, D, seed=SEED)       # full set, for the oracle
+np.testing.assert_array_equal(Xl, Xf[start:stop])   # shard ≡ its row range
+np.testing.assert_array_equal(yl, yf[start:stop])
+
+X = cluster.make_global_array(mesh, P("data"), Xl, (N_ROWS, D))
+y = cluster.make_global_array(mesh, P("data"), yl, (N_ROWS,))
+mask = cluster.make_global_array(
+    mesh, P("data"), np.ones((stop - start,), np.float32), (N_ROWS,))
+
+# -- functional single-process reference (identical on every process) -------
+per = N_ROWS // NDEV
+
+
+def reference(cfg):
+    Xp = Xf.reshape(NDEV, per, D)
+    yp = yf.reshape(NDEV, per)
+    mp = np.ones((NDEV, per), np.float32)
+    sv = init_sv_buffer(cfg.sv_capacity, D)
+    risks = None
+    for _ in range(ROUNDS):
+        out = mapreduce_round(Xp, yp, mp, sv, cfg)
+        sv, risks = out.sv, out.risks
+    return sv, risks
+
+
+for shuffle in ("allgather", "ring"):
+    # f32 wire keeps the ring bit-exact so the functional reference
+    # stays the strict oracle (same convention as test_sharded_round)
+    cfg = MRSVMConfig(sv_capacity=64, svm=SVMConfig(C=1.0, max_epochs=15),
+                      shuffle_impl=shuffle, shuffle_wire_dtype="float32")
+    fn = build_sharded_round(mesh, ("data",), cfg, per)
+    sv_s = init_sv_buffer(cfg.sv_capacity, D)
+    risks_s = None
+    for _ in range(ROUNDS):
+        sv_s, risks_s, w_s, b_s = fn(X, y, mask, sv_s)
+
+    sv_f, risks_f = reference(cfg)
+    # every output is replicated → fully addressable on each process
+    np.testing.assert_allclose(np.asarray(risks_s), np.asarray(risks_f),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(sv_s.ids), np.asarray(sv_f.ids))
+    np.testing.assert_array_equal(np.asarray(sv_s.mask),
+                                  np.asarray(sv_f.mask))
+    np.testing.assert_allclose(np.asarray(sv_s.alpha),
+                               np.asarray(sv_f.alpha), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sv_s.x), np.asarray(sv_f.x),
+                               rtol=1e-5, atol=1e-6)
+    assert np.asarray(w_s).shape == (D,) and np.asarray(b_s).shape == ()
+    print(f"[p{PID}] {shuffle}: {NPROC}-process round ≡ functional "
+          f"reference over {ROUNDS} rounds", flush=True)
+
+print("MP_ROUND_OK", flush=True)

@@ -1,0 +1,60 @@
+"""Multi-process cluster equivalence (ISSUE 5 tentpole).
+
+The 2-process CPU run of the sharded MapReduce-SVM round — real
+``jax.distributed`` processes over a localhost coordinator and gloo
+CPU collectives, per-host loaders feeding disjoint row shards — must
+match the single-process functional reference, with
+``build_sharded_round`` unchanged, under BOTH merge transports
+(allgather and ring). ``tests/mp_worker.py`` is the per-process body;
+this file is the launcher (``make test-dist-mp`` runs just this).
+"""
+import socket
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from conftest import subprocess_env
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+def _launch(num_processes: int, rounds: int = 3, timeout: int = 900):
+    port = _free_port()
+    env = subprocess_env(PYTHONPATH=str(REPO / "src"))
+    procs = [
+        subprocess.Popen(
+            [sys.executable, str(REPO / "tests" / "mp_worker.py"),
+             str(pid), str(num_processes), str(port), str(rounds)],
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True, env=env)
+        for pid in range(num_processes)
+    ]
+    outs = []
+    try:
+        for p in procs:
+            out, _ = p.communicate(timeout=timeout)
+            outs.append(out)
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    return procs, outs
+
+
+@pytest.mark.slow
+def test_two_process_round_matches_functional():
+    """2 processes × 4 local devices: same 8-partition problem as the
+    single-process sharded tests, now crossing a real process boundary
+    on every merge collective."""
+    procs, outs = _launch(2)
+    for pid, (p, out) in enumerate(zip(procs, outs)):
+        assert p.returncode == 0, f"process {pid} failed:\n{out}"
+        assert "MP_ROUND_OK" in out, f"process {pid}:\n{out}"

@@ -278,3 +278,35 @@ def test_dedup_roundtrip_lossless(problem):
                                   np.asarray(cand.alpha))
     np.testing.assert_array_equal(np.asarray(back.y), np.asarray(cand.y))
     np.testing.assert_array_equal(np.asarray(back.x), np.asarray(cand.x))
+
+
+@given(st.integers(1, 2200), st.integers(1, 8), st.integers(2, 2 ** 16),
+       st.integers(4, 48))
+@settings(max_examples=20, deadline=None)
+def test_host_row_shards_partition_dataset(rows, procs, seed, d):
+    """Per-host loader invariants (ISSUE 5): shards are pairwise
+    disjoint, deterministic under re-iteration, and their in-order
+    union IS the single-host dataset — for arbitrary (rows, processes,
+    seed), including row counts straddling the stateless block size."""
+    from repro.data import host_row_range, svm_rows, svm_rows_shard
+
+    full_X, full_y = svm_rows(rows, d, seed=seed)
+    ranges = [host_row_range(rows, p, procs) for p in range(procs)]
+    # contiguous, disjoint, covering: each range starts where the
+    # previous one stopped
+    assert ranges[0][0] == 0 and ranges[-1][1] == rows
+    for (_, stop_prev), (start, _) in zip(ranges, ranges[1:]):
+        assert start == stop_prev
+    shards = [svm_rows_shard(rows, d, seed=seed, process_index=p,
+                             process_count=procs) for p in range(procs)]
+    for p, ((start, stop), (Xp, yp)) in enumerate(zip(ranges, shards)):
+        assert Xp.shape == (stop - start, d) and yp.shape == (stop - start,)
+        # deterministic under re-iteration
+        Xp2, yp2 = svm_rows_shard(rows, d, seed=seed, process_index=p,
+                                  process_count=procs)
+        np.testing.assert_array_equal(Xp, Xp2)
+        np.testing.assert_array_equal(yp, yp2)
+    np.testing.assert_array_equal(
+        np.concatenate([X for X, _ in shards]), full_X)
+    np.testing.assert_array_equal(
+        np.concatenate([y for _, y in shards]), full_y)
