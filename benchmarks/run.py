@@ -166,6 +166,7 @@ def main() -> None:
     from benchmarks.sweep import sweep_bench
     from benchmarks.streaming import streaming_bench
     from benchmarks.shuffle_overlap import shuffle_overlap_bench
+    from benchmarks.sparse_gram import sparse_gram_bench
 
     benches = [
         ("table5", table5_dataset),
@@ -180,6 +181,7 @@ def main() -> None:
         ("sweep", sweep_bench),
         ("streaming", streaming_bench),
         ("shuffle_overlap", shuffle_overlap_bench),
+        ("sparse_gram", sparse_gram_bench),
     ]
     only = [s.strip() for s in args.only.split(",")] if args.only else None
     print("name,us_per_call,derived")

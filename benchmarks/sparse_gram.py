@@ -1,0 +1,174 @@
+"""Sparse vs dense Gram throughput + ring wire bytes (ISSUE 6).
+
+The blocked-CSR path exists for the paper's actual regime: hashed
+TF×IDF spaces of 16k–262k features where rows are >99% zero. This
+bench measures, at matched data (sparse rows densified for the dense
+leg):
+
+* ``sparse_gram_d<d>`` — row-pairs/sec of the sparse Gram contraction
+  vs the dense one, both as compiled XLA (the honest comparison on
+  this CPU container — Pallas interpret mode is a Python correctness
+  harness, not a performance mode; on TPU the same ratio story holds
+  for ``pallas_sparse`` vs ``pallas`` since compare-accumulate work is
+  O(nnz²) vs O(d) MACs per pair). The ≥2× acceptance target lives on
+  the d≥65536 rows, gated via ``x=``.
+* ``sparse_wire_d<d>`` — ring-shuffle payload of an SV buffer's rows
+  under ``pack_wire_rows``: the sparse wire ships (values-packed +
+  int32-bitcast indices) lanes, the dense wire ships d/2 bf16 lanes.
+  Deterministic shape arithmetic (measured from the ACTUAL packed
+  flat sizes), so the ≥5× target is load-noise-free in CI.
+
+Standalone:
+
+    PYTHONPATH=src python -m benchmarks.sparse_gram
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+N_ROWS = 256          # rows per side (n = m)
+NNZ_CAP = 128         # blocked-CSR slots — ≤1% density at every d here
+DIMS = (16384, 65536, 262144)
+REPEATS = 5
+
+
+def _sparse_problem(n, d, cap, seed=0):
+    """Random SparseRows with DISTINCT in-row column ids (stratified
+    one-per-stride draw — the generator contract) and exactly ``cap``
+    nonzeros per row."""
+    import numpy as np
+    from repro import sparse
+
+    rng = np.random.default_rng(seed)
+    stride = d // cap
+    cols = (np.arange(cap, dtype=np.int64) * stride)[None, :] \
+        + rng.integers(0, stride, (n, cap))
+    vals = rng.random((n, cap), dtype=np.float32) + 0.1
+    vals /= np.linalg.norm(vals, axis=1, keepdims=True)
+    return sparse.from_numpy_coo(cols.astype(np.int32), vals, d)
+
+
+def _best_of(fn, args, repeats=REPEATS):
+    import jax
+    jax.block_until_ready(fn(*args))          # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.time()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.time() - t0)
+    return best
+
+
+def sparse_gram_speed() -> List[str]:
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro import sparse
+    from repro.kernels.ref import gram_ref, sparse_gram_ref
+
+    out = []
+    dense_ref = jax.jit(functools.partial(gram_ref, kind="rbf", gamma=0.5))
+    sparse_ref = jax.jit(
+        functools.partial(sparse_gram_ref, kind="rbf", gamma=0.5))
+    for d in DIMS:
+        Xs = _sparse_problem(N_ROWS, d, NNZ_CAP, seed=d)
+        Zs = _sparse_problem(N_ROWS, d, NNZ_CAP, seed=d + 1)
+        Xs = jax.tree_util.tree_map(jnp.asarray, Xs)
+        Zs = jax.tree_util.tree_map(jnp.asarray, Zs)
+        Xd, Zd = sparse.to_dense(Xs), sparse.to_dense(Zs)
+        # matched-data correctness first, then the stopwatch
+        np.testing.assert_allclose(
+            np.asarray(sparse_ref(Xs, Zs)), np.asarray(dense_ref(Xd, Zd)),
+            rtol=1e-4, atol=1e-5)
+        t_d = _best_of(dense_ref, (Xd, Zd))
+        t_s = _best_of(sparse_ref, (Xs, Zs))
+        pairs = N_ROWS * N_ROWS
+        speed = t_d / max(t_s, 1e-9)
+        density = NNZ_CAP / d
+        gated = d >= 65536
+        tag = (f"x={speed:.2f} target>=2 met={bool(speed >= 2.0)}"
+               if gated else f"ratio={speed:.2f}")
+        out.append(
+            f"sparse_gram_d{d},{t_s*1e6:.0f},n={N_ROWS} nnz={NNZ_CAP} "
+            f"density={density:.4%} pairs_per_s={pairs/max(t_s,1e-9):.0f} "
+            f"dense_us={t_d*1e6:.0f} {tag}")
+        if gated:
+            assert speed >= 2.0, (
+                f"sparse Gram not ≥2× dense at d={d} "
+                f"(density {density:.2%}): {speed:.2f}×")
+    return out
+
+
+def sparse_gram_kernel_check() -> List[str]:
+    """Pin the Pallas index-match kernel against the XLA oracle (small
+    shape — interpret mode runs the kernel body in Python)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.gram import sparse_gram
+    from repro.kernels.ref import sparse_gram_ref
+
+    Xs = _sparse_problem(96, 4096, 16, seed=7)
+    Zs = _sparse_problem(80, 4096, 16, seed=8)
+    Xs = jax.tree_util.tree_map(jnp.asarray, Xs)
+    Zs = jax.tree_util.tree_map(jnp.asarray, Zs)
+    worst = 0.0
+    for kind in ("linear", "rbf", "poly"):
+        K = sparse_gram(Xs, Zs, 0.7, 0.3, kind=kind, interpret=True)
+        Kr = sparse_gram_ref(Xs, Zs, kind, 0.7, 0.3)
+        err = float(np.max(np.abs(np.asarray(K) - np.asarray(Kr))))
+        np.testing.assert_allclose(np.asarray(K), np.asarray(Kr),
+                                   rtol=1e-4, atol=1e-5)
+        worst = max(worst, err)
+    return [f"sparse_gram_pallas_check,0,kinds=linear+rbf+poly "
+            f"max_abs_err={worst:.2e}"]
+
+
+def sparse_wire_bytes() -> List[str]:
+    """Ring payload of one SV buffer's rows, measured from the actual
+    ``pack_wire_rows`` flat sizes (f32 lanes × 4 bytes)."""
+    import jax.numpy as jnp
+    from repro import sparse
+    from repro.core.mapreduce_svm import pack_wire_rows
+
+    out = []
+    cap_rows = 256                     # SV rows shipped per ring hop
+    wire_dt = jnp.bfloat16
+    for d in DIMS:
+        Xs = _sparse_problem(cap_rows, d, NNZ_CAP, seed=d + 2)
+        Xs = sparse.SparseRows(jnp.asarray(Xs.indices),
+                               jnp.asarray(Xs.values), Xs.d)
+        Xd = sparse.to_dense(Xs)
+        flat_d, _ = pack_wire_rows(Xd, wire_dt)
+        flat_s, _ = pack_wire_rows(Xs, wire_dt)
+        bytes_d, bytes_s = flat_d.size * 4, flat_s.size * 4
+        shrink = bytes_d / max(bytes_s, 1)
+        out.append(
+            f"sparse_wire_d{d},0,rows={cap_rows} nnz_cap={NNZ_CAP} "
+            f"dense_bytes={bytes_d} sparse_bytes={bytes_s} "
+            f"x={shrink:.2f} target>=5 met={bool(shrink >= 5.0)}")
+        assert shrink >= 5.0, (
+            f"sparse wire not ≥5× smaller at d={d}: {shrink:.2f}×")
+    return out
+
+
+def sparse_gram_bench() -> List[str]:
+    return (sparse_gram_kernel_check() + sparse_gram_speed()
+            + sparse_wire_bytes())
+
+
+def main():
+    from benchmarks.run import write_bench_json
+    print("name,us_per_call,derived")
+    rows = sparse_gram_bench()
+    for line in rows:
+        print(line, flush=True)
+    path = write_bench_json("sparse_gram", rows)
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

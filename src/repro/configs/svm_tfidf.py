@@ -2,6 +2,7 @@
 TF×IDF matrix (Çatak 2014). Not one of the assigned 10; used by the
 paper-table benchmarks and the MapReduce-SVM dry-run."""
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -17,6 +18,10 @@ class SVMTfidfConfig:
     dtype: str = "bfloat16"   # §Perf it.5: bf16 feature stream, f32 solver state
     shuffle_impl: str = "ring"  # SV merge transport (DESIGN.md §10);
     #                             'allgather' keeps the monolithic collective
+    row_format: str = "dense"   # 'dense' | 'sparse_csr' (DESIGN.md §12)
+    nnz_cap: int = 256          # sparse_csr: (index, value) slots per row
+    row_nnz: Optional[int] = None  # synthetic generator nonzeros/row;
+    #                                None = the d/256 density default
     citation: str = "Çatak 2014 (the reproduced paper)"
 
 

@@ -16,6 +16,8 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro import sparse as sparse_rows
+
 KernelName = Literal["linear", "rbf", "poly"]
 
 
@@ -57,6 +59,20 @@ def apply_kernel(X: jax.Array, Z: jax.Array, *, cfg: KernelConfig,
     NaN-producing negative-base branch."""
     g = cfg.gamma if gamma is None else gamma
     c0 = cfg.coef0 if coef0 is None else coef0
+    if sparse_rows.is_sparse(X) or sparse_rows.is_sparse(Z):
+        # Sparse path (ISSUE 6): one gather/segment-sum dot-product
+        # build, then the same linear/rbf/poly transforms as dense.
+        dots = sparse_rows.cross_dots(X, Z)
+        if cfg.name == "linear":
+            return dots
+        if cfg.name == "rbf":
+            xx = sparse_rows.row_sq_norms(X)[:, None]
+            zz = sparse_rows.row_sq_norms(Z)[None, :]
+            sq = jnp.maximum(xx + zz - 2.0 * dots, 0.0)
+            return jnp.exp(-g * sq)
+        if cfg.name == "poly":
+            return (g * dots + c0) ** cfg.degree
+        raise ValueError(f"unknown kernel {cfg.name!r}")
     if cfg.name == "linear":
         return linear_kernel(X, Z)
     if cfg.name == "rbf":

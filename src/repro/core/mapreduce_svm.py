@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
+from repro import sparse as sparse_rows
 from repro.core import risk as risk_lib
 from repro.core.svm import (BinarySVM, SolverParams, SVMConfig,
                             decision_kernel, decision_linear, fit_binary)
@@ -106,10 +107,19 @@ class MRSVMConfig:
                 f"(bf16/f16/f32), got {self.shuffle_wire_dtype!r}")
 
 
-def init_sv_buffer(capacity: int, d: int, dtype=jnp.float32) -> SVBuffer:
-    """SV_global^0 = ∅ (empty, mask-padded buffer)."""
+def init_sv_buffer(capacity: int, d: int, dtype=jnp.float32,
+                   nnz_cap: Optional[int] = None) -> SVBuffer:
+    """SV_global^0 = ∅ (empty, mask-padded buffer). With ``nnz_cap``
+    the feature rows are blocked-CSR :class:`repro.sparse.SparseRows`
+    (index 0 / value 0 padding ≡ the empty row)."""
+    if nnz_cap is None:
+        x = jnp.zeros((capacity, d), dtype)
+    else:
+        x = sparse_rows.SparseRows(
+            jnp.zeros((capacity, nnz_cap), jnp.int32),
+            jnp.zeros((capacity, nnz_cap), dtype), d)
     return SVBuffer(
-        x=jnp.zeros((capacity, d), dtype),
+        x=x,
         y=jnp.zeros((capacity,), dtype),
         alpha=jnp.zeros((capacity,), dtype),
         ids=-jnp.ones((capacity,), jnp.int32),
@@ -119,7 +129,7 @@ def init_sv_buffer(capacity: int, d: int, dtype=jnp.float32) -> SVBuffer:
 
 def _augment(Xl, yl, ml, sv: SVBuffer):
     """map phase: D_l ← D_l ∪ SV_global (per partition)."""
-    Xa = jnp.concatenate([Xl, sv.x], axis=0)
+    Xa = sparse_rows.rows_concat(Xl, sv.x, axis=0)
     ya = jnp.concatenate([yl, sv.y], axis=0)
     ma = jnp.concatenate([ml, sv.mask], axis=0)
     return Xa, ya, ma
@@ -168,7 +178,7 @@ def mapreduce_round(Xp: jax.Array, yp: jax.Array, maskp: jax.Array,
     # --- merge: balanced top-k per partition, concatenated -------------------
     topv, topi = jax.lax.top_k(home_alpha, k)                   # (L, k)
     sel = lambda A: jnp.take_along_axis(A, topi, axis=1)
-    new_x = jnp.take_along_axis(Xp, topi[..., None], axis=1).reshape(cap, d)
+    new_x = sparse_rows.take_rows_along(Xp, topi).reshape(cap, d)
     new_y = sel(yp).reshape(cap)
     live = (topv > p.sv_threshold).astype(Xp.dtype)
     base_ids = (jnp.arange(L, dtype=jnp.int32) * per)[:, None] + topi.astype(jnp.int32)
@@ -243,12 +253,14 @@ def fit_mapreduce(X: jax.Array, y: jax.Array, num_partitions: int,
     L = num_partitions
     per = -(-n // L)
     pad = L * per - n
-    Xp = jnp.pad(X, ((0, pad), (0, 0))).reshape(L, per, d)
+    Xp = sparse_rows.pad_rows(X, pad).reshape(L, per, d)
     yp = jnp.pad(y.astype(X.dtype), (0, pad)).reshape(L, per)
     base_mask = jnp.ones((n,), X.dtype) if mask is None else mask.astype(X.dtype)
     maskp = jnp.pad(base_mask, (0, pad)).reshape(L, per)
 
-    sv = init_sv_buffer(cfg.sv_capacity, d, X.dtype)
+    sv = init_sv_buffer(
+        cfg.sv_capacity, d, X.dtype,
+        nnz_cap=X.nnz_cap if sparse_rows.is_sparse(X) else None)
 
     best = (np.inf, None, None)
     prev_risk = np.inf
@@ -328,7 +340,7 @@ def update_mapreduce(model: MapReduceSVM, X_new: jax.Array,
             f"update batch has {X_new.shape[1]} features but the model's "
             f"SV buffer holds {d_model}-dim rows — vectorize new messages "
             "with the SAME featurizer (hash space / idf) as training")
-    X = jnp.concatenate([X_new, model.sv.x], axis=0)
+    X = sparse_rows.rows_concat(X_new, model.sv.x, axis=0)
     y = jnp.concatenate([y_new.astype(X_new.dtype), model.sv.y], axis=0)
     mask = jnp.concatenate([jnp.ones((X_new.shape[0],), X_new.dtype),
                             model.sv.mask], axis=0)
@@ -394,35 +406,67 @@ def _device_risks(scores, yl, ml, cfg: MRSVMConfig, axes):
         compat.psum(cnt, axes), 1.0)
 
 
-def pack_wire_rows(x, wire_dt):
-    """Flatten feature rows into f32 lanes for the coalesced ring
-    message: 2-byte wire dtypes (bf16/f16) pack element PAIRS into one
-    f32 via bitcast (lossless — the bits just ride along), f32 passes
-    through. Returns ``(flat, wslots)`` with ``wslots`` f32 lanes per
-    row."""
-    n, d = x.shape
-    xw = x.astype(jnp.dtype(wire_dt))
+def _pack_lanes(xw, wire_dt):
+    """(n, m) wire-dtype matrix → ``(lanes (n, slots) f32, slots)``:
+    2-byte dtypes bitcast element PAIRS into one f32 lane (lossless —
+    the bits just ride along), 4-byte floats pass through."""
+    n, m = xw.shape
     size = jnp.dtype(wire_dt).itemsize
     if size == 2:
-        dp = d + (d % 2)
-        xw = jnp.pad(xw, ((0, 0), (0, dp - d)))
-        packed = jax.lax.bitcast_convert_type(
-            xw.reshape(n, dp // 2, 2), jnp.float32)
-        return packed.reshape(n * (dp // 2)), dp // 2
+        mp = m + (m % 2)
+        xw = jnp.pad(xw, ((0, 0), (0, mp - m)))
+        return jax.lax.bitcast_convert_type(
+            xw.reshape(n, mp // 2, 2), jnp.float32), mp // 2
     if size != 4:
         raise ValueError(f"unsupported shuffle_wire_dtype {wire_dt}")
-    return jax.lax.bitcast_convert_type(xw, jnp.float32).reshape(n * d), d
+    return jax.lax.bitcast_convert_type(xw, jnp.float32), m
 
 
-def unpack_wire_rows(flat, n: int, d: int, wire_dt, wslots: int):
-    """Inverse of :func:`pack_wire_rows`: (rows, wslots·…) f32 lanes →
-    (n, d) wire-dtype feature rows."""
+def _unpack_lanes(lanes, m: int, wire_dt):
+    """Inverse of :func:`_pack_lanes`: (n, slots) f32 → (n, m) wire."""
+    n = lanes.shape[0]
+    if jnp.dtype(wire_dt).itemsize == 2:
+        rows = jax.lax.bitcast_convert_type(lanes, wire_dt)  # (n, slots, 2)
+        return rows.reshape(n, -1)[:, :m]
+    return jax.lax.bitcast_convert_type(lanes, wire_dt)
+
+
+def pack_wire_rows(x, wire_dt):
+    """Flatten feature rows into f32 lanes for the coalesced ring
+    message. Returns ``(flat, wslots)`` with ``wslots`` f32 lanes per
+    row.
+
+    Dense rows ship all ``d`` features in the wire dtype. Blocked-CSR
+    rows (:class:`repro.sparse.SparseRows`) ship per row only the
+    ``nnz_cap`` (index, value) pairs — values packed like the dense
+    case, int32 indices bitcast into f32 lanes verbatim (never
+    quantized) — so the payload scales with ``nnz_cap``, not ``d``:
+    the ~10-100× shrink on top of the bf16 pair-packing (DESIGN.md
+    §12)."""
+    if sparse_rows.is_sparse(x):
+        vf, vslots = _pack_lanes(x.values.astype(jnp.dtype(wire_dt)),
+                                 wire_dt)
+        idxf = jax.lax.bitcast_convert_type(x.indices, jnp.float32)
+        lanes = jnp.concatenate([vf, idxf], axis=1)
+        return lanes.reshape(-1), vslots + x.nnz_cap
+    n, d = x.shape
+    lanes, slots = _pack_lanes(x.astype(jnp.dtype(wire_dt)), wire_dt)
+    return lanes.reshape(n * slots), slots
+
+
+def unpack_wire_rows(flat, n: int, d: int, wire_dt, wslots: int,
+                     nnz_cap: Optional[int] = None):
+    """Inverse of :func:`pack_wire_rows`: f32 lanes → (n, d) wire-dtype
+    feature rows (dense), or — with ``nnz_cap`` — the blocked-CSR
+    :class:`repro.sparse.SparseRows` the sparse pack shipped."""
     wire_dt = jnp.dtype(wire_dt)
     arr = flat.reshape(n, wslots)
-    if wire_dt.itemsize == 2:
-        rows = jax.lax.bitcast_convert_type(arr, wire_dt)   # (n, wslots, 2)
-        return rows.reshape(n, 2 * wslots)[:, :d]
-    return jax.lax.bitcast_convert_type(arr, wire_dt)
+    if nnz_cap is not None:
+        vslots = wslots - nnz_cap
+        vals = _unpack_lanes(arr[:, :vslots], nnz_cap, wire_dt)
+        idx = jax.lax.bitcast_convert_type(arr[:, vslots:], jnp.int32)
+        return sparse_rows.SparseRows(idx, vals, d)
+    return _unpack_lanes(arr, d, wire_dt)
 
 
 def _ring_merge(cand: SVBuffer, w, b, Xl, cfg: MRSVMConfig, axes,
@@ -451,6 +495,7 @@ def _ring_merge(cand: SVBuffer, w, b, Xl, cfg: MRSVMConfig, axes,
     per, d = Xl.shape
     wire_dt = jnp.dtype(cfg.shuffle_wire_dtype)
     f32 = jnp.float32
+    nnzc = cand.x.nnz_cap if sparse_rows.is_sparse(cand.x) else None
     idx = compat.axis_index(axes)
 
     # ONE coalesced f32 message per hop: the wire-dtype feature rows
@@ -486,7 +531,8 @@ def _ring_merge(cand: SVBuffer, w, b, Xl, cfg: MRSVMConfig, axes,
     col = lambda a, b2: M[:, o_x + a * k:o_x + b2 * k].reshape(ndev * k)
     bt_ = Xl.dtype
     sv_acc = SVBuffer(
-        x=unpack_wire_rows(M[:, :o_x], ndev * k, d, wire_dt, wslots),
+        x=unpack_wire_rows(M[:, :o_x], ndev * k, d, wire_dt, wslots,
+                           nnz_cap=nnzc),
         y=col(0, 1).astype(bt_),
         alpha=col(1, 2).astype(bt_),
         ids=col(3, 4).astype(jnp.int32),

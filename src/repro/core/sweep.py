@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
+from repro import sparse as sparse_rows
 from repro.core.mapreduce_svm import (MRSVMConfig, SVBuffer,
                                       _device_risks, _round_candidates,
                                       init_sv_buffer, make_sharded_round,
@@ -253,10 +254,10 @@ def fit_mapreduce_sweep(X: jax.Array, y: jax.Array, num_partitions: int,
         if X.shape[0] != S:
             raise ValueError(f"per-job X has leading axis {X.shape[0]}, "
                              f"expected S={S}")
-        Xp = jnp.pad(X, ((0, 0), (0, pad), (0, 0))).reshape(S, L, per, d)
+        Xp = sparse_rows.pad_rows(X, pad).reshape(S, L, per, d)
         x_ax = 0
     else:
-        Xp = jnp.pad(X, ((0, pad), (0, 0))).reshape(L, per, d)
+        Xp = sparse_rows.pad_rows(X, pad).reshape(L, per, d)
         x_ax = None
     yb = jnp.broadcast_to(jnp.atleast_2d(y.astype(Xp.dtype)), (S, n))
     ypb = jnp.pad(yb, ((0, 0), (0, pad))).reshape(S, L, per)
@@ -269,7 +270,9 @@ def fit_mapreduce_sweep(X: jax.Array, y: jax.Array, num_partitions: int,
         maskp = jnp.pad(base_mask, (0, pad)).reshape(L, per)
         m_ax = None
 
-    sv0 = init_sv_buffer(cfg.sv_capacity, d, Xp.dtype)
+    sv0 = init_sv_buffer(
+        cfg.sv_capacity, d, Xp.dtype,
+        nnz_cap=Xp.nnz_cap if sparse_rows.is_sparse(Xp) else None)
     svb = compat.tree_map(
         lambda a: jnp.broadcast_to(a, (S,) + a.shape), sv0)
 
@@ -291,6 +294,8 @@ def sweep_decision_values(res: SweepResult, X: jax.Array,
                           cfg: MRSVMConfig) -> jax.Array:
     """(S, n) decision values of every config's final model on ``X``."""
     if cfg.svm.kernel.name == "linear" and not cfg.svm.use_gram:
+        if sparse_rows.is_sparse(X):
+            return (X @ res.final.w.T).T + res.final.b[:, None]
         return jnp.einsum("nd,sd->sn", X, res.final.w) + res.final.b[:, None]
 
     def one(sv, alpha, b, p):
@@ -482,19 +487,27 @@ def init_sharded_sweep_sv(cfg: MRSVMConfig, num_configs: int, d: int,
     with wire-dtype feature rows.
     """
     cap = cfg.sv_capacity
+    nnzc = (cfg.svm.nnz_cap if cfg.svm.row_format == "sparse_csr"
+            else None)
     if uses_dedup_state(cfg, per_config_data):
         k = cap // num_devices
         U = dedup_unique_cap(cfg, num_configs, k, rows_per_device)
         R = num_devices * U
         wire_dt = jnp.dtype(cfg.shuffle_wire_dtype)
+        if nnzc is None:
+            x0 = jnp.zeros((R, d), wire_dt)
+        else:
+            x0 = sparse_rows.SparseRows(
+                jnp.zeros((R, nnzc), jnp.int32),
+                jnp.zeros((R, nnzc), wire_dt), d)
         return DedupChunk(
-            x=jnp.zeros((R, d), wire_dt),
+            x=x0,
             y=jnp.zeros((R,), dtype),
             ids=jnp.full((R,), -1, jnp.int32),
             ptr=jnp.full((num_configs, cap), -1, jnp.int32),
             alpha=jnp.zeros((num_configs, cap), dtype),
             mask=jnp.zeros((num_configs, cap), dtype))
-    sv0 = init_sv_buffer(cap, d, dtype)
+    sv0 = init_sv_buffer(cap, d, dtype, nnz_cap=nnzc)
     if cfg.shuffle_impl == "ring":
         sv0 = sv0._replace(
             x=sv0.x.astype(jnp.dtype(cfg.shuffle_wire_dtype)))
@@ -573,6 +586,7 @@ def _make_ring_sweep_body(cfg: MRSVMConfig, axes, ndev: int, per: int,
         # hypotheses — because per-leaf permutes would pay the
         # collective's fixed rendezvous cost 8× per stage.
         f32 = jnp.float32
+        nnzc = Xl.nnz_cap if sparse_rows.is_sparse(Xl) else None
         if dedup:
             U = dedup_unique_cap(cfg, S, k, per)
             chunk0 = dedup_candidates(cand_b, Xl, yl, idx, per, U, wire_dt)
@@ -609,7 +623,13 @@ def _make_ring_sweep_body(cfg: MRSVMConfig, axes, ndev: int, per: int,
             wt = cur[o_w:o_w + S * d].reshape(S, d)
             bt = cur[o_w + S * d:]
             if per_config_data:
-                s = jnp.einsum("spd,sd->sp", Xl, wt) + bt[:, None]
+                if nnzc is not None:
+                    s = jax.vmap(lambda xs, w1: xs @ w1)(Xl, wt) \
+                        + bt[:, None]
+                else:
+                    s = jnp.einsum("spd,sd->sp", Xl, wt) + bt[:, None]
+            elif nnzc is not None:
+                s = (Xl @ wt.T).T + bt[:, None]
             else:
                 s = jnp.einsum("pd,sd->sp", Xl, wt) + bt[:, None]
             part_scores.append(s.astype(w_b.dtype))
@@ -620,10 +640,10 @@ def _make_ring_sweep_body(cfg: MRSVMConfig, axes, ndev: int, per: int,
         M = jnp.roll(jnp.concatenate(msgs[::-1]),
                      (idx + 1) * L).reshape(ndev, L)
         xs = unpack_wire_rows(M[:, :o_x], ndev * n_rows, d, wire_dt,
-                              wslots)
+                              wslots, nnz_cap=nnzc)
         if not dedup:
-            xs = jnp.swapaxes(xs.reshape(ndev, S, k, d), 0, 1) \
-                    .reshape(S, cap, d)
+            xs = xs.reshape(ndev, S, k, d).swapaxes(0, 1) \
+                   .reshape(S, cap, d)
         acc = _assemble_chunks(xs, M, o_x, dedup, ndev, U, k, S, buf_dt)
         W = jnp.swapaxes(M[:, o_w:o_w + S * d].reshape(ndev, S, d), 0, 1)
         B = M[:, o_w + S * d:].T                     # (S, ndev)

@@ -1,2 +1,3 @@
-from repro.data.pipeline import (DataConfig, host_row_range, lm_batch_at,
-                                 lm_batches, svm_rows, svm_rows_shard)
+from repro.data.pipeline import (DataConfig, default_row_nnz,
+                                 host_row_range, lm_batch_at, lm_batches,
+                                 svm_rows, svm_rows_shard, svm_rows_sparse)

@@ -111,11 +111,20 @@ def _svm_signal(num_features: int, seed: int, signal_dims: int) -> np.ndarray:
     return w
 
 
+def default_row_nnz(num_features: int) -> int:
+    """Historical synthetic density: ~d/256 nonzeros, floor 4."""
+    return min(num_features, max(4, num_features // 256))
+
+
 def _svm_row_block(block: int, rows: int, num_features: int,
-                   seed: int) -> np.ndarray:
-    """``rows`` normalized sparse-ish rows of stateless block ``block``."""
+                   seed: int, nnz: Optional[int] = None) -> np.ndarray:
+    """``rows`` normalized sparse-ish rows of stateless block ``block``.
+
+    ``nnz`` sets the nonzeros per row (the sweep knob of the sparse
+    benchmarks); ``None`` keeps the historical d/256 density."""
     rng = np.random.default_rng((seed, 1, block))
-    nnz = min(num_features, max(4, num_features // 256))
+    nnz = default_row_nnz(num_features) if nnz is None \
+        else min(num_features, max(1, int(nnz)))
     # nnz distinct columns per row without a Python loop: the nnz
     # smallest of d iid uniforms are a uniform no-replacement sample
     scores = rng.random((rows, num_features), dtype=np.float32)
@@ -144,14 +153,17 @@ def host_row_range(num_rows: int, process_index: int,
 
 
 def svm_rows(num_rows: int, num_features: int, seed: int = 0,
-             signal_dims: int = 64) -> Tuple[np.ndarray, np.ndarray]:
+             signal_dims: int = 64, nnz: Optional[int] = None
+             ) -> Tuple[np.ndarray, np.ndarray]:
     """Synthetic sparse-ish TF×IDF-like rows with a linear signal."""
-    X, y = svm_rows_shard(num_rows, num_features, seed, signal_dims)
+    X, y = svm_rows_shard(num_rows, num_features, seed, signal_dims,
+                          nnz=nnz)
     return X, y
 
 
 def svm_rows_shard(num_rows: int, num_features: int, seed: int = 0,
-                   signal_dims: int = 64, *, process_index: int = 0,
+                   signal_dims: int = 64, nnz: Optional[int] = None,
+                   *, process_index: int = 0,
                    process_count: int = 1
                    ) -> Tuple[np.ndarray, np.ndarray]:
     """THIS process's disjoint shard of the ``svm_rows`` dataset.
@@ -170,8 +182,72 @@ def svm_rows_shard(num_rows: int, num_features: int, seed: int = 0,
         for block in range(start // _ROW_BLOCK, (stop - 1) // _ROW_BLOCK + 1):
             b0 = block * _ROW_BLOCK
             rows = min(num_rows - b0, _ROW_BLOCK)
-            full = _svm_row_block(block, rows, num_features, seed)
+            full = _svm_row_block(block, rows, num_features, seed, nnz)
             parts.append(full[max(start - b0, 0):stop - b0])
         X = np.concatenate(parts, axis=0)
     y = np.sign(X @ w + 1e-3).astype(np.float32)
     return X, y
+
+
+# -- sparse materialization (ISSUE 6): blocked-CSR rows straight from the
+# generator — O(rows·nnz) host memory instead of O(rows·d), its own
+# stateless stream (seed, 2, block) so dense and sparse draws never
+# alias. Columns are drawn one-per-stratum (stride = d // nnz), which
+# guarantees DISTINCT in-row indices — the SparseRows contract that
+# makes Σv² row norms and duplicate-summing contractions agree with the
+# densified matrix. (The per-row distribution differs from the dense
+# generator's uniform no-replacement draw by design; no fixture pins
+# raw values, and the normalization + planted linear signal match.)
+
+def _svm_sparse_row_block(block: int, rows: int, num_features: int,
+                          nnz_cap: int, nnz: int, seed: int
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng((seed, 2, block))
+    stride = num_features // nnz
+    offs = rng.integers(0, stride, (rows, nnz))
+    cols = (np.arange(nnz, dtype=np.int64) * stride)[None, :] + offs
+    vals = rng.random((rows, nnz), dtype=np.float32)
+    norm = np.linalg.norm(vals, axis=1, keepdims=True)
+    vals = vals / np.maximum(norm, 1e-9)
+    indices = np.zeros((rows, nnz_cap), np.int32)
+    values = np.zeros((rows, nnz_cap), np.float32)
+    indices[:, :nnz] = cols.astype(np.int32)
+    values[:, :nnz] = vals
+    return indices, values
+
+
+def svm_rows_sparse(num_rows: int, num_features: int, nnz_cap: int,
+                    seed: int = 0, signal_dims: int = 64,
+                    nnz: Optional[int] = None, *, process_index: int = 0,
+                    process_count: int = 1):
+    """THIS process's shard as blocked-CSR rows (``SparseRows``, numpy
+    leaves) + labels — same block-stateless contract as
+    :func:`svm_rows_shard`: the union over processes is the one-host
+    dataset, and only the blocks covering the host's range materialize.
+    """
+    from repro import sparse as sparse_rows
+
+    nnz = default_row_nnz(num_features) if nnz is None \
+        else min(num_features, max(1, int(nnz)))
+    if nnz > nnz_cap:
+        raise ValueError(f"nnz={nnz} exceeds nnz_cap={nnz_cap}")
+    start, stop = host_row_range(num_rows, process_index, process_count)
+    w = _svm_signal(num_features, seed, signal_dims)
+    if stop == start:
+        indices = np.zeros((0, nnz_cap), np.int32)
+        values = np.zeros((0, nnz_cap), np.float32)
+    else:
+        iparts, vparts = [], []
+        for block in range(start // _ROW_BLOCK, (stop - 1) // _ROW_BLOCK + 1):
+            b0 = block * _ROW_BLOCK
+            rows = min(num_rows - b0, _ROW_BLOCK)
+            bi, bv = _svm_sparse_row_block(block, rows, num_features,
+                                           nnz_cap, nnz, seed)
+            lo = max(start - b0, 0)
+            iparts.append(bi[lo:stop - b0])
+            vparts.append(bv[lo:stop - b0])
+        indices = np.concatenate(iparts, axis=0)
+        values = np.concatenate(vparts, axis=0)
+    y = np.sign(np.sum(values * w[indices], axis=1) + 1e-3
+                ).astype(np.float32)
+    return sparse_rows.from_numpy_coo(indices, values, num_features), y

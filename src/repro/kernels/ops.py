@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.gram import gram
+from repro.kernels.gram import gram, sparse_gram
 from repro.kernels.hinge_score import hinge_scores
 from repro.kernels.decode_attention import flash_decode
 from repro.kernels.svm_step import cd_epoch
@@ -22,6 +22,12 @@ def gram_matrix(X, Z, kind="linear", **kw):
     """Tiled Gram matrix; drop-in ``gram_fn`` for core.svm.fit_binary."""
     kw.setdefault("interpret", not on_tpu())
     return gram(X, Z, kind=kind, **kw)
+
+
+def sparse_gram_matrix(X, Z, kind="linear", **kw):
+    """Blocked-CSR Gram matrix (gram_impl="pallas_sparse")."""
+    kw.setdefault("interpret", not on_tpu())
+    return sparse_gram(X, Z, kind=kind, **kw)
 
 
 def risk_eval(X, W, b, y, mask, **kw):

@@ -21,6 +21,29 @@ def gram_ref(X: jax.Array, Z: jax.Array, kind: str = "linear",
     raise ValueError(kind)
 
 
+def sparse_gram_ref(X, Z, kind: str = "linear", gamma: float = 1.0,
+                    coef0: float = 0.0, degree: int = 3) -> jax.Array:
+    """K = k(X, Z) for blocked-CSR ``SparseRows`` operands.
+
+    The XLA oracle for :func:`repro.kernels.gram.sparse_gram`: dots via
+    the segment-sum gather contraction (scatter-densify small Z chunks,
+    gather at X's column ids), never a full (n, d) densify. Either
+    operand may also be dense — mixed pairs take the same path.
+    """
+    from repro import sparse as sparse_rows
+
+    dots = sparse_rows.cross_dots(X, Z).astype(jnp.float32)
+    if kind == "linear":
+        return dots
+    if kind == "poly":
+        return (gamma * dots + coef0) ** degree
+    if kind == "rbf":
+        xx = sparse_rows.row_sq_norms(X).astype(jnp.float32)[:, None]
+        zz = sparse_rows.row_sq_norms(Z).astype(jnp.float32)[None, :]
+        return jnp.exp(-gamma * jnp.maximum(xx + zz - 2.0 * dots, 0.0))
+    raise ValueError(kind)
+
+
 def hinge_scores_ref(X: jax.Array, W: jax.Array, b: jax.Array,
                      y: jax.Array, mask: jax.Array):
     """Fused risk evaluation (paper eq. 6/7 hot path).

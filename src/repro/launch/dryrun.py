@@ -26,7 +26,8 @@ import traceback
 def run_one(arch: str, shape_name: str, multi_pod: bool,
             rules_name: str = "baseline", out_dir: str = "benchmarks/artifacts",
             verbose: bool = True, measure_layers: bool = True,
-            shuffle: str = None, processes: int = 1) -> dict:
+            shuffle: str = None, processes: int = 1,
+            row_format: str = None, nnz_cap: int = None) -> dict:
     import jax
     import numpy as np
 
@@ -69,6 +70,17 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             # monolithic all-gather (DESIGN.md §10); default from the
             # arch config, overridable per dry-run for A/B roofline runs.
             record["shuffle"] = steps_lib._svm_shuffle(cfg, shuffle)
+            # row format: dense (n, d) rows or blocked-CSR (DESIGN.md
+            # §12); overridable for sparse-vs-dense roofline A/Bs.
+            import dataclasses as _dc
+            over = {k: v for k, v in (("row_format", row_format),
+                                      ("nnz_cap", nnz_cap))
+                    if v is not None}
+            if over:
+                cfg = _dc.replace(cfg, **over)
+            record["row_format"] = getattr(cfg, "row_format", "dense")
+            if record["row_format"] == "sparse_csr":
+                record["nnz_cap"] = cfg.nnz_cap
             if shape_name == "svm_sweep":
                 bundle = steps_lib.build_svm_sweep_step(cfg, mesh,
                                                         num_configs=8,
@@ -98,8 +110,16 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             # materialize before make_global_array assembly
             local_abs = steps_lib.per_host_abstract(
                 bundle.args, bundle.in_shardings, mesh, processes)
+            from repro import sparse as sparse_rows
+
+            def _fmt(a):
+                if sparse_rows.is_sparse(a):
+                    return (f"sparse_csr[d={a.d}] "
+                            f"idx={a.indices.dtype}{list(a.indices.shape)} "
+                            f"val={a.values.dtype}{list(a.values.shape)}")
+                return f"{a.dtype}{list(a.shape)}"
             record["per_host_args"] = jax.tree_util.tree_map(
-                lambda a: f"{a.dtype}{list(a.shape)}", local_abs)
+                _fmt, local_abs, is_leaf=sparse_rows.is_sparse)
 
         with compat.set_mesh(mesh):
             jitted = jax.jit(
@@ -197,9 +217,11 @@ def _write(record: dict, out_dir: str) -> None:
     shuffle = f"_{record['shuffle']}" if "shuffle" in record else ""
     procs = (f"_p{record['processes']}"
              if record.get("processes", 1) > 1 else "")
+    sparse = (f"_sparse{record['nnz_cap']}"
+              if record.get("row_format") == "sparse_csr" else "")
     name = (f"dryrun_{record['arch']}_{record.get('shape')}"
             f"_{record['mesh']}_{record.get('rules', 'baseline')}"
-            f"{shuffle}{procs}.json")
+            f"{shuffle}{sparse}{procs}.json")
     with open(os.path.join(out_dir, name.replace("/", "_")), "w") as f:
         json.dump(record, f, indent=2, default=str)
 
@@ -221,6 +243,14 @@ def main():
                     help="simulate the job split over N hosts: records "
                          "per-host input shapes and suffixes the "
                          "artifact name with _pN")
+    ap.add_argument("--row-format", default=None,
+                    choices=("dense", "sparse_csr"),
+                    help="svm family: row representation (default: the "
+                         "arch config's row_format); sparse_csr suffixes "
+                         "the artifact name with _sparse<nnz_cap>")
+    ap.add_argument("--nnz-cap", type=int, default=None,
+                    help="svm family, sparse_csr: (index, value) slots "
+                         "per blocked-CSR row")
     ap.add_argument("--all", action="store_true",
                     help="run every (assigned arch × shape) on this mesh")
     ap.add_argument("--out", default="benchmarks/artifacts")
@@ -243,7 +273,8 @@ def main():
         sys.exit(0 if ok else 1)
 
     rec = run_one(args.arch, args.shape, args.multi_pod, args.rules, args.out,
-                  shuffle=args.shuffle, processes=args.processes)
+                  shuffle=args.shuffle, processes=args.processes,
+                  row_format=args.row_format, nnz_cap=args.nnz_cap)
     sys.exit(0 if rec["status"] in ("ok", "skip") else 1)
 
 

@@ -226,13 +226,17 @@ def per_host_abstract(args, in_shardings, mesh, num_processes: int):
                 shape[i] //= num_processes
         return jax.ShapeDtypeStruct(tuple(shape), a.dtype)
 
-    # flatten_up_to stops at the args' leaf positions, so whether the
-    # installed jax treats PartitionSpec as a leaf or a tuple never
-    # matters — each ShapeDtypeStruct pairs with its whole spec.
-    flat, treedef = jax.tree_util.tree_flatten(args)
-    specs = treedef.flatten_up_to(in_shardings)
-    return jax.tree_util.tree_unflatten(
-        treedef, [one(a, s) for a, s in zip(flat, specs)])
+    # Specs may sit ABOVE the args' leaf structure (shard_map prefix
+    # semantics: one P broadcast over a whole SparseRows subtree), so
+    # flatten by the SPECS' treedef — with PartitionSpec pinned as a
+    # leaf, whether the installed jax treats it as a tuple or not —
+    # and map each spec over its entire args subtree.
+    spec_flat, spec_tree = jax.tree_util.tree_flatten(
+        in_shardings, is_leaf=lambda s: isinstance(s, PartitionSpec))
+    subtrees = spec_tree.flatten_up_to(args)
+    mapped = [jax.tree_util.tree_map(functools.partial(one, spec=s), sub)
+              for sub, s in zip(subtrees, spec_flat)]
+    return jax.tree_util.tree_unflatten(spec_tree, mapped)
 
 
 # ---------------------------------------------------------------------------
@@ -245,6 +249,31 @@ def _svm_shuffle(svm_cfg, shuffle_impl: Optional[str]) -> str:
         else getattr(svm_cfg, "shuffle_impl", "allgather")
 
 
+def _svm_solver_cfg(svm_cfg):
+    """Reducer SVMConfig from the workload config, carrying the row
+    format (DESIGN.md §12) so the whole sharded program — SV buffers,
+    wire packing, Gram path — keys off one switch."""
+    from repro.core.svm import SVMConfig
+    rf = getattr(svm_cfg, "row_format", "dense")
+    return SVMConfig(
+        C=svm_cfg.C, max_epochs=svm_cfg.max_epochs, row_format=rf,
+        nnz_cap=getattr(svm_cfg, "nnz_cap", 0) if rf == "sparse_csr"
+        else 0)
+
+
+def _svm_rows_abstract(svm_cfg, shape, dt):
+    """Abstract row batch for the workload's row format: a dense
+    ShapeDtypeStruct, or a SparseRows whose two leaves are
+    ShapeDtypeStructs (the pytree the dry-run lowers against)."""
+    from repro import sparse as sparse_rows
+    if getattr(svm_cfg, "row_format", "dense") != "sparse_csr":
+        return jax.ShapeDtypeStruct(shape, dt)
+    lead = tuple(shape[:-1]) + (svm_cfg.nnz_cap,)
+    return sparse_rows.SparseRows(
+        jax.ShapeDtypeStruct(lead, jnp.int32),
+        jax.ShapeDtypeStruct(lead, dt), shape[-1])
+
+
 def build_svm_round_step(svm_cfg, mesh,
                          shuffle_impl: Optional[str] = None) -> StepBundle:
     """One MapReduce-SVM round on the production mesh: rows sharded over
@@ -253,7 +282,6 @@ def build_svm_round_step(svm_cfg, mesh,
     import numpy as np
     from repro.core.mapreduce_svm import (MRSVMConfig, SVBuffer,
                                           init_sv_buffer, make_sharded_round)
-    from repro.core.svm import SVMConfig
 
     axes = batch_axes(mesh)
     ndev = int(np.prod([mesh.shape[a] for a in axes]))
@@ -262,7 +290,7 @@ def build_svm_round_step(svm_cfg, mesh,
     mr_cfg = MRSVMConfig(
         sv_capacity=svm_cfg.sv_capacity,
         shuffle_impl=_svm_shuffle(svm_cfg, shuffle_impl),
-        svm=SVMConfig(C=svm_cfg.C, max_epochs=svm_cfg.max_epochs))
+        svm=_svm_solver_cfg(svm_cfg))
     body = make_sharded_round(mr_cfg, axes, ndev, per)
     row_spec = P(axes if len(axes) > 1 else axes[0])
     rep = SVBuffer(x=P(), y=P(), alpha=P(), ids=P(), mask=P())
@@ -273,11 +301,11 @@ def build_svm_round_step(svm_cfg, mesh,
         check_vma=False)
 
     dt = jnp.dtype(svm_cfg.dtype)
-    args = (jax.ShapeDtypeStruct((n, d), dt),
+    args = (_svm_rows_abstract(svm_cfg, (n, d), dt),
             jax.ShapeDtypeStruct((n,), dt),
             jax.ShapeDtypeStruct((n,), dt),
             SVBuffer(
-                x=jax.ShapeDtypeStruct((svm_cfg.sv_capacity, d), dt),
+                x=_svm_rows_abstract(svm_cfg, (svm_cfg.sv_capacity, d), dt),
                 y=jax.ShapeDtypeStruct((svm_cfg.sv_capacity,), dt),
                 alpha=jax.ShapeDtypeStruct((svm_cfg.sv_capacity,), dt),
                 ids=jax.ShapeDtypeStruct((svm_cfg.sv_capacity,), jnp.int32),
@@ -299,7 +327,7 @@ def build_svm_sweep_step(svm_cfg, mesh, num_configs: int,
     wire format (DESIGN.md §10)."""
     import numpy as np
     from repro.core.mapreduce_svm import MRSVMConfig
-    from repro.core.svm import SolverParams, SVMConfig
+    from repro.core.svm import SolverParams
     from repro.core.sweep import init_sharded_sweep_sv, sharded_sweep_program
 
     axes = batch_axes(mesh)
@@ -311,7 +339,7 @@ def build_svm_sweep_step(svm_cfg, mesh, num_configs: int,
     mr_cfg = MRSVMConfig(
         sv_capacity=cap,
         shuffle_impl=_svm_shuffle(svm_cfg, shuffle_impl),
-        svm=SVMConfig(C=svm_cfg.C, max_epochs=svm_cfg.max_epochs))
+        svm=_svm_solver_cfg(svm_cfg))
     fn, in_specs, out_specs = sharded_sweep_program(mesh, axes, mr_cfg, per)
 
     dt = jnp.dtype(svm_cfg.dtype)
@@ -320,7 +348,7 @@ def build_svm_sweep_step(svm_cfg, mesh, num_configs: int,
     # state under the ring transport (same pytree the driver would init)
     sv_abs = jax.eval_shape(
         lambda: init_sharded_sweep_sv(mr_cfg, S, d, ndev, per, dt))
-    args = (jax.ShapeDtypeStruct((n, d), dt),
+    args = (_svm_rows_abstract(svm_cfg, (n, d), dt),
             jax.ShapeDtypeStruct((n,), dt),
             jax.ShapeDtypeStruct((n,), dt),
             sv_abs,
@@ -345,7 +373,7 @@ def build_svm_serve_step(svm_cfg, mesh, num_streams: int = 4,
     SV capacity, sharded over the data axes."""
     import numpy as np
     from repro.core.mapreduce_svm import MRSVMConfig
-    from repro.core.svm import SolverParams, SVMConfig
+    from repro.core.svm import SolverParams
     from repro.core.sweep import init_sharded_sweep_sv, sharded_sweep_program
 
     axes = batch_axes(mesh)
@@ -358,7 +386,7 @@ def build_svm_serve_step(svm_cfg, mesh, num_streams: int = 4,
     mr_cfg = MRSVMConfig(
         sv_capacity=cap,
         shuffle_impl=_svm_shuffle(svm_cfg, shuffle_impl),
-        svm=SVMConfig(C=svm_cfg.C, max_epochs=svm_cfg.max_epochs))
+        svm=_svm_solver_cfg(svm_cfg))
     fn, in_specs, out_specs = sharded_sweep_program(
         mesh, axes, mr_cfg, per, per_config_data=True)
 
@@ -367,7 +395,7 @@ def build_svm_serve_step(svm_cfg, mesh, num_streams: int = 4,
     sv_abs = jax.eval_shape(
         lambda: init_sharded_sweep_sv(mr_cfg, S, d, ndev, per, dt,
                                       per_config_data=True))
-    args = (jax.ShapeDtypeStruct((S, n, d), dt),
+    args = (_svm_rows_abstract(svm_cfg, (S, n, d), dt),
             jax.ShapeDtypeStruct((S, n), dt),
             jax.ShapeDtypeStruct((S, n), dt),
             sv_abs,

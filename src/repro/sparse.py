@@ -1,0 +1,316 @@
+"""Blocked sparse rows: fixed-``nnz_cap`` padded CSR/ELL (ISSUE 6).
+
+The paper's TF×IDF matrices are >99% zero at realistic vocabularies
+(100k–1M hashed terms), yet until this refactor every hot path — Gram
+build, SV buffers, the ring wire format — was dense ``(n, d)``.
+``SparseRows`` stores each row as ``nnz_cap`` column-id / value pairs:
+
+    indices : (..., n, nnz_cap) int32   — column ids, 0 on padding slots
+    values  : (..., n, nnz_cap) float   — 0.0 on padding slots
+
+Fixed ``nnz_cap`` keeps every shape static, so the type composes with
+``jit`` / ``vmap`` / ``shard_map`` exactly like a dense array: it is a
+registered pytree whose two leaves carry the batch dims and whose
+feature dimension ``d`` rides along as static aux data. Padding slots
+use index 0 with value 0.0 — duplicate indices are legal and always
+mean *sum* (matching ``to_dense``'s scatter-add), so a padded slot is a
+no-op contribution to every contraction.
+
+Rows with more than ``nnz_cap`` structural nonzeros are truncated by
+``from_dense`` keeping the top-``nnz_cap`` |value| entries (for TF×IDF
+rows: the highest-weight terms — same semantics as feature selection).
+
+Everything here is format plumbing; the kernels live in
+``repro.kernels.gram`` (Pallas) and ``repro.kernels.ref`` (XLA
+reference). DESIGN.md §12 documents the layout and the wire format.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+class SparseRows:
+    """Batch of sparse feature rows in padded-CSR (ELL) layout.
+
+    Behaves like the dense ``(..., n, d)`` array it represents where
+    cheap to do so (``.shape``/``.dtype``/``.ndim`` report the *dense*
+    view; ``[]``, ``*`` by a trailing-1 broadcast, ``@`` by a dense
+    matrix, ``.astype``, ``.reshape`` of batch dims), so dense-written
+    call sites in core/ run unchanged on either format.
+    """
+
+    __slots__ = ("indices", "values", "d")
+
+    def __init__(self, indices, values, d: int):
+        self.indices = indices
+        self.values = values
+        self.d = int(d)
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.indices, self.values), self.d
+
+    @classmethod
+    def tree_unflatten(cls, d, children):
+        indices, values = children
+        return cls(indices, values, d)
+
+    # -- dense-like surface ------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        """Shape of the DENSE row matrix this represents: (..., n, d)."""
+        return tuple(self.values.shape[:-1]) + (self.d,)
+
+    @property
+    def ndim(self) -> int:
+        return self.values.ndim
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    @property
+    def nnz_cap(self) -> int:
+        return int(self.values.shape[-1])
+
+    def astype(self, dtype) -> "SparseRows":
+        """Cast VALUES only — indices stay int32 (the wire ships them
+        bitcast, never quantized)."""
+        return SparseRows(self.indices, self.values.astype(dtype), self.d)
+
+    def __getitem__(self, idx) -> "SparseRows":
+        """Row indexing/slicing over the batch dims; the slot axis is
+        not addressable from the dense-view API."""
+        return SparseRows(self.indices[idx], self.values[idx], self.d)
+
+    def __mul__(self, other) -> "SparseRows":
+        """Row-wise scale: ``other`` must broadcast against the batch
+        dims with a trailing axis of 1 (e.g. ``live[:, None]``), i.e.
+        constant along features — the structure is unchanged."""
+        o = jnp.asarray(other)
+        if o.ndim and o.shape[-1] not in (1,):
+            raise ValueError(
+                "SparseRows * x requires x constant along the feature axis "
+                f"(trailing dim 1), got shape {o.shape}")
+        return SparseRows(self.indices, self.values * o, self.d)
+
+    __rmul__ = __mul__
+
+    def __matmul__(self, other):
+        """``X @ W`` against a DENSE ``(d,)`` or ``(d, k)`` operand via
+        gather-and-accumulate — O(n·nnz·k) instead of O(n·d·k)."""
+        other = jnp.asarray(other)
+        if other.shape[0] != self.d:
+            raise ValueError(f"matmul dim mismatch: d={self.d} vs "
+                             f"{other.shape}")
+        g = jnp.take(other, self.indices, axis=0)   # (..., n, nnz[, k])
+        if other.ndim == 1:
+            return jnp.sum(g * self.values, axis=-1)
+        return jnp.sum(g * self.values[..., None], axis=-2)
+
+    def reshape(self, *shape) -> "SparseRows":
+        """Reshape the BATCH dims; the last entry must be ``d`` (the
+        dense-view contract) or -1 is not supported for it."""
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        if not shape or shape[-1] != self.d:
+            raise ValueError(
+                f"SparseRows.reshape last dim must be d={self.d}, "
+                f"got {shape}")
+        lead = tuple(int(s) for s in shape[:-1])
+        cap = self.values.shape[-1]
+        return SparseRows(self.indices.reshape(lead + (cap,)),
+                          self.values.reshape(lead + (cap,)), self.d)
+
+    def swapaxes(self, a: int, b: int) -> "SparseRows":
+        """Swap two BATCH axes (never the slot axis)."""
+        nb = self.values.ndim - 1                    # number of batch axes
+        a, b = a % self.values.ndim, b % self.values.ndim
+        if a >= nb or b >= nb:
+            raise ValueError("cannot swap the slot axis of SparseRows")
+        return SparseRows(jnp.swapaxes(self.indices, a, b),
+                          jnp.swapaxes(self.values, a, b), self.d)
+
+    def __repr__(self):
+        return (f"SparseRows(shape={self.shape}, nnz_cap={self.nnz_cap}, "
+                f"dtype={self.values.dtype})")
+
+
+def is_sparse(x) -> bool:
+    return isinstance(x, SparseRows)
+
+
+# ---------------------------------------------------------------------------
+# conversions
+# ---------------------------------------------------------------------------
+
+def from_dense(X, nnz_cap: int, d: int | None = None) -> SparseRows:
+    """Dense ``(..., n, d)`` → ``SparseRows`` keeping, per row, the
+    ``nnz_cap`` largest-|value| entries (ties broken toward lower column
+    ids via top_k's stable ordering over the negated magnitude). Rows
+    with ≤ ``nnz_cap`` nonzeros round-trip exactly; denser rows are
+    truncated to their top-|value| terms (the TF×IDF feature-selection
+    semantics documented in DESIGN.md §12)."""
+    X = jnp.asarray(X)
+    d = X.shape[-1] if d is None else d
+    if nnz_cap > d:
+        raise ValueError(f"nnz_cap={nnz_cap} exceeds d={d}")
+    _, idx = jax.lax.top_k(jnp.abs(X), nnz_cap)      # (..., n, nnz_cap)
+    idx = idx.astype(jnp.int32)
+    vals = jnp.take_along_axis(X, idx, axis=-1)
+    # normalize padding: slots selected for zero entries → index 0
+    idx = jnp.where(vals != 0, idx, 0)
+    return SparseRows(idx, vals, d)
+
+
+def to_dense(sp: SparseRows):
+    """``SparseRows`` → dense ``(..., n, d)`` by scatter-ADD (duplicate
+    indices sum; padding slots add 0 at column 0)."""
+    lead = sp.values.shape[:-1]
+    cap = sp.values.shape[-1]
+    flat_i = sp.indices.reshape(-1, cap)
+    flat_v = sp.values.reshape(-1, cap)
+    n = flat_i.shape[0]
+    rows = jnp.repeat(jnp.arange(n, dtype=jnp.int32), cap)
+    out = jnp.zeros((n, sp.d), sp.values.dtype)
+    out = out.at[rows, flat_i.reshape(-1)].add(flat_v.reshape(-1))
+    return out.reshape(lead + (sp.d,))
+
+
+def from_numpy_coo(indices: np.ndarray, values: np.ndarray,
+                   d: int) -> SparseRows:
+    """Host-side constructor from already-blocked numpy arrays (the
+    tokenizer/generator emit this layout directly)."""
+    return SparseRows(np.asarray(indices, np.int32),
+                      np.asarray(values), int(d))
+
+
+# ---------------------------------------------------------------------------
+# structural ops used by core/ (concat, pad, gather — all on batch dims)
+# ---------------------------------------------------------------------------
+
+def rows_concat(a, b, axis: int = 0):
+    """Concatenate two row batches along a batch axis; both operands
+    must share the format (and, when sparse, ``d`` and ``nnz_cap``)."""
+    sa, sb = is_sparse(a), is_sparse(b)
+    if sa != sb:
+        raise TypeError("cannot concatenate sparse rows with dense rows")
+    if not sa:
+        return jnp.concatenate([a, b], axis=axis)
+    if a.d != b.d:
+        raise ValueError(f"feature-dim mismatch: {a.d} vs {b.d}")
+    if a.nnz_cap != b.nnz_cap:
+        raise ValueError(
+            f"nnz_cap mismatch: {a.nnz_cap} vs {b.nnz_cap}")
+    vals = jnp.concatenate([a.values, b.values.astype(a.values.dtype)],
+                           axis=axis)
+    return SparseRows(jnp.concatenate([a.indices, b.indices], axis=axis),
+                      vals, a.d)
+
+
+def pad_rows(x, pad: int):
+    """Zero-pad ``pad`` rows at the end of the ROW axis (-2 of the
+    dense view), for either format."""
+    if not is_sparse(x):
+        widths = [(0, 0)] * x.ndim
+        widths[-2] = (0, pad)
+        return jnp.pad(x, widths)
+    widths = [(0, 0)] * x.values.ndim
+    widths[-2] = (0, pad)
+    return SparseRows(jnp.pad(x.indices, widths),
+                      jnp.pad(x.values, widths), x.d)
+
+
+def take_rows_along(x, topi):
+    """``take_along_axis(x, topi[..., None], axis=1)`` for either format
+    (select ``k`` rows per leading batch entry)."""
+    if not is_sparse(x):
+        return jnp.take_along_axis(x, topi[..., None], axis=1)
+    sel = lambda leaf: jnp.take_along_axis(leaf, topi[..., None], axis=1)
+    return SparseRows(sel(x.indices), sel(x.values), x.d)
+
+
+def dynamic_row(x, i):
+    """Row ``i`` (traced index) of a 2-D row batch → dense-compatible
+    pieces: dense → the row; sparse → (indices_i, values_i)."""
+    if not is_sparse(x):
+        return jax.lax.dynamic_index_in_dim(x, i, keepdims=False)
+    return (jax.lax.dynamic_index_in_dim(x.indices, i, keepdims=False),
+            jax.lax.dynamic_index_in_dim(x.values, i, keepdims=False))
+
+
+# ---------------------------------------------------------------------------
+# contractions used by the solver / risk paths
+# ---------------------------------------------------------------------------
+
+def row_sq_norms(x):
+    """Σ_j x_ij² per row. NOTE: assumes distinct in-row indices (the
+    featurizer/generator contract); duplicates would need a merge."""
+    if not is_sparse(x):
+        return jnp.einsum("...nd,...nd->...n", x, x)
+    return jnp.sum(x.values * x.values, axis=-1)
+
+
+def weighted_row_sum(x, coef):
+    """``X.T @ coef`` → dense ``(d,)``: the primal weight recovery
+    ``w = Σ_i coef_i · x_i`` (scatter-add over nonzeros when sparse)."""
+    if not is_sparse(x):
+        return x.T @ coef
+    contrib = x.values * coef[:, None]
+    w = jnp.zeros((x.d,), contrib.dtype)
+    return w.at[x.indices.reshape(-1)].add(contrib.reshape(-1))
+
+
+def matmat(x, other):
+    """``X @ other`` for either format (dense falls through to ``@``)."""
+    return x @ other
+
+
+def cross_dots(x, z, *, chunk: int = 64):
+    """Dense dot-product matrix ``<x_i, z_j>`` → ``(n, m)`` for ANY
+    format mix. The sparse×sparse case is the segment-sum idiom from
+    :mod:`repro.kernels.ref`: densify ``z`` in row chunks of ``chunk``
+    (bounding the scratch at ``chunk × d``) by scatter-add, then gather
+    each chunk's columns at ``x``'s indices and contract — O(n·m·nnz +
+    m·d) instead of the dense O(n·m·d)."""
+    xs, zs = is_sparse(x), is_sparse(z)
+    if not xs and not zs:
+        return x @ z.T
+    if xs and not zs:
+        return x @ jnp.asarray(z).T       # gather from the dense side
+    if not xs and zs:
+        return (z @ jnp.asarray(x).T).T
+    if x.d != z.d:
+        raise ValueError(f"feature-dim mismatch: {x.d} vs {z.d}")
+    n, m = x.values.shape[-2], z.values.shape[-2]
+    ct = jnp.promote_types(x.dtype, z.dtype)
+    chunk = min(chunk, m)
+    mp = -(-m // chunk) * chunk
+    zi = jnp.pad(z.indices, ((0, mp - m), (0, 0)))
+    zv = jnp.pad(z.values.astype(ct), ((0, mp - m), (0, 0)))
+    cap_z = zi.shape[-1]
+    rows = jnp.repeat(jnp.arange(chunk, dtype=jnp.int32), cap_z)
+    xv = x.values.astype(ct)
+
+    def one(args):
+        ic, vc = args                                 # (chunk, cap_z)
+        zd = jnp.zeros((chunk, x.d), ct)
+        zd = zd.at[rows, ic.reshape(-1)].add(vc.reshape(-1))
+        g = jnp.take(zd.T, x.indices, axis=0)         # (n, nnz, chunk)
+        return jnp.sum(g * xv[..., None], axis=-2)    # (n, chunk)
+
+    out = jax.lax.map(one, (zi.reshape(mp // chunk, chunk, cap_z),
+                            zv.reshape(mp // chunk, chunk, cap_z)))
+    return jnp.moveaxis(out, 0, 1).reshape(n, mp)[:, :m]
+
+
+def score_rows(x, W, b=None):
+    """Decision scores ``X @ W.T (+ b)`` with dense ``W (L, d)`` —
+    the reducer-scoring shape used by the merge and sweep paths."""
+    s = x @ jnp.swapaxes(jnp.asarray(W), -1, -2)
+    return s if b is None else s + b

@@ -1,7 +1,8 @@
 """Text substrate: the paper's TF×IDF sentiment pipeline."""
 from repro.text.stopwords import TURKISH_STOPWORDS, is_stopword
-from repro.text.tokenizer import (count_matrix, hash_token, normalize,
-                                  tokenize, vectorize)
+from repro.text.tokenizer import (count_matrix, count_rows_sparse,
+                                  hash_token, normalize, tokenize,
+                                  vectorize, vectorize_sparse)
 from repro.text.tfidf import TfidfModel, fit_idf, fit_transform, transform
 from repro.text.feature_select import chi2_scores, select_top_k
 from repro.text.corpus import (CLASS_NEG, CLASS_NEU, CLASS_POS, Corpus,
@@ -9,7 +10,8 @@ from repro.text.corpus import (CLASS_NEG, CLASS_NEU, CLASS_POS, Corpus,
 
 __all__ = [
     "TURKISH_STOPWORDS", "is_stopword", "count_matrix", "hash_token",
-    "normalize", "tokenize", "vectorize", "TfidfModel", "fit_idf",
+    "normalize", "tokenize", "vectorize", "count_rows_sparse",
+    "vectorize_sparse", "TfidfModel", "fit_idf",
     "fit_transform", "transform", "chi2_scores", "select_top_k",
     "CLASS_NEG", "CLASS_NEU", "CLASS_POS", "Corpus", "CorpusConfig",
     "generate",

@@ -2,6 +2,11 @@
 
     idf_t     = log(N / df_t)                      (eq. 10)
     tfidf_t,d = tf_t,d × idf_t                     (eq. 11)
+
+Both entry points accept dense ``(n, d)`` count matrices OR blocked-CSR
+:class:`repro.sparse.SparseRows` counts (ISSUE 6): the sparse overloads
+never densify — df is a scatter-add over the nonzero slots and the
+tf×idf weighting is a gather of ``idf`` at each row's column ids.
 """
 from __future__ import annotations
 
@@ -10,21 +15,31 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import sparse as sparse_rows
+
 
 class TfidfModel(NamedTuple):
     idf: jax.Array        # (d,)
     num_docs: jax.Array   # ()
 
 
-def fit_idf(counts: jax.Array, smooth: bool = True) -> TfidfModel:
-    """idf from a training count matrix (n, d).
+def fit_idf(counts, smooth: bool = True) -> TfidfModel:
+    """idf from a training count matrix (n, d) — dense or SparseRows.
 
     ``smooth`` uses log((1+N)/(1+df)) + 1 so unseen terms stay finite —
     the standard safe variant of eq. 10 (hashed spaces always contain
     empty buckets).
     """
     n = counts.shape[0]
-    df = jnp.sum((counts > 0).astype(counts.dtype), axis=0)
+    if sparse_rows.is_sparse(counts):
+        # df via scatter-add of the live slots: padding (value 0) and
+        # dead slots contribute nothing; in-row indices are distinct by
+        # the featurizer contract, so no term is double-counted.
+        live = (counts.values > 0).astype(jnp.float32)
+        df = jnp.zeros((counts.d,), jnp.float32).at[
+            counts.indices.reshape(-1)].add(live.reshape(-1))
+    else:
+        df = jnp.sum((counts > 0).astype(counts.dtype), axis=0)
     if smooth:
         idf = jnp.log((1.0 + n) / (1.0 + df)) + 1.0
     else:
@@ -32,9 +47,23 @@ def fit_idf(counts: jax.Array, smooth: bool = True) -> TfidfModel:
     return TfidfModel(idf=idf, num_docs=jnp.asarray(n))
 
 
-def transform(counts: jax.Array, model: TfidfModel,
-              l2_normalize: bool = True) -> jax.Array:
-    """tf × idf, optionally L2-row-normalized (standard for linear SVM)."""
+def transform(counts, model: TfidfModel, l2_normalize: bool = True):
+    """tf × idf, optionally L2-row-normalized (standard for linear SVM).
+
+    SparseRows counts come back as SparseRows with IDENTICAL structure:
+    the idf gather is guarded so weighting can never resurrect a zero —
+    padding slots (value 0) stay exactly 0 even though the smooth idf of
+    their column id is nonzero, so the blocked-CSR padding invariant
+    survives the weighting (the satellite bugfix of ISSUE 6).
+    """
+    if sparse_rows.is_sparse(counts):
+        scale = jnp.take(model.idf, counts.indices, axis=0)
+        vals = jnp.where(counts.values != 0,
+                         counts.values * scale.astype(counts.dtype), 0.0)
+        if l2_normalize:
+            norm = jnp.sqrt(jnp.sum(vals * vals, axis=-1, keepdims=True))
+            vals = vals / jnp.maximum(norm, 1e-12)
+        return sparse_rows.SparseRows(counts.indices, vals, counts.d)
     X = counts * model.idf[None, :]
     if l2_normalize:
         norm = jnp.sqrt(jnp.sum(X * X, axis=1, keepdims=True))
@@ -42,7 +71,6 @@ def transform(counts: jax.Array, model: TfidfModel,
     return X
 
 
-def fit_transform(counts: jax.Array, smooth: bool = True,
-                  l2_normalize: bool = True):
+def fit_transform(counts, smooth: bool = True, l2_normalize: bool = True):
     model = fit_idf(counts, smooth)
     return transform(counts, model, l2_normalize), model

@@ -60,3 +60,42 @@ def vectorize(texts: Iterable[str], num_features: int,
     """Text → hashed count matrix in one shot."""
     return count_matrix((tokenize(t, remove_stopwords) for t in texts),
                         num_features)
+
+
+def count_rows_sparse(docs: Iterable[Sequence[str]], num_features: int,
+                      nnz_cap: int, dtype=np.float32):
+    """Blocked-CSR token counts straight from tokenized docs (ISSUE 6).
+
+    Hashing already gives bounded column ids, so each doc maps to at
+    most ``nnz_cap`` (column, count) pairs WITHOUT ever materializing
+    the (n, d) dense matrix — O(n·nnz_cap) host memory at million-term
+    vocabularies. Docs with more distinct hashed terms than ``nnz_cap``
+    keep their ``nnz_cap`` highest-count terms (the same top-weight
+    truncation :func:`repro.sparse.from_dense` applies; DESIGN.md §12).
+    In-row column ids are distinct by construction (one slot per hashed
+    term) — the SparseRows contract.
+    """
+    from collections import Counter
+
+    from repro import sparse as sparse_rows
+
+    docs = list(docs)
+    indices = np.zeros((len(docs), nnz_cap), np.int32)
+    values = np.zeros((len(docs), nnz_cap), dtype)
+    for i, toks in enumerate(docs):
+        counts = Counter(hash_token(t, num_features) for t in toks)
+        # highest count first; ties by column id for determinism
+        top = sorted(counts.items(), key=lambda kv: (-kv[1], kv[0]))
+        top = top[:nnz_cap]
+        for j, (col, cnt) in enumerate(top):
+            indices[i, j] = col
+            values[i, j] = cnt
+    return sparse_rows.from_numpy_coo(indices, values, num_features)
+
+
+def vectorize_sparse(texts: Iterable[str], num_features: int,
+                     nnz_cap: int, remove_stopwords: bool = True):
+    """Text → blocked-CSR hashed count rows in one shot."""
+    return count_rows_sparse(
+        (tokenize(t, remove_stopwords) for t in texts), num_features,
+        nnz_cap)

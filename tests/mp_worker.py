@@ -103,4 +103,51 @@ for shuffle in ("allgather", "ring"):
     print(f"[p{PID}] {shuffle}: {NPROC}-process round ≡ functional "
           f"reference over {ROUNDS} rounds", flush=True)
 
+# -- blocked-CSR leg (ISSUE 6): sparse sharded round, sparse wire -----------
+# Same rows, same dense functional oracle: svm_rows emits ≤4 nonzeros
+# per row at D=16, so from_dense at CAP=8 is lossless and the dense
+# reference stays the strict truth. Only the FORMAT changes — per-host
+# blocked-CSR leaves assembled into one global SparseRows, the SV
+# buffer and the merge wire (values-packed + bitcast indices) sparse
+# throughout.
+import dataclasses as dc                      # noqa: E402
+
+import jax.numpy as jnp                       # noqa: E402
+from repro import sparse                      # noqa: E402
+
+CAP = 8
+Xls = sparse.from_dense(jnp.asarray(Xl), CAP)
+np.testing.assert_array_equal(np.asarray(sparse.to_dense(Xls)), Xl)
+Xsp = sparse.SparseRows(
+    cluster.make_global_array(mesh, P("data"), np.asarray(Xls.indices),
+                              (N_ROWS, CAP)),
+    cluster.make_global_array(mesh, P("data"), np.asarray(Xls.values),
+                              (N_ROWS, CAP)),
+    D)
+
+for shuffle in ("allgather", "ring"):
+    cfg_d = MRSVMConfig(sv_capacity=64, svm=SVMConfig(C=1.0, max_epochs=15),
+                        shuffle_impl=shuffle, shuffle_wire_dtype="float32")
+    cfg_s = dc.replace(cfg_d, svm=dc.replace(
+        cfg_d.svm, row_format="sparse_csr", nnz_cap=CAP))
+    fn = build_sharded_round(mesh, ("data",), cfg_s, per)
+    sv_s = init_sv_buffer(cfg_s.sv_capacity, D, nnz_cap=CAP)
+    risks_s = None
+    for _ in range(ROUNDS):
+        sv_s, risks_s, w_s, b_s = fn(Xsp, y, mask, sv_s)
+
+    sv_f, risks_f = reference(cfg_d)
+    np.testing.assert_allclose(np.asarray(risks_s), np.asarray(risks_f),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(sv_s.ids), np.asarray(sv_f.ids))
+    np.testing.assert_array_equal(np.asarray(sv_s.mask),
+                                  np.asarray(sv_f.mask))
+    np.testing.assert_allclose(np.asarray(sv_s.alpha),
+                               np.asarray(sv_f.alpha), rtol=1e-4, atol=1e-5)
+    assert sparse.is_sparse(sv_s.x) and sv_s.x.nnz_cap == CAP
+    np.testing.assert_allclose(np.asarray(sparse.to_dense(sv_s.x)),
+                               np.asarray(sv_f.x), rtol=1e-5, atol=1e-6)
+    print(f"[p{PID}] {shuffle}: sparse {NPROC}-process round ≡ dense "
+          f"functional reference over {ROUNDS} rounds", flush=True)
+
 print("MP_ROUND_OK", flush=True)

@@ -216,12 +216,114 @@ def _check_ring_bf16_wire(rounds=3):
                                rtol=1e-5, atol=1e-6)
 
 
+def _assert_sparse_round_equivalence(shuffle_impl: str, rounds=3,
+                                     n=512, d=64, nnz=8, cap=16):
+    """ISSUE 6 tentpole invariant: the blocked-CSR sharded round — SV
+    buffer, shuffle wire and all — must reproduce the DENSE functional
+    reference at matched data (sparse rows densified for the oracle).
+    An f32 wire keeps the transport bit-exact; indices ship bitcast and
+    are exact under any wire dtype."""
+    import dataclasses as dc
+
+    from repro import compat, sparse
+    from repro.core import MRSVMConfig, SVMConfig
+    from repro.core.mapreduce_svm import build_sharded_round, init_sv_buffer
+    from repro.data import svm_rows
+
+    Xd, y = svm_rows(n, d, seed=3, nnz=nnz)
+    Xd, y = jnp.asarray(Xd), jnp.asarray(y)
+    mask = jnp.ones((n,))
+    Xs = sparse.from_dense(Xd, cap)          # lossless: nnz < cap
+    np.testing.assert_array_equal(np.asarray(sparse.to_dense(Xs)),
+                                  np.asarray(Xd))
+
+    cfg_d = MRSVMConfig(sv_capacity=64, svm=SVMConfig(C=1.0, max_epochs=15),
+                        shuffle_impl=shuffle_impl,
+                        shuffle_wire_dtype="float32")
+    cfg_s = dc.replace(cfg_d, svm=dc.replace(
+        cfg_d.svm, row_format="sparse_csr", nnz_cap=cap))
+
+    mesh = compat.make_mesh((NDEV,), ("data",))
+    fn = build_sharded_round(mesh, ("data",), cfg_s, n // NDEV)
+    sv_s = init_sv_buffer(cfg_s.sv_capacity, d, nnz_cap=cap)
+    risks_s = None
+    for _ in range(rounds):
+        sv_s, risks_s, w_s, b_s = fn(Xs, y, mask, sv_s)
+
+    sv_f, risks_f = _functional_reference(Xd, y, mask, cfg_d, rounds)
+
+    np.testing.assert_allclose(np.asarray(risks_s), np.asarray(risks_f),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(sv_s.ids), np.asarray(sv_f.ids))
+    np.testing.assert_array_equal(np.asarray(sv_s.mask),
+                                  np.asarray(sv_f.mask))
+    np.testing.assert_allclose(np.asarray(sv_s.alpha), np.asarray(sv_f.alpha),
+                               rtol=1e-4, atol=1e-5)
+    # the merged buffer stays blocked-CSR end to end; densified it is
+    # the dense run's buffer (f32 wire, distinct-index rows)
+    assert sparse.is_sparse(sv_s.x) and sv_s.x.nnz_cap == cap
+    np.testing.assert_allclose(np.asarray(sparse.to_dense(sv_s.x)),
+                               np.asarray(sv_f.x), rtol=1e-5, atol=1e-6)
+    assert np.asarray(w_s).shape == (d,)     # hypothesis stays dense
+
+
+def _assert_sparse_gram_round_equivalence(rounds=2, n=256, d=32,
+                                          nnz=4, cap=8):
+    """pallas_sparse Gram under the sharded round ≡ the dense xla Gram
+    functional reference at matched data."""
+    import dataclasses as dc
+
+    from repro import compat, sparse
+    from repro.core import MRSVMConfig, SVMConfig
+    from repro.core.mapreduce_svm import build_sharded_round, init_sv_buffer
+    from repro.data import svm_rows
+
+    Xd, y = svm_rows(n, d, seed=5, nnz=nnz)
+    Xd, y = jnp.asarray(Xd), jnp.asarray(y)
+    mask = jnp.ones((n,))
+    Xs = sparse.from_dense(Xd, cap)
+
+    cfg_d = MRSVMConfig(sv_capacity=32, svm=SVMConfig(
+        C=1.0, max_epochs=10, use_gram=True, gram_impl="xla"),
+        shuffle_wire_dtype="float32")
+    cfg_s = dc.replace(cfg_d, svm=dc.replace(
+        cfg_d.svm, gram_impl="pallas_sparse", row_format="sparse_csr",
+        nnz_cap=cap))
+
+    mesh = compat.make_mesh((NDEV,), ("data",))
+    fn = build_sharded_round(mesh, ("data",), cfg_s, n // NDEV)
+    sv_s = init_sv_buffer(cfg_s.sv_capacity, d, nnz_cap=cap)
+    risks_s = None
+    for _ in range(rounds):
+        sv_s, risks_s, w_s, b_s = fn(Xs, y, mask, sv_s)
+
+    sv_f, risks_f = _functional_reference(Xd, y, mask, cfg_d, rounds)
+
+    np.testing.assert_allclose(np.asarray(risks_s), np.asarray(risks_f),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(sv_s.ids), np.asarray(sv_f.ids))
+    np.testing.assert_allclose(np.asarray(sv_s.alpha), np.asarray(sv_f.alpha),
+                               rtol=1e-4, atol=1e-5)
+
+
 def _check_gram_xla():
     _assert_gram_round_equivalence("xla")
 
 
 def _check_gram_pallas():
     _assert_gram_round_equivalence("pallas")
+
+
+def _check_sparse_1d():
+    _assert_sparse_round_equivalence("allgather")
+
+
+def _check_sparse_ring_1d():
+    _assert_sparse_round_equivalence("ring")
+
+
+def _check_sparse_gram_pallas():
+    _assert_sparse_gram_round_equivalence()
 
 
 def test_sharded_round_matches_functional():
@@ -278,3 +380,24 @@ def test_ring_round_single_axis_ppermute_fallback():
         _check_ring_fallback_pod_2d()
     else:
         _in_subprocess("_check_ring_fallback_pod_2d")
+
+
+def test_sparse_round_matches_dense_functional():
+    if len(jax.devices()) >= NDEV:
+        _check_sparse_1d()
+    else:
+        _in_subprocess("_check_sparse_1d")
+
+
+def test_sparse_ring_round_matches_dense_functional():
+    if len(jax.devices()) >= NDEV:
+        _check_sparse_ring_1d()
+    else:
+        _in_subprocess("_check_sparse_ring_1d")
+
+
+def test_sparse_pallas_gram_round_matches_dense_functional():
+    if len(jax.devices()) >= NDEV:
+        _check_sparse_gram_pallas()
+    else:
+        _in_subprocess("_check_sparse_gram_pallas")

@@ -1,0 +1,341 @@
+"""Blocked-CSR sparse row path (ISSUE 6): format plumbing, featurizer
+emission, wire round-trip, and sparse ≡ dense solver equivalence at
+matched data. The sharded-mode sparse legs live in
+test_sharded_round.py / mp_worker.py; the hypothesis properties in
+test_property.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sparse
+
+
+def _sparse_dense_pair(n=24, d=40, nnz=5, cap=8, seed=0):
+    """Matched (SparseRows, dense) rows with DISTINCT in-row indices
+    and ≤ cap nonzeros, so from_dense/to_dense round-trips exactly."""
+    rng = np.random.default_rng(seed)
+    dense = np.zeros((n, d), np.float32)
+    for i in range(n):
+        cols = rng.choice(d, nnz, replace=False)
+        dense[i, cols] = rng.normal(0, 1, nnz)
+    Xd = jnp.asarray(dense)
+    return sparse.from_dense(Xd, cap), Xd
+
+
+# ---------------------------------------------------------------------------
+# format plumbing
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_exact_when_nnz_below_cap():
+    Xs, Xd = _sparse_dense_pair()
+    np.testing.assert_array_equal(np.asarray(sparse.to_dense(Xs)),
+                                  np.asarray(Xd))
+    assert Xs.shape == Xd.shape and Xs.dtype == Xd.dtype
+    assert Xs.nnz_cap == 8 and Xs.ndim == 2
+
+
+def test_from_dense_truncates_to_top_magnitude():
+    row = jnp.asarray([[0.1, -5.0, 0.0, 2.0, -0.5, 3.0]])
+    sp = sparse.from_dense(row, 3)
+    back = np.asarray(sparse.to_dense(sp))[0]
+    # the 3 largest-|value| entries survive, the rest drop to 0
+    np.testing.assert_array_equal(back, [0.0, -5.0, 0.0, 2.0, 0.0, 3.0])
+
+
+def test_padding_slots_are_index0_value0():
+    Xs, _ = _sparse_dense_pair(nnz=3, cap=8)
+    idx, val = np.asarray(Xs.indices), np.asarray(Xs.values)
+    pad = val == 0
+    assert pad.any()
+    np.testing.assert_array_equal(idx[pad], 0)
+
+
+def test_dense_like_surface_matches_dense_semantics():
+    Xs, Xd = _sparse_dense_pair(seed=1)
+    n, d = Xd.shape
+    W = jax.random.normal(jax.random.PRNGKey(0), (d, 3))
+    np.testing.assert_allclose(np.asarray(Xs @ W), np.asarray(Xd @ W),
+                               rtol=1e-5, atol=1e-6)
+    v = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    np.testing.assert_allclose(np.asarray(Xs @ v), np.asarray(Xd @ v),
+                               rtol=1e-5, atol=1e-6)
+    scale = jnp.arange(1.0, n + 1.0)[:, None]
+    np.testing.assert_allclose(np.asarray(sparse.to_dense(Xs * scale)),
+                               np.asarray(Xd * scale), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(sparse.to_dense(Xs[4:9])),
+                                  np.asarray(Xd[4:9]))
+    np.testing.assert_allclose(np.asarray(sparse.row_sq_norms(Xs)),
+                               np.asarray(jnp.sum(Xd * Xd, axis=1)),
+                               rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError):
+        Xs * jnp.ones((n, d))          # feature-wise scale is structural
+    with pytest.raises(ValueError):
+        Xs.reshape(n, 7)               # last reshape dim must stay d
+
+
+def test_structural_ops_match_dense():
+    Xs, Xd = _sparse_dense_pair(seed=2)
+    Ys, Yd = _sparse_dense_pair(seed=3)
+    cat = sparse.rows_concat(Xs, Ys, axis=0)
+    np.testing.assert_array_equal(
+        np.asarray(sparse.to_dense(cat)),
+        np.asarray(jnp.concatenate([Xd, Yd], axis=0)))
+    pad = sparse.pad_rows(Xs, 5)
+    assert pad.shape == (Xd.shape[0] + 5, Xd.shape[1])
+    np.testing.assert_array_equal(
+        np.asarray(sparse.to_dense(pad))[-5:], 0.0)
+    resh = pad.reshape(1, pad.shape[0], Xs.d)
+    topi = jnp.asarray([[3, 0, 7]])
+    np.testing.assert_array_equal(
+        np.asarray(sparse.to_dense(sparse.take_rows_along(resh, topi))),
+        np.asarray(jnp.take_along_axis(
+            sparse.to_dense(resh), topi[..., None], axis=1)))
+    with pytest.raises(TypeError):
+        sparse.rows_concat(Xs, Yd)
+    with pytest.raises(ValueError):
+        sparse.rows_concat(Xs, sparse.from_dense(Yd, 4))   # cap mismatch
+
+
+def test_cross_dots_all_format_mixes():
+    Xs, Xd = _sparse_dense_pair(n=17, seed=4)
+    Zs, Zd = _sparse_dense_pair(n=9, seed=5)
+    want = np.asarray(Xd @ Zd.T)
+    for a, b in ((Xs, Zs), (Xs, Zd), (Xd, Zs), (Xd, Zd)):
+        np.testing.assert_allclose(np.asarray(sparse.cross_dots(a, b)),
+                                   want, rtol=1e-5, atol=1e-6)
+
+
+def test_weighted_row_sum_matches_dense():
+    Xs, Xd = _sparse_dense_pair(seed=6)
+    coef = jax.random.normal(jax.random.PRNGKey(2), (Xd.shape[0],))
+    np.testing.assert_allclose(np.asarray(sparse.weighted_row_sum(Xs, coef)),
+                               np.asarray(Xd.T @ coef), rtol=1e-5, atol=1e-6)
+
+
+def test_sparse_rows_is_a_pytree():
+    Xs, Xd = _sparse_dense_pair(seed=7)
+    leaves, treedef = jax.tree_util.tree_flatten(Xs)
+    assert len(leaves) == 2
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.d == Xs.d
+    # jit/vmap compose through the pytree
+    f = jax.jit(lambda x, v: x @ v)
+    v = jnp.ones((Xs.d,))
+    np.testing.assert_allclose(np.asarray(f(Xs, v)), np.asarray(Xd @ v),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# featurizer emission: tokenizer + tfidf never densify
+# ---------------------------------------------------------------------------
+
+_DOCS = ["seçim sonuçları bugün açıklandı açıklandı",
+         "bugün hava çok güzel",
+         "seçim seçim seçim anketi",
+         ""]
+
+
+def test_count_rows_sparse_matches_dense_counts():
+    from repro.text.tokenizer import count_matrix, count_rows_sparse, tokenize
+    toks = [tokenize(t) for t in _DOCS]
+    dense = count_matrix(toks, 64)
+    sp = count_rows_sparse(toks, 64, nnz_cap=8)
+    np.testing.assert_array_equal(
+        np.asarray(sparse.to_dense(jax.tree_util.tree_map(jnp.asarray, sp))),
+        dense)
+    # distinct in-row indices (the SparseRows contract)
+    for row_i, row_v in zip(np.asarray(sp.indices), np.asarray(sp.values)):
+        live = row_i[row_v != 0]
+        assert len(live) == len(set(live.tolist()))
+
+
+def test_count_rows_sparse_truncates_to_top_counts():
+    from repro.text.tokenizer import count_rows_sparse
+    doc = [["a", "a", "a", "b", "b", "c", "d"]]
+    sp = count_rows_sparse(doc, 997, nnz_cap=2)
+    vals = sorted(np.asarray(sp.values)[0].tolist(), reverse=True)
+    assert vals == [3.0, 2.0]          # highest-count terms kept
+
+
+def test_tfidf_sparse_matches_dense():
+    from repro.text import fit_idf, transform
+    from repro.text.tokenizer import count_matrix, count_rows_sparse, tokenize
+    toks = [tokenize(t) for t in _DOCS]
+    dense = jnp.asarray(count_matrix(toks, 64))
+    sp = jax.tree_util.tree_map(
+        jnp.asarray, count_rows_sparse(toks, 64, nnz_cap=8))
+    md, ms = fit_idf(dense), fit_idf(sp)
+    np.testing.assert_allclose(np.asarray(md.idf), np.asarray(ms.idf),
+                               rtol=1e-6)
+    for l2 in (False, True):
+        Xd = transform(dense, md, l2_normalize=l2)
+        Xs = transform(sp, ms, l2_normalize=l2)
+        assert sparse.is_sparse(Xs)
+        np.testing.assert_allclose(np.asarray(sparse.to_dense(Xs)),
+                                   np.asarray(Xd), rtol=1e-5, atol=1e-6)
+
+
+def test_tfidf_weighting_cannot_resurrect_zeros():
+    """Padding slots carry column id 0 whose SMOOTHED idf is nonzero —
+    the guarded transform must keep them exactly 0 (the satellite
+    bugfix: an unguarded gather-multiply would densify column 0)."""
+    from repro.text import fit_idf, transform
+    sp = sparse.SparseRows(
+        jnp.asarray([[3, 0, 0], [1, 2, 0]], jnp.int32),
+        jnp.asarray([[2.0, 0.0, 0.0], [1.0, 1.0, 0.0]]), 8)
+    model = fit_idf(sp)
+    assert float(model.idf[0]) > 0.0     # the hazard exists
+    out = transform(sp, model, l2_normalize=False)
+    np.testing.assert_array_equal(
+        np.asarray(out.values == 0), np.asarray(sp.values == 0))
+    np.testing.assert_array_equal(np.asarray(out.indices),
+                                  np.asarray(sp.indices))
+
+
+# ---------------------------------------------------------------------------
+# generator: blocked-CSR rows straight from the pipeline
+# ---------------------------------------------------------------------------
+
+def test_svm_rows_sparse_invariants():
+    from repro.data import svm_rows_sparse
+    n, d, cap = 300, 512, 16
+    Xs, y = svm_rows_sparse(n, d, cap, seed=11)
+    assert Xs.shape == (n, d) and y.shape == (n,)
+    idx, val = np.asarray(Xs.indices), np.asarray(Xs.values)
+    assert idx.min() >= 0 and idx.max() < d
+    # distinct in-row indices; L2-normalized rows; labels ±1
+    for i in range(n):
+        live = idx[i][val[i] != 0]
+        assert len(live) == len(set(live.tolist()))
+    np.testing.assert_allclose(np.sqrt((val ** 2).sum(1)), 1.0, rtol=1e-5)
+    assert set(np.unique(y)) <= {-1.0, 1.0}
+
+
+def test_svm_rows_sparse_shards_partition_dataset():
+    from repro.data import svm_rows_sparse
+    n, d, cap, procs = 2100, 256, 8, 3
+    full_X, full_y = svm_rows_sparse(n, d, cap, seed=5)
+    xi, xv, ys = [], [], []
+    for p in range(procs):
+        Xp, yp = svm_rows_sparse(n, d, cap, seed=5,
+                                 process_index=p, process_count=procs)
+        xi.append(np.asarray(Xp.indices))
+        xv.append(np.asarray(Xp.values))
+        ys.append(yp)
+    np.testing.assert_array_equal(np.concatenate(xi), full_X.indices)
+    np.testing.assert_array_equal(np.concatenate(xv), full_X.values)
+    np.testing.assert_array_equal(np.concatenate(ys), full_y)
+
+
+def test_svm_rows_dense_density_knob():
+    from repro.data import default_row_nnz, svm_rows
+    d = 256
+    X, _ = svm_rows(64, d, seed=1, nnz=7)
+    np.testing.assert_array_equal((np.asarray(X) != 0).sum(1), 7)
+    X2, _ = svm_rows(64, d, seed=1)
+    np.testing.assert_array_equal((np.asarray(X2) != 0).sum(1),
+                                  default_row_nnz(d))
+
+
+# ---------------------------------------------------------------------------
+# wire format: (values-packed + bitcast indices) lanes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wire", ["float32", "bfloat16"])
+def test_sparse_wire_roundtrip(wire):
+    from repro.core.mapreduce_svm import pack_wire_rows, unpack_wire_rows
+    wire_dt = jnp.dtype(wire)
+    Xs, _ = _sparse_dense_pair(n=12, d=50, nnz=4, cap=6, seed=8)
+    if wire == "bfloat16":    # bf16-representable values → lossless wire
+        Xs = sparse.SparseRows(
+            Xs.indices, Xs.values.astype(jnp.bfloat16).astype(jnp.float32),
+            Xs.d)
+    flat, wslots = pack_wire_rows(Xs, wire_dt)
+    assert flat.ndim == 1 and flat.dtype == jnp.float32
+    back = unpack_wire_rows(flat, 12, Xs.d, wire_dt, wslots,
+                            nnz_cap=Xs.nnz_cap)
+    assert sparse.is_sparse(back)
+    # indices ship bitcast, NEVER quantized — exact under any wire dtype
+    np.testing.assert_array_equal(np.asarray(back.indices),
+                                  np.asarray(Xs.indices))
+    np.testing.assert_array_equal(
+        np.asarray(back.values.astype(jnp.float32)), np.asarray(Xs.values))
+
+
+def test_sparse_wire_payload_independent_of_d():
+    from repro.core.mapreduce_svm import pack_wire_rows
+    for d in (1000, 100000):
+        Xs, _ = _sparse_dense_pair(n=4, d=d, nnz=4, cap=6, seed=9)
+        flat, _ = pack_wire_rows(Xs, jnp.bfloat16)
+        assert flat.size == 4 * (3 + 6)     # ceil(cap/2) value lanes + cap
+
+
+# ---------------------------------------------------------------------------
+# solver equivalence at matched data (functional driver)
+# ---------------------------------------------------------------------------
+
+def _matched_problem(n=256, d=64, cap=16):
+    from repro.data import svm_rows
+    Xd, y = svm_rows(n, d, seed=3, nnz=8)
+    Xd = jnp.asarray(Xd)
+    return sparse.from_dense(Xd, cap), Xd, jnp.asarray(y)
+
+
+def test_fit_mapreduce_sparse_matches_dense_linear():
+    from repro.core import MRSVMConfig, SVMConfig
+    from repro.core.mapreduce_svm import decision_values, fit_mapreduce
+    Xs, Xd, y = _matched_problem()
+    cap = Xs.nnz_cap
+    cfg_d = MRSVMConfig(sv_capacity=32, max_rounds=2,
+                        svm=SVMConfig(C=1.0, max_epochs=8))
+    cfg_s = MRSVMConfig(sv_capacity=32, max_rounds=2,
+                        svm=SVMConfig(C=1.0, max_epochs=8,
+                                      row_format="sparse_csr", nnz_cap=cap))
+    md = fit_mapreduce(Xd, y, 4, cfg_d)
+    ms = fit_mapreduce(Xs, y, 4, cfg_s)
+    assert sparse.is_sparse(ms.sv.x)
+    np.testing.assert_allclose(float(ms.risk), float(md.risk),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ms.sv.ids),
+                                  np.asarray(md.sv.ids))
+    # serve-side decision path: dense queries against the sparse model
+    q = Xd[:40]
+    np.testing.assert_allclose(np.asarray(decision_values(ms, q, cfg_s)),
+                               np.asarray(decision_values(md, q, cfg_d)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fit_mapreduce_sparse_matches_dense_rbf_pallas():
+    from repro.core import KernelConfig, MRSVMConfig, SVMConfig
+    from repro.core.mapreduce_svm import decision_values, fit_mapreduce
+    Xs, Xd, y = _matched_problem(n=128)
+    cap = Xs.nnz_cap
+    kern = KernelConfig(name="rbf")
+    cfg_d = MRSVMConfig(sv_capacity=32, max_rounds=2,
+                        svm=SVMConfig(C=1.0, max_epochs=8, kernel=kern))
+    cfg_s = MRSVMConfig(sv_capacity=32, max_rounds=2,
+                        svm=SVMConfig(C=1.0, max_epochs=8, kernel=kern,
+                                      row_format="sparse_csr", nnz_cap=cap,
+                                      gram_impl="pallas_sparse"))
+    md = fit_mapreduce(Xd, y, 4, cfg_d)
+    ms = fit_mapreduce(Xs, y, 4, cfg_s)
+    np.testing.assert_allclose(float(ms.risk), float(md.risk),
+                               rtol=1e-4, atol=1e-5)
+    q = Xd[:24]
+    np.testing.assert_allclose(np.asarray(decision_values(ms, q, cfg_s)),
+                               np.asarray(decision_values(md, q, cfg_d)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_svm_config_validates_sparse_fields():
+    from repro.core import SVMConfig
+    with pytest.raises(ValueError):
+        SVMConfig(row_format="sparse_csr")            # nnz_cap missing
+    with pytest.raises(ValueError):
+        SVMConfig(row_format="csr")                   # unknown format
+    with pytest.raises(ValueError):
+        SVMConfig(gram_impl="pallas_sparse")          # needs sparse rows
+    with pytest.raises(ValueError):
+        SVMConfig(gram_impl="pallas", row_format="sparse_csr", nnz_cap=4)
+    SVMConfig(row_format="sparse_csr", nnz_cap=4)     # valid
