@@ -19,8 +19,11 @@ test-dist:
 
 # Multi-process: 2 real jax.distributed CPU processes (localhost
 # coordinator + gloo collectives), per-host loaders, both shuffles ≡
-# the functional reference. The test spawns its own processes, so no
-# XLA flags are needed here (ISSUE 5 / DESIGN.md §11).
+# the functional reference, PLUS the kill-a-worker leg (ISSUE 7):
+# SIGKILL one process mid-wave, restart from the durable round-state
+# checkpoint, resumed run ≡ uninterrupted run bit-for-bit. The tests
+# spawn their own processes, so no XLA flags are needed here
+# (ISSUE 5 / DESIGN.md §11, §13).
 test-dist-mp:
 	$(PY) -m pytest -q tests/test_multihost.py
 

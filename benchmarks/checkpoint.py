@@ -1,0 +1,87 @@
+"""Checkpoint overhead of the fault-tolerant serving path (ISSUE 7).
+
+The streaming service snapshots every tenant's ModelSnapshot to
+flat-npz after each wave (svm_stream.checkpoint). That durability is
+only free if save + restore wall time is small next to the fold wave
+it shadows — this bench measures all three on the same S-tenant
+service and reports the ckpt/fold ratio.
+
+Standalone (forces 8 host devices, writes BENCH_checkpoint.json):
+
+    PYTHONPATH=src python -m benchmarks.checkpoint
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from typing import List
+
+S_STREAMS = 4
+NUM_FEATURES = 128
+BATCH_ROWS = 512
+PARTITIONS = 8
+SV_CAP = 128
+
+from benchmarks.sweep import _problem  # shared synthetic problem
+
+
+def checkpoint_bench(S: int = S_STREAMS, d: int = NUM_FEATURES,
+                     L: int = PARTITIONS) -> List[str]:
+    import jax
+    from repro.core import MRSVMConfig, SVMConfig, fit_mapreduce
+    from repro.serving import StreamingSVMService
+
+    cfg = MRSVMConfig(sv_capacity=SV_CAP, gamma=0.0, max_rounds=3,
+                      svm=SVMConfig(C=1.0, max_epochs=10))
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        svc = StreamingSVMService(cfg, num_partitions=L,
+                                  max_batches_per_wave=1)
+        for s in range(S):
+            Xh, yh = _problem(2048, d, seed=10 + s)
+            svc.register(f"t{s}", fit_mapreduce(Xh, yh, L, cfg))
+
+        def fold_wave():
+            for s in range(S):
+                Xn, yn = _problem(BATCH_ROWS, d, seed=100 + s)
+                svc.submit(f"t{s}", Xn, yn)
+            svc.run_wave()
+            jax.block_until_ready(svc.snapshot("t0").model.sv.x)
+
+        fold_wave()                                # warm the batched jit
+        t0 = time.time()
+        fold_wave()
+        t_fold = time.time() - t0
+
+        svc.checkpoint_dir = ckpt_dir              # save outside the wave
+        svc.checkpoint()                           # warm (mkdir, tracing)
+        t0 = time.time()
+        svc.checkpoint()
+        t_save = time.time() - t0
+
+        StreamingSVMService.restore(cfg, ckpt_dir)     # warm
+        t0 = time.time()
+        svc2 = StreamingSVMService.restore(cfg, ckpt_dir)
+        t_restore = time.time() - t0
+        assert sorted(svc2.streams()) == sorted(svc.streams())
+
+    frac = (t_save + t_restore) / max(t_fold, 1e-9)
+    return [
+        f"ckpt_save_wave,{t_save * 1e6:.0f},streams={S} cap={SV_CAP}",
+        f"ckpt_restore_service,{t_restore * 1e6:.0f},streams={S}",
+        f"ckpt_fold_wave,{t_fold * 1e6:.0f},streams={S} L={L}",
+        f"ckpt_over_fold,0,frac={frac:.3f} (save+restore / fold wave)",
+    ]
+
+
+if __name__ == "__main__":
+    import os
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        (os.environ.get("XLA_FLAGS", "")
+         + " --xla_force_host_platform_device_count=8").strip())
+    from benchmarks.run import write_bench_json
+    lines = list(checkpoint_bench())
+    print("name,us_per_call,derived")
+    for line in lines:
+        print(line)
+    write_bench_json("checkpoint", lines)

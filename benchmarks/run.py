@@ -167,6 +167,7 @@ def main() -> None:
     from benchmarks.streaming import streaming_bench
     from benchmarks.shuffle_overlap import shuffle_overlap_bench
     from benchmarks.sparse_gram import sparse_gram_bench
+    from benchmarks.checkpoint import checkpoint_bench
 
     benches = [
         ("table5", table5_dataset),
@@ -182,6 +183,7 @@ def main() -> None:
         ("streaming", streaming_bench),
         ("shuffle_overlap", shuffle_overlap_bench),
         ("sparse_gram", sparse_gram_bench),
+        ("checkpoint", checkpoint_bench),
     ]
     only = [s.strip() for s in args.only.split(",")] if args.only else None
     print("name,us_per_call,derived")

@@ -1,1 +1,2 @@
-from repro.ckpt.checkpoint import latest_step, restore, save
+from repro.ckpt.checkpoint import (atomic_write_json, latest_path,
+                                   latest_step, restore, save)

@@ -29,6 +29,15 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
+def atomic_write_json(path: str, payload: Any) -> None:
+    """Write JSON via tmp + rename: readers see the old file or the new
+    one, never a torn write (the same guarantee ``save`` gives npz)."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+    os.replace(tmp, path)
+
+
 def save(path: str, tree: Any, step: Optional[int] = None) -> None:
     """Atomic save (write tmp → rename)."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -36,13 +45,23 @@ def save(path: str, tree: Any, step: Optional[int] = None) -> None:
     np.savez(tmp, **_flatten(tree))
     os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
     if step is not None:
+        # The meta pointer is what every restore reads first — it must
+        # be replaced atomically too, or a crash mid-write leaves the
+        # whole directory unrestorable despite intact npz files.
         meta = os.path.join(os.path.dirname(path) or ".", "ckpt_meta.json")
-        with open(meta, "w") as f:
-            json.dump({"latest_step": step, "file": os.path.basename(path)}, f)
+        atomic_write_json(
+            meta, {"latest_step": step, "file": os.path.basename(path)})
 
 
 def restore(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (validates shapes/dtypes)."""
+    """Restore into the structure of ``like`` (validates shapes/dtypes).
+
+    Dtype drift raises instead of casting: a checkpoint restores
+    bit-exact or not at all (silent f32→bf16 narrowing would make a
+    resumed run diverge from the uninterrupted one). The bf16 u16-view
+    round-trip is transparent — a bf16 leaf restored into a bf16
+    ``like`` passes.
+    """
     data = np.load(path, allow_pickle=False)
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
@@ -57,7 +76,33 @@ def restore(path: str, like: Any) -> Any:
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(
                 f"shape mismatch for {key}: ckpt {arr.shape} vs {leaf.shape}")
-        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+        want = np.dtype(leaf.dtype)
+        if arr.dtype != want:
+            raise ValueError(
+                f"dtype mismatch for {key}: ckpt {arr.dtype} vs like "
+                f"{want} — checkpoints restore exactly, not cast")
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def leaf_dtypes(tree: Any) -> Dict[str, str]:
+    """``str(dtype)`` per flat leaf key — recorded alongside a save so a
+    restorer can rebuild an exactly-typed ``like`` tree from static
+    shape facts alone (see :func:`with_dtypes`)."""
+    return {_SEP.join(str(p) for p in path): str(np.asarray(leaf).dtype)
+            for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]}
+
+
+def with_dtypes(like: Any, dtypes: Dict[str, str]) -> Any:
+    """Re-type ``like``'s leaves from a :func:`leaf_dtypes` record
+    (shapes and structure kept; keys absent from the record keep their
+    placeholder dtype)."""
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_elems, leaf in paths:
+        dt = dtypes.get(_SEP.join(str(p) for p in path_elems))
+        leaves.append(leaf if dt is None
+                      else jnp.zeros(np.shape(leaf), jnp.dtype(dt)))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
@@ -67,3 +112,13 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return None
     with open(meta) as f:
         return json.load(f).get("latest_step")
+
+
+def latest_path(ckpt_dir: str) -> Optional[str]:
+    """Path of the checkpoint the meta pointer names, or ``None``."""
+    meta = os.path.join(ckpt_dir, "ckpt_meta.json")
+    if not os.path.exists(meta):
+        return None
+    with open(meta) as f:
+        name = json.load(f).get("file")
+    return os.path.join(ckpt_dir, name) if name else None

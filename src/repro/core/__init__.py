@@ -18,8 +18,9 @@ from repro.core.sweep import (DedupChunk, ShardedSweep, SweepOneVsRest,
                               expand_chunk, expand_sweep_sv,
                               fit_mapreduce_sweep, fit_one_vs_rest_sweep,
                               init_sharded_sweep_sv, make_sharded_sweep_round,
-                              predict_sweep, run_sharded_sweep, stack_params,
-                              sweep_decision_values, sweep_grid)
+                              predict_sweep, restore_sweep_state,
+                              run_sharded_sweep, save_sweep_state,
+                              stack_params, sweep_decision_values, sweep_grid)
 
 __all__ = [
     "KernelConfig", "apply_kernel", "BinarySVM", "SolverParams", "SVMConfig",
@@ -35,7 +36,7 @@ __all__ = [
     "build_sharded_sweep_round", "dedup_candidates", "dedup_unique_cap",
     "expand_chunk", "expand_sweep_sv", "fit_mapreduce_sweep",
     "fit_one_vs_rest_sweep", "init_sharded_sweep_sv",
-    "make_sharded_sweep_round", "predict_sweep",
-    "run_sharded_sweep", "stack_params", "sweep_decision_values",
-    "sweep_grid",
+    "make_sharded_sweep_round", "predict_sweep", "restore_sweep_state",
+    "run_sharded_sweep", "save_sweep_state", "stack_params",
+    "sweep_decision_values", "sweep_grid",
 ]

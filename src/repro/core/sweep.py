@@ -873,3 +873,38 @@ def run_sharded_sweep(round_fn, X: jax.Array, y: jax.Array,
     return ShardedSweep(risks=jnp.asarray(best_risk), ws=jnp.asarray(best_w),
                         bs=jnp.asarray(best_b), sv=svb, rounds=rounds,
                         history=history)
+
+
+# ---------------------------------------------------------------------------
+# Round-state ser/de (ISSUE 7) — the sweep's fault-tolerance hooks.
+# ---------------------------------------------------------------------------
+
+def save_sweep_state(path: str, state, step: Optional[int] = None) -> None:
+    """Durably snapshot a sharded-sweep round state.
+
+    ``state`` is whatever the transport threads between rounds — the
+    per-config ``(S, cap, …)`` :class:`SVBuffer` on allgather, or the
+    shared-row :class:`DedupChunk` on the dedup ring. Both are
+    registered pytrees of array leaves, so the flat-npz checkpointer
+    (:mod:`repro.ckpt.checkpoint`) takes them as-is; with ``step`` the
+    directory's meta pointer advances atomically (crash-safe).
+    """
+    from repro.ckpt import checkpoint as ckpt
+    ckpt.save(path, state, step=step)
+
+
+def restore_sweep_state(path: str, cfg: MRSVMConfig, num_configs: int,
+                        d: int, num_devices: int, rows_per_device: int,
+                        dtype=jnp.float32, per_config_data: bool = False):
+    """Restore a round state saved by :func:`save_sweep_state`.
+
+    The ``like`` tree is rebuilt by :func:`init_sharded_sweep_sv` from
+    the SAME static facts that shaped the original, so shape or dtype
+    drift — a different sweep width, capacity, transport layout or wire
+    dtype — fails loudly instead of resuming a subtly wrong sweep.
+    """
+    from repro.ckpt import checkpoint as ckpt
+    like = init_sharded_sweep_sv(cfg, num_configs, d, num_devices,
+                                 rows_per_device, dtype,
+                                 per_config_data=per_config_data)
+    return ckpt.restore(path, like)

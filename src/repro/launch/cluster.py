@@ -230,13 +230,18 @@ def add_cluster_flags(parser) -> None:
     parser.add_argument("--local-devices", type=int, default=None,
                         help="faked host devices per process "
                              "(multi-process CPU)")
+    parser.add_argument("--cluster-timeout", type=int, default=120,
+                        help="jax.distributed initialization timeout (s) "
+                             "— bounds how long a restarted process "
+                             "waits for dead peers to rejoin")
 
 
 def cluster_config_from_args(args) -> ClusterConfig:
     return ClusterConfig(coordinator=args.coordinator,
                          num_processes=args.num_processes,
                          process_id=args.process_id,
-                         local_device_count=args.local_devices)
+                         local_device_count=args.local_devices,
+                         initialization_timeout=args.cluster_timeout)
 
 
 def simulated_topology(num_processes: int, device_count: int) -> dict:

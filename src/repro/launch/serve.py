@@ -69,13 +69,25 @@ def serve_svm(svm_cfg, args, cluster) -> None:
         y = jnp.sign((X @ w).astype(jnp.float32)).astype(dt)
         return X, y
 
-    svc = StreamingSVMService(cfg, num_partitions=L,
-                              max_batches_per_wave=args.streams,
-                              cluster=cluster)
+    if args.restore:
+        if not args.checkpoint_dir:
+            raise SystemExit("--restore requires --checkpoint-dir")
+        svc = StreamingSVMService.restore(
+            cfg, args.checkpoint_dir, cluster=cluster,
+            checkpoint_every_waves=args.checkpoint_every)
+        print(f"svm-serve: restored {len(svc.streams())} streams from "
+              f"{args.checkpoint_dir}")
+    else:
+        svc = StreamingSVMService(
+            cfg, num_partitions=L, max_batches_per_wave=args.streams,
+            cluster=cluster, checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every_waves=args.checkpoint_every)
     print(f"svm-serve: {args.streams} streams × {rows} rows/wave, "
           f"{d} features, {L} partitions "
           f"(process {cluster.process_index}/{cluster.process_count})")
     for s in range(args.streams):
+        if f"stream{s}" in svc.streams():
+            continue                   # came back with the checkpoint
         X0, y0 = batch(s, 0)
         svc.register(f"stream{s}", fit_mapreduce(X0, y0, L, cfg))
     if not cluster.is_coordinator:
@@ -88,6 +100,10 @@ def serve_svm(svm_cfg, args, cluster) -> None:
         return
 
     svc.start()
+    # post-restore the version counters resume where the checkpoint
+    # left them, so wave completion is measured against the base
+    base = {s: svc.snapshot(f"stream{s}").version
+            for s in range(args.streams)}
     for wave in range(1, args.waves + 1):
         batches = [batch(s, wave) for s in range(args.streams)]
         stale = [float(jnp.mean(svc.predict(f"stream{s}", X) == y))
@@ -96,7 +112,7 @@ def serve_svm(svm_cfg, args, cluster) -> None:
         for s, (X, y) in enumerate(batches):
             svc.submit(f"stream{s}", X, y)
         deadline = time.time() + 300
-        while any(svc.snapshot(f"stream{s}").version < wave
+        while any(svc.snapshot(f"stream{s}").version < base[s] + wave
                   for s in range(args.streams)):
             if svc.scheduler_error is not None or time.time() > deadline:
                 raise RuntimeError(
@@ -128,6 +144,15 @@ def main():
                     choices=("allgather", "ring"),
                     help="svm family: SV merge transport of the sharded "
                          "fold programs (default: the arch config's)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="svm family: durable per-stream ModelSnapshot "
+                         "checkpoints (DESIGN.md §13)")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="svm family: waves between checkpoints")
+    ap.add_argument("--restore", action="store_true",
+                    help="svm family: rebuild the service from the "
+                         "latest manifest in --checkpoint-dir instead "
+                         "of retraining stream models")
     add_cluster_flags(ap)
     args = ap.parse_args()
 

@@ -31,10 +31,26 @@ Per-slot accounting mirrors the corrected decode scheduler
 (:mod:`repro.serving.scheduler`): every micro-batch records submit →
 admit → completion, so queue wait and fold service time are separable
 and throughput reports aren't uniformly pessimistic.
+
+Fault tolerance + elasticity (DESIGN.md §13): with ``checkpoint_dir``
+set, every tenant's :class:`ModelSnapshot` persists through the
+flat-npz checkpointer after each ``checkpoint_every_waves``-th wave
+(the model *is* its support vectors — snapshots are tiny, restore is
+instant), and :meth:`StreamingSVMService.restore` rebuilds a
+queues-empty service from the latest manifest. A fold that dies
+mid-wave requeues the un-swapped streams' micro-batches at the HEAD of
+their queues — batches complete only *after* the snapshot swap, so
+re-admission is exactly-once at the model level. Admission control
+bounds the per-tenant queues (``max_queue_per_stream`` +
+``shed_policy``), tracks a latency SLO (``slo_s``), and pads the
+sweep's job axis to power-of-two buckets so a wave of any width reuses
+a handful of compiled programs.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import threading
 import time
 from typing import Dict, List, NamedTuple, Optional, Tuple
@@ -44,12 +60,58 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
-from repro.core.mapreduce_svm import (MapReduceSVM, MRSVMConfig,
+from repro import sparse as sparse_rows
+from repro.ckpt import checkpoint as ckpt
+from repro.core.mapreduce_svm import (MapReduceSVM, MRSVMConfig, SVBuffer,
                                       decision_values as mr_decision_values,
+                                      init_sv_buffer,
                                       predict as mr_predict,
                                       update_mapreduce)
-from repro.core.svm import SolverParams
+from repro.core.svm import BinarySVM, SolverParams
 from repro.core.sweep import fit_mapreduce_sweep, stack_params
+
+_MANIFEST = "service_manifest.json"
+
+
+def _snapshot_tree(snap: "ModelSnapshot") -> dict:
+    """The checkpointable (array-leaf) view of one stream's snapshot.
+
+    ``rounds``/``history``/``version`` are not array leaves — the
+    manifest carries ``rounds`` and ``version``; ``history`` is a
+    debugging trace and restores empty.
+    """
+    m = snap.model
+    tree = {"model": {"w": m.w, "b": m.b, "risk": jnp.asarray(m.risk),
+                      "sv": dict(m.sv._asdict()),
+                      "final": dict(m.final._asdict())}}
+    if snap.params is not None:
+        tree["params"] = dict(snap.params._asdict())
+    return tree
+
+
+def _abstract_snapshot_tree(cfg: MRSVMConfig, d: int,
+                            nnz_cap: Optional[int], has_params: bool,
+                            dtypes: Dict[str, str]) -> dict:
+    """Rebuild the ``like`` tree of :func:`_snapshot_tree` from the
+    manifest's static facts: shapes from (cfg, d, nnz_cap), exact leaf
+    dtypes from the recorded :func:`repro.ckpt.checkpoint.leaf_dtypes`
+    map — so restore validates instead of guessing."""
+    cap = cfg.sv_capacity
+    f32 = jnp.float32
+
+    def zf(*shape):
+        return jnp.zeros(shape, f32)
+
+    sv = init_sv_buffer(cap, d, f32, nnz_cap=nnz_cap)
+    final = BinarySVM(alpha=zf(cap), b=zf(), w=zf(d),
+                      epochs_run=jnp.zeros((), jnp.int32),
+                      max_violation=zf())
+    tree = {"model": {"w": zf(d), "b": zf(), "risk": zf(),
+                      "sv": dict(sv._asdict()),
+                      "final": dict(final._asdict())}}
+    if has_params:
+        tree["params"] = dict(cfg.svm.params()._asdict())
+    return ckpt.with_dtypes(tree, dtypes)
 
 
 @dataclasses.dataclass
@@ -114,7 +176,14 @@ class StreamingSVMService:
                  max_batches_per_wave: int = 4,
                  keep_history: bool = False,
                  shuffle_impl: Optional[str] = None,
-                 cluster=None):
+                 cluster=None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every_waves: int = 1,
+                 max_queue_per_stream: Optional[int] = None,
+                 shed_policy: str = "drop_oldest",
+                 max_streams_per_wave: Optional[int] = None,
+                 slo_s: Optional[float] = None,
+                 pad_wave_to_bucket: bool = True):
         # ``shuffle_impl`` overrides the SV merge transport of the
         # config (DESIGN.md §10). The functional folds this host-local
         # service runs have no collective, but the config is the single
@@ -130,11 +199,37 @@ class StreamingSVMService:
         # SNAPSHOTS stay readable everywhere (register/predict/
         # decision_values/snapshot are process-local). None → the
         # historical single-process behaviour, every method enabled.
+        # Fault tolerance (DESIGN.md §13): ``checkpoint_dir`` turns on
+        # durable snapshots — every registered stream persists on
+        # register and after each ``checkpoint_every_waves``-th wave;
+        # ``restore`` rebuilds the service from the latest manifest.
+        # Admission control: ``max_queue_per_stream`` caps each tenant's
+        # backlog (``shed_policy``: 'drop_oldest' sheds the stalest
+        # batch, 'reject' refuses the submit), ``max_streams_per_wave``
+        # bounds the fold's job-axis width (oldest-waiting streams
+        # first), ``slo_s`` counts latency-SLO violations, and
+        # ``pad_wave_to_bucket`` pads the job axis to the next power of
+        # two so any tenant count reuses log2 compiled sweep programs.
+        if shed_policy not in ("drop_oldest", "reject"):
+            raise ValueError(f"unknown shed_policy {shed_policy!r} "
+                             "(expected 'drop_oldest' or 'reject')")
         self.cluster = cluster
         self.cfg = cfg
         self.L = num_partitions
         self.max_batches_per_wave = max_batches_per_wave
         self.keep_history = keep_history
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every_waves = checkpoint_every_waves
+        self.max_queue_per_stream = max_queue_per_stream
+        self.shed_policy = shed_policy
+        self.max_streams_per_wave = max_streams_per_wave
+        self.slo_s = slo_s
+        self.pad_wave_to_bucket = pad_wave_to_bucket
+        self.shed: List[MicroBatch] = []
+        self._requeued = 0
+        self._slo_violations = 0
+        self._waves_since_ckpt = 0
+        self._stream_slot: Dict[str, int] = {}
         self._snapshots: Dict[str, ModelSnapshot] = {}
         self._queues: Dict[str, List[MicroBatch]] = {}
         self._history: Dict[str, Dict[int, ModelSnapshot]] = {}
@@ -165,9 +260,122 @@ class StreamingSVMService:
                 raise ValueError(f"stream {stream!r} already registered")
             self._snapshots[stream] = snap
             self._queues[stream] = []
+            self._stream_slot[stream] = len(self._stream_slot)
             if self.keep_history:
                 self._history[stream] = {0: snap}
+        if self.checkpoint_dir is not None and self._admits:
+            # a stream is durable from the moment it exists — a crash
+            # between register and the first wave must not lose it
+            self.checkpoint()
         return snap
+
+    @classmethod
+    def restore(cls, cfg: MRSVMConfig, checkpoint_dir: str,
+                **kwargs) -> "StreamingSVMService":
+        """Rebuild a queues-empty service from the latest manifest.
+
+        Every stream's snapshot restores at its checkpointed version
+        (SV buffer, SolverParams, w/b/final/risk); wave and uid
+        counters resume from the manifest so post-restore versions and
+        uids keep ascending. Queued-but-unfolded batches are NOT
+        durable — clients re-submit anything they never saw complete
+        (the exactly-once guarantee is at the model level: a fold is in
+        the checkpoint iff its swap happened before the save).
+
+        ``cfg`` must match the checkpointed service's shapes
+        (``sv_capacity`` is validated here; per-leaf shape/dtype drift
+        fails in :func:`repro.ckpt.checkpoint.restore`). Remaining
+        kwargs forward to ``__init__`` — ``num_partitions`` and
+        ``max_batches_per_wave`` default to their manifest values.
+        """
+        path = os.path.join(checkpoint_dir, _MANIFEST)
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"no service manifest under {checkpoint_dir!r} — the "
+                "service checkpoints on register and every "
+                "checkpoint_every_waves-th wave")
+        with open(path) as f:
+            man = json.load(f)
+        if man.get("sv_capacity") != cfg.sv_capacity:
+            raise ValueError(
+                f"checkpoint was taken at sv_capacity="
+                f"{man.get('sv_capacity')} but cfg has {cfg.sv_capacity} "
+                "— restore with the training-time config")
+        kwargs.setdefault("num_partitions", man["num_partitions"])
+        kwargs.setdefault("max_batches_per_wave",
+                          man["max_batches_per_wave"])
+        svc = cls(cfg, checkpoint_dir=checkpoint_dir, **kwargs)
+        for stream in sorted(man["streams"]):
+            meta = man["streams"][stream]
+            like = _abstract_snapshot_tree(cfg, meta["d"], meta["nnz_cap"],
+                                           meta["has_params"],
+                                           meta["dtypes"])
+            tree = ckpt.restore(
+                os.path.join(checkpoint_dir, meta["file"]), like)
+            model = MapReduceSVM(
+                w=tree["model"]["w"], b=tree["model"]["b"],
+                sv=SVBuffer(**tree["model"]["sv"]),
+                final=BinarySVM(**tree["model"]["final"]),
+                risk=tree["model"]["risk"], rounds=meta["rounds"],
+                history=())
+            params = (SolverParams(**tree["params"])
+                      if meta["has_params"] else None)
+            snap = ModelSnapshot(model=model, params=params,
+                                 version=meta["version"])
+            with svc._lock:
+                svc._snapshots[stream] = snap
+                svc._queues[stream] = []
+                svc._stream_slot[stream] = meta["slot"]
+                if svc.keep_history:
+                    svc._history[stream] = {snap.version: snap}
+        with svc._lock:
+            svc._wave = man["wave"]
+            svc._uid = man["uid"]
+        return svc
+
+    def checkpoint(self) -> str:
+        """Durably snapshot every stream + the service counters;
+        returns the manifest path.
+
+        Layout under ``checkpoint_dir``: one flat-npz per stream
+        (atomic tmp→rename, :func:`repro.ckpt.checkpoint.save`) plus an
+        atomically-replaced JSON manifest naming them — a crash at ANY
+        point leaves the previous complete checkpoint installed, never
+        a torn one.
+        """
+        if self.checkpoint_dir is None:
+            raise RuntimeError(
+                "service was built without checkpoint_dir")
+        os.makedirs(self.checkpoint_dir, exist_ok=True)
+        with self._lock:
+            snaps = dict(self._snapshots)
+            slots = dict(self._stream_slot)
+            wave, uid = self._wave, self._uid
+        streams_meta = {}
+        for stream, snap in snaps.items():
+            fname = f"stream_{slots[stream]}.npz"
+            tree = _snapshot_tree(snap)
+            ckpt.save(os.path.join(self.checkpoint_dir, fname), tree)
+            x = snap.model.sv.x
+            sp = sparse_rows.is_sparse(x)
+            streams_meta[stream] = {
+                "file": fname, "slot": slots[stream],
+                "version": snap.version,
+                "rounds": int(snap.model.rounds),
+                "d": int(x.shape[1]),
+                "nnz_cap": int(x.nnz_cap) if sp else None,
+                "has_params": snap.params is not None,
+                "dtypes": ckpt.leaf_dtypes(tree),
+            }
+        ckpt.atomic_write_json(
+            os.path.join(self.checkpoint_dir, _MANIFEST),
+            {"format": 1, "wave": wave, "uid": uid,
+             "sv_capacity": self.cfg.sv_capacity,
+             "num_partitions": self.L,
+             "max_batches_per_wave": self.max_batches_per_wave,
+             "streams": streams_meta})
+        self._waves_since_ckpt = 0
+        return os.path.join(self.checkpoint_dir, _MANIFEST)
 
     def streams(self) -> List[str]:
         with self._lock:
@@ -191,19 +399,29 @@ class StreamingSVMService:
         return self.cluster is None or self.cluster.is_coordinator
 
     def submit(self, stream: str, X: jax.Array, y: jax.Array) -> int:
-        """Queue one vectorized micro-batch; returns its uid.
+        """Queue one vectorized micro-batch; returns its uid. ``X`` is
+        dense ``(n, d)`` or blocked-CSR :class:`repro.sparse.SparseRows`
+        — whichever format the stream's model serves.
 
         Admission is coordinator-only on a multi-process cluster: a
         submit on any other process is a routing bug (its queue would
-        silently never fold), so it raises instead of enqueueing.
+        silently never fold), so it raises instead of enqueueing. A
+        dead scheduler raises too — enqueueing behind one grows queues
+        that can never fold while readers pin the stale snapshot.
         """
+        if self._scheduler_error is not None:
+            raise RuntimeError(
+                "streaming scheduler died — restart the service (or "
+                "StreamingSVMService.restore from its checkpoint) before "
+                "submitting more work") from self._scheduler_error
         if not self._admits:
             raise RuntimeError(
                 f"stream admission runs on process 0; this is process "
                 f"{self.cluster.process_index} of "
                 f"{self.cluster.process_count} (snapshots stay readable "
                 "here — route submissions to the coordinator)")
-        X = jnp.asarray(X)
+        if not sparse_rows.is_sparse(X):
+            X = jnp.asarray(X)
         y = jnp.asarray(y)
         if X.ndim != 2 or y.shape[0] != X.shape[0]:
             raise ValueError(f"micro-batch must be (n, d) rows with (n,) "
@@ -211,12 +429,40 @@ class StreamingSVMService:
         with self._cv:
             if stream not in self._snapshots:
                 raise KeyError(f"unregistered stream {stream!r}")
-            d_model = self._snapshots[stream].model.sv.x.shape[1]
+            sv_x = self._snapshots[stream].model.sv.x
+            d_model = sv_x.shape[1]
             if X.shape[1] != d_model:
                 raise ValueError(
                     f"stream {stream!r} serves {d_model}-dim features but "
                     f"the batch has {X.shape[1]} — vectorize with the same "
                     "featurizer as training")
+            sp_model = sparse_rows.is_sparse(sv_x)
+            sp_batch = sparse_rows.is_sparse(X)
+            if sp_model != sp_batch:
+                raise ValueError(
+                    f"stream {stream!r} serves "
+                    f"{'sparse' if sp_model else 'dense'} rows but the "
+                    f"batch is {'sparse' if sp_batch else 'dense'} — "
+                    "submit the model's row format")
+            if sp_batch and X.nnz_cap != sv_x.nnz_cap:
+                raise ValueError(
+                    f"stream {stream!r} serves nnz_cap={sv_x.nnz_cap} "
+                    f"rows but the batch has nnz_cap={X.nnz_cap} — "
+                    "re-block with the model's cap")
+            q = self._queues[stream]
+            if (self.max_queue_per_stream is not None
+                    and len(q) >= self.max_queue_per_stream):
+                if self.shed_policy == "reject":
+                    raise RuntimeError(
+                        f"stream {stream!r} queue is at its cap "
+                        f"({self.max_queue_per_stream}) — admission "
+                        "control rejected the batch (shed_policy="
+                        "'reject')")
+                # drop_oldest: the stalest queued batch is the least
+                # valuable under drift — shed it, keep the fresh one
+                old = q.pop(0)
+                old.X = old.y = None
+                self.shed.append(old)
             self._uid += 1
             mb = MicroBatch(uid=self._uid, stream=stream, X=X, y=y,
                             submitted_s=time.time())
@@ -248,13 +494,19 @@ class StreamingSVMService:
 
     def _admit(self) -> Dict[str, Tuple[ModelSnapshot, List[MicroBatch]]]:
         """Pop ≤ max_batches_per_wave batches per stream, pairing each
-        admitted stream with the snapshot whose SVs the fold carries."""
+        admitted stream with the snapshot whose SVs the fold carries.
+        With ``max_streams_per_wave`` the wave is width-bounded: the
+        streams whose HEAD batch has waited longest go first, so a
+        narrow fold never starves a tenant."""
         now = time.time()
         admitted: Dict[str, Tuple[ModelSnapshot, List[MicroBatch]]] = {}
         with self._lock:
-            for stream, q in self._queues.items():
-                if not q:
-                    continue
+            ready = sorted((q[0].submitted_s, stream)
+                           for stream, q in self._queues.items() if q)
+            if self.max_streams_per_wave is not None:
+                ready = ready[:self.max_streams_per_wave]
+            for _, stream in ready:
+                q = self._queues[stream]
                 take, self._queues[stream] = (q[:self.max_batches_per_wave],
                                               q[self.max_batches_per_wave:])
                 for mb in take:
@@ -295,20 +547,31 @@ class StreamingSVMService:
             joined = {}
             for s in names:
                 snap, batches = admitted[s]
-                Xn = jnp.concatenate([mb.X for mb in batches], axis=0)
+                Xn = sparse_rows.rows_concat_all(
+                    [mb.X for mb in batches], axis=0)
                 yn = jnp.concatenate([mb.y.astype(Xn.dtype)
                                       for mb in batches], axis=0)
                 joined[s] = (snap, batches, Xn, yn)
 
-            if len(names) == 1:
-                # single tenant: the plain incremental round
-                s = names[0]
-                snap, batches, Xn, yn = joined[s]
-                model = update_mapreduce(snap.model, Xn, yn, self.L,
-                                         self.cfg, params=snap.params)
-                self._swap(s, model, snap.params)
-            else:
-                self._fold_batched(joined, names)
+            swapped: List[str] = []
+            any_batched = False
+            try:
+                for group in self._fold_groups(names, joined):
+                    if len(group) == 1:
+                        # single tenant: the plain incremental round
+                        s = group[0]
+                        snap, batches, Xn, yn = joined[s]
+                        model = update_mapreduce(snap.model, Xn, yn,
+                                                 self.L, self.cfg,
+                                                 params=snap.params)
+                        self._swap(s, model, snap.params)
+                        swapped.append(s)
+                    else:
+                        any_batched = True
+                        self._fold_batched(joined, group, swapped)
+            except BaseException:
+                self._recover_wave(joined, names, swapped)
+                raise
 
             now = time.time()
             n_batches = n_rows = 0
@@ -318,6 +581,8 @@ class StreamingSVMService:
                 n_rows += int(Xn.shape[0])
                 for mb in batches:
                     mb.completed_s = now
+                    if self.slo_s is not None and mb.latency_s > self.slo_s:
+                        self._slo_violations += 1
                     # Folded rows live on in SV_global (or were
                     # discarded as non-support); keeping every
                     # historical batch pinned in ``done`` would grow
@@ -327,15 +592,73 @@ class StreamingSVMService:
                     self.done.append(mb)
             st = StreamWaveStats(wave=wave_id, streams=len(names),
                                  batches=n_batches, rows=n_rows,
-                                 batched=len(names) > 1,
+                                 batched=any_batched,
                                  wall_s=now - t0)
             self.stats.append(st)
+            if (self.checkpoint_dir is not None
+                    and self.checkpoint_every_waves > 0):
+                self._waves_since_ckpt += 1
+                if self._waves_since_ckpt >= self.checkpoint_every_waves:
+                    self.checkpoint()
             return st
 
-    def _fold_batched(self, joined, names) -> None:
+    def _fold_groups(self, names, joined) -> List[List[str]]:
+        """Partition admitted streams into stackable fold groups.
+
+        The batched fold stacks per-job rows on the sweep axis, so jobs
+        must agree on (format, d, nnz_cap); a mixed wave — PR 6 sparse
+        tenants next to dense ones, or tenants on different hash spaces
+        — folds as one sweep pass per group instead of failing."""
+        groups: Dict[tuple, List[str]] = {}
+        for s in names:
+            x = joined[s][0].model.sv.x
+            sp = sparse_rows.is_sparse(x)
+            key = (sp, int(x.shape[1]), int(x.nnz_cap) if sp else -1)
+            groups.setdefault(key, []).append(s)
+        return [groups[k] for k in sorted(groups)]
+
+    def _bucket_width(self, n: int) -> int:
+        """Job-axis width the fold compiles at: the next power of two
+        (elastic waves of 3, 5-8, … tenants share log2 programs
+        instead of retracing per width)."""
+        if not self.pad_wave_to_bucket or n <= 1:
+            return n
+        width = 1
+        while width < n:
+            width *= 2
+        return width
+
+    def _recover_wave(self, joined, names, swapped) -> None:
+        """Mid-wave failure (worker loss, preemption, OOM): exactly-once
+        at the model level.
+
+        Streams whose snapshot already swapped have their batches
+        completed — the published model contains them. Every other
+        admitted batch goes BACK to the HEAD of its queue with its rows
+        still pinned (X/y drop only on completion), so the next wave —
+        on whatever mesh survived, or after a checkpoint restart —
+        re-admits and re-folds it exactly once."""
+        now = time.time()
+        done_set = set(swapped)
+        with self._lock:
+            for s in names:
+                _, batches, _, _ = joined[s]
+                if s in done_set:
+                    for mb in batches:
+                        mb.completed_s = now
+                        mb.X = mb.y = None
+                        self.done.append(mb)
+                else:
+                    self._queues[s][:0] = batches
+                    self._requeued += len(batches)
+
+    def _fold_batched(self, joined, names, swapped) -> None:
         """S admitted streams = S jobs on the sweep's config/batch axis:
         per-job (X, y, mask) + stacked per-stream SolverParams, one
-        jitted device pass (DESIGN.md §9)."""
+        jitted device pass (DESIGN.md §9). Rows route through the
+        format-generic sparse helpers, so blocked-CSR tenants batch the
+        same way dense ones do. Each stream appends to ``swapped`` the
+        moment its snapshot publishes (recovery bookkeeping)."""
         cap = self.cfg.sv_capacity
         d = joined[names[0]][0].model.sv.x.shape[1]
         n_max = max(int(joined[s][2].shape[0]) for s in names) + cap
@@ -346,23 +669,32 @@ class StreamingSVMService:
             sv = snap.model.sv
             n_new = int(Xn.shape[0])
             pad = n_max - n_new - cap
-            Xs.append(jnp.concatenate(
-                [Xn, sv.x, jnp.zeros((pad, d), Xn.dtype)], axis=0))
+            dt = yn.dtype
+            Xs.append(sparse_rows.pad_rows(
+                sparse_rows.rows_concat(Xn, sv.x, axis=0), pad))
             ys.append(jnp.concatenate(
-                [yn, sv.y, jnp.zeros((pad,), Xn.dtype)], axis=0))
+                [yn, sv.y.astype(dt), jnp.zeros((pad,), dt)], axis=0))
             ms.append(jnp.concatenate(
-                [jnp.ones((n_new,), Xn.dtype), sv.mask,
-                 jnp.zeros((pad,), Xn.dtype)], axis=0))
+                [jnp.ones((n_new,), dt), sv.mask.astype(dt),
+                 jnp.zeros((pad,), dt)], axis=0))
             ps.append(snap.params if snap.params is not None
                       else self.cfg.svm.params())
-        Xb = jnp.stack(Xs)                       # (S, n_max, d)
-        yb = jnp.stack(ys)                       # (S, n_max)
-        mb_ = jnp.stack(ms)                      # (S, n_max)
+        # Elastic job axis: pad to the bucket width with all-masked
+        # zero jobs (their results are discarded below) so a wave of
+        # any tenant count reuses the bucket's compiled program.
+        for _ in range(self._bucket_width(len(names)) - len(names)):
+            Xs.append(sparse_rows.rows_zeros_like(Xs[0]))
+            ys.append(jnp.zeros_like(ys[0]))
+            ms.append(jnp.zeros_like(ms[0]))
+            ps.append(ps[0])
+        Xb = sparse_rows.rows_stack(Xs)          # (S', n_max, d)
+        yb = jnp.stack(ys)                       # (S', n_max)
+        mb_ = jnp.stack(ms)                      # (S', n_max)
         params_b = stack_params(ps)
 
         res = fit_mapreduce_sweep(Xb, yb, self.L, self.cfg, params_b,
                                   mask=mb_)
-        for i, s in enumerate(names):
+        for i, s in enumerate(names):            # padding jobs dropped
             snap = joined[s][0]
             model = MapReduceSVM(
                 w=res.ws[i], b=res.bs[i],
@@ -370,6 +702,7 @@ class StreamingSVMService:
                 final=compat.tree_map(lambda a: a[i], res.final),
                 risk=res.risks[i], rounds=int(res.rounds[i]), history=())
             self._swap(s, model, snap.params)
+            swapped.append(s)
 
     def drain(self) -> int:
         """Run waves until every queue is empty; returns waves run."""
@@ -474,4 +807,7 @@ class StreamingSVMService:
                               if lats else 0.0),
             "mean_queue_s": (round(float(np.mean(queues)), 4)
                              if queues else 0.0),
+            "shed": len(self.shed),
+            "requeued": self._requeued,
+            "slo_violations": self._slo_violations,
         }

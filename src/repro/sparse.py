@@ -213,6 +213,49 @@ def rows_concat(a, b, axis: int = 0):
                       vals, a.d)
 
 
+def rows_concat_all(parts, axis: int = 0):
+    """Concatenate ≥1 row batches along ``axis`` (the streaming wave's
+    micro-batch join); every operand must share the format."""
+    if not parts:
+        raise ValueError("rows_concat_all: empty sequence")
+    out = parts[0]
+    for p in parts[1:]:
+        out = rows_concat(out, p, axis=axis)
+    return out
+
+
+def rows_stack(parts):
+    """Stack same-shape row batches on a NEW leading axis (the sweep's
+    job axis): ``jnp.stack`` for dense, leaf-wise stack for blocked-CSR."""
+    if not parts:
+        raise ValueError("rows_stack: empty sequence")
+    sp = is_sparse(parts[0])
+    if any(is_sparse(p) != sp for p in parts[1:]):
+        raise TypeError("rows_stack: mixed dense/sparse inputs")
+    if not sp:
+        return jnp.stack(parts)
+    first = parts[0]
+    for p in parts[1:]:
+        if p.d != first.d:
+            raise ValueError(f"feature-dim mismatch: {p.d} vs {first.d}")
+        if p.nnz_cap != first.nnz_cap:
+            raise ValueError(
+                f"nnz_cap mismatch: {p.nnz_cap} vs {first.nnz_cap}")
+    return SparseRows(
+        jnp.stack([p.indices for p in parts]),
+        jnp.stack([p.values.astype(first.values.dtype) for p in parts]),
+        first.d)
+
+
+def rows_zeros_like(x):
+    """An all-empty row batch shaped like ``x`` (index 0 / value 0 ≡ the
+    empty row) — mask-padding jobs on the sweep axis."""
+    if not is_sparse(x):
+        return jnp.zeros_like(x)
+    return SparseRows(jnp.zeros_like(x.indices),
+                      jnp.zeros_like(x.values), x.d)
+
+
 def pad_rows(x, pad: int):
     """Zero-pad ``pad`` rows at the end of the ROW axis (-2 of the
     dense view), for either format."""

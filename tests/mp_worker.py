@@ -1,7 +1,8 @@
 """One process of the multi-process equivalence harness (ISSUE 5).
 
 Launched N times by tests/test_multihost.py (argv: process_id
-num_processes port [rounds]). Each process:
+num_processes port [rounds] [ft ckpt_dir kill_round crash|resume]).
+Each process:
 
   1. joins the cluster via the runtime under test (init_cluster with
      explicit coordinator/num_processes/process_id and faked local CPU
@@ -16,11 +17,26 @@ num_processes port [rounds]). Each process:
 
 Prints MP_ROUND_OK as the last line on success; any assertion failure
 or hang is surfaced by the parent test.
+
+Fault-tolerance mode (ISSUE 7, ``ft`` argv tail): instead of the
+equivalence legs, run the dedup-ring SWEEP round loop with per-round
+durable snapshots (core.sweep.save_sweep_state on the coordinator). In
+the ``crash`` phase process 1 SIGKILLs itself after completing round
+``kill_round - 1``, stranding process 0 mid-collective in round
+``kill_round`` — the parent reaps both and checks the checkpoint
+pointer. In the ``resume`` phase (fresh coordinator port) both
+processes restore the round state from disk, finish the remaining
+rounds, and assert the result is BIT-FOR-BIT identical to an
+uninterrupted run from scratch; prints MP_FT_OK on success.
 """
 import sys
 
 PID, NPROC, PORT = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3]
 ROUNDS = int(sys.argv[4]) if len(sys.argv) > 4 else 3
+FT = len(sys.argv) > 5 and sys.argv[5] == "ft"
+if FT:
+    FT_DIR, KILL_ROUND, FT_PHASE = sys.argv[6], int(sys.argv[7]), sys.argv[8]
+    assert FT_PHASE in ("crash", "resume"), FT_PHASE
 NDEV = 8                                     # global devices, any NPROC
 
 from repro.launch.cluster import ClusterConfig, init_cluster  # noqa: E402
@@ -76,6 +92,66 @@ def reference(cfg):
         sv, risks = out.sv, out.risks
     return sv, risks
 
+
+# -- fault-tolerance leg (ISSUE 7): kill-a-worker, restart, converge --------
+if FT:
+    import os                                 # noqa: E402
+    import signal                             # noqa: E402
+    import time                               # noqa: E402
+    import dataclasses as dc                  # noqa: E402
+
+    from repro.ckpt.checkpoint import latest_path, latest_step  # noqa: E402
+    from repro.core.sweep import (build_sharded_sweep_round,    # noqa: E402
+                                  restore_sweep_state,
+                                  save_sweep_state, stack_params)
+
+    # Dedup-ring sweep: the round state on the wire is the shared-row
+    # DedupChunk — the layout the checkpointer must round-trip. f32
+    # wire keeps every collective bit-exact, so resumed ≡ scratch is an
+    # equality assertion, not a tolerance.
+    cfg = MRSVMConfig(sv_capacity=64, svm=SVMConfig(C=1.0, max_epochs=15),
+                      shuffle_impl="ring", shuffle_wire_dtype="float32")
+    S = 2
+    params = stack_params([dc.replace(cfg.svm, C=c).params()
+                           for c in (1.0, 0.5)])
+    fn = build_sharded_sweep_round(mesh, ("data",), cfg, per)
+    assert fn.expand_sv is not None           # proves DedupChunk state
+
+    def run(state, start, stop, checkpoint=False):
+        out = None
+        for t in range(start, stop):
+            state, risks, ws, bs = fn(X, y, mask, state, params)
+            jax.block_until_ready((state, risks, ws, bs))
+            if checkpoint and cluster.is_coordinator:
+                save_sweep_state(
+                    os.path.join(FT_DIR, f"sweep_{t}.npz"), state, step=t)
+            if checkpoint and PID == 1 and t == KILL_ROUND - 1:
+                time.sleep(0.5)   # let the peer finish round t and save
+                os.kill(os.getpid(), signal.SIGKILL)
+            out = (risks, ws, bs)
+        return state, out
+
+    if FT_PHASE == "crash":
+        run(fn.init_sv(S, D), 0, ROUNDS, checkpoint=True)
+        raise SystemExit("crash phase completed — process 1 never died")
+
+    # resume: pick up the interrupted run from the durable state…
+    t0 = latest_step(FT_DIR)
+    assert t0 == KILL_ROUND - 1, (t0, KILL_ROUND)
+    state = restore_sweep_state(latest_path(FT_DIR), cfg, S, D, NDEV, per)
+    state_r, out_r = run(state, t0 + 1, ROUNDS)
+    # …and land bit-for-bit where an uninterrupted run lands.
+    state_u, out_u = run(fn.init_sv(S, D), 0, ROUNDS)
+    leaves_r = jax.tree_util.tree_leaves((fn.expand_sv(state_r), *out_r))
+    leaves_u = jax.tree_util.tree_leaves((fn.expand_sv(state_u), *out_u))
+    assert len(leaves_r) == len(leaves_u)
+    for a, b in zip(leaves_r, leaves_u):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print(f"[p{PID}] ft: resumed sweep ≡ uninterrupted sweep "
+          f"(killed mid-round {KILL_ROUND}, {ROUNDS} rounds, "
+          f"{len(leaves_r)} leaves bit-for-bit)", flush=True)
+    print("MP_FT_OK", flush=True)
+    sys.exit(0)
 
 for shuffle in ("allgather", "ring"):
     # f32 wire keeps the ring bit-exact so the functional reference

@@ -1,0 +1,391 @@
+"""Fault-tolerant elastic serving (ISSUE 7): checkpointed SV state,
+restore-then-fold equivalence, mid-wave recovery, admission control,
+and the sparse fold path of the streaming service."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sparse
+from repro.core import (MRSVMConfig, SVMConfig, decision_values,
+                        fit_mapreduce, restore_sweep_state,
+                        save_sweep_state, update_mapreduce)
+from repro.serving import StreamingSVMService
+from repro.serving.svm_stream import _MANIFEST  # noqa: F401  (layout)
+
+
+def _sep_data(seed, n, d=16, w_key=9):
+    w = jax.random.normal(jax.random.PRNGKey(w_key), (d,))
+    X = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    return X, jnp.sign(X @ w)
+
+
+def _sparse_data(seed, n, d=16, cap=8, w_key=9):
+    X, y = _sep_data(seed, n, d, w_key)
+    # svm-test rows are dense; zero all but the top-cap magnitudes per
+    # row so from_dense at nnz_cap=cap is lossless
+    keep = jnp.argsort(-jnp.abs(X), axis=1)[:, :cap]
+    m = jnp.zeros_like(X).at[jnp.arange(n)[:, None], keep].set(1.0)
+    Xs = X * m
+    return sparse.from_dense(Xs, cap), jnp.sign(Xs @ jax.random.normal(
+        jax.random.PRNGKey(w_key), (d,)))
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return MRSVMConfig(sv_capacity=64, gamma=1e-4, max_rounds=3,
+                       svm=SVMConfig(C=1.0, max_epochs=15))
+
+
+@pytest.fixture(scope="module")
+def sparse_cfg():
+    return MRSVMConfig(sv_capacity=64, gamma=1e-4, max_rounds=3,
+                       svm=SVMConfig(C=1.0, max_epochs=15,
+                                     row_format="sparse_csr", nnz_cap=8))
+
+
+def _tree_equal(a, b):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb)
+    for la, lb in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# ModelSnapshot checkpoint round-trips
+# ---------------------------------------------------------------------------
+
+def test_snapshot_roundtrip_dense(cfg, tmp_path):
+    """A checkpointed dense stream restores bit-exact: every model
+    leaf, the SolverParams, the version, and the served scores."""
+    X0, y0 = _sep_data(0, 256)
+    params = SVMConfig(C=0.5, max_epochs=15).params()
+    model = fit_mapreduce(X0, y0, 4, cfg, params=params)
+    svc = StreamingSVMService(cfg, num_partitions=4,
+                              checkpoint_dir=str(tmp_path))
+    svc.register("t", model, params=params)
+
+    back = StreamingSVMService.restore(cfg, str(tmp_path))
+    assert back.streams() == ["t"]
+    snap, orig = back.snapshot("t"), svc.snapshot("t")
+    assert snap.version == orig.version == 0
+    assert snap.model.rounds == orig.model.rounds
+    _tree_equal(snap.model.sv, orig.model.sv)
+    _tree_equal(snap.model.final, orig.model.final)
+    _tree_equal(snap.params, orig.params)
+    Xt, _ = _sep_data(50, 200)
+    np.testing.assert_array_equal(
+        np.asarray(back.decision_values("t", Xt)),
+        np.asarray(svc.decision_values("t", Xt)))
+
+
+def test_snapshot_roundtrip_sparse_and_bf16(sparse_cfg, tmp_path):
+    """Blocked-CSR SV buffers and bf16 feature rows (the wire dtype)
+    both survive the flat-npz round trip exactly."""
+    Xs, ys = _sparse_data(1, 256)
+    model = fit_mapreduce(Xs, ys, 4, sparse_cfg)
+    assert sparse.is_sparse(model.sv.x)
+    # a bf16 second stream exercises the u16-view leaf path
+    bf_model = model._replace(
+        sv=model.sv._replace(x=model.sv.x.astype(jnp.bfloat16)))
+    svc = StreamingSVMService(sparse_cfg, num_partitions=4,
+                              checkpoint_dir=str(tmp_path))
+    svc.register("sp", model)
+    svc.register("bf", bf_model)
+
+    back = StreamingSVMService.restore(sparse_cfg, str(tmp_path))
+    for name in ("sp", "bf"):
+        got, want = back.snapshot(name).model, svc.snapshot(name).model
+        assert sparse.is_sparse(got.sv.x)
+        assert got.sv.x.nnz_cap == want.sv.x.nnz_cap
+        assert got.sv.x.values.dtype == want.sv.x.values.dtype
+        _tree_equal(got.sv, want.sv)
+        _tree_equal(got.final, want.final)
+    Xt, _ = _sparse_data(51, 128)
+    np.testing.assert_array_equal(
+        np.asarray(back.decision_values("sp", Xt)),
+        np.asarray(svc.decision_values("sp", Xt)))
+
+
+def test_restore_then_fold_matches_never_crashed(cfg, tmp_path):
+    """The acceptance bar: checkpoint after wave 1, 'crash', restore,
+    fold wave 2 — the result is bit-for-bit the uninterrupted run."""
+    models = {s: fit_mapreduce(*_sep_data(10 + i, 192, w_key=3 + i), 4, cfg)
+              for i, s in enumerate("ab")}
+    wave1 = {s: _sep_data(20 + i, 128, w_key=3 + i)
+             for i, s in enumerate("ab")}
+    wave2 = {s: _sep_data(30 + i, 128, w_key=3 + i)
+             for i, s in enumerate("ab")}
+
+    def feed(svc, batches):
+        for s, (X, y) in batches.items():
+            svc.submit(s, X, y)
+        st = svc.run_wave()
+        assert st is not None and st.streams == 2
+
+    control = StreamingSVMService(cfg, num_partitions=4)
+    crashed = StreamingSVMService(cfg, num_partitions=4,
+                                  checkpoint_dir=str(tmp_path))
+    for s in "ab":
+        control.register(s, models[s])
+        crashed.register(s, models[s])
+    feed(control, wave1)
+    feed(crashed, wave1)          # checkpoints after the wave
+
+    resumed = StreamingSVMService.restore(cfg, str(tmp_path))
+    assert resumed.snapshot("a").version == 1
+    feed(control, wave2)
+    feed(resumed, wave2)
+
+    Xt, _ = _sep_data(60, 256)
+    for s in "ab":
+        assert resumed.snapshot(s).version == control.snapshot(s).version
+        _tree_equal(resumed.snapshot(s).model.sv,
+                    control.snapshot(s).model.sv)
+        np.testing.assert_array_equal(
+            np.asarray(resumed.decision_values(s, Xt)),
+            np.asarray(control.decision_values(s, Xt)))
+
+
+def test_restore_requires_manifest_and_matching_capacity(cfg, tmp_path):
+    with pytest.raises(FileNotFoundError, match="manifest"):
+        StreamingSVMService.restore(cfg, str(tmp_path / "nope"))
+    svc = StreamingSVMService(cfg, num_partitions=4,
+                              checkpoint_dir=str(tmp_path))
+    svc.register("t", fit_mapreduce(*_sep_data(0, 128), 4, cfg))
+    import dataclasses as dc
+    other = dc.replace(cfg, sv_capacity=32)
+    with pytest.raises(ValueError, match="sv_capacity"):
+        StreamingSVMService.restore(other, str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# sweep round-state (dedup ring) ser/de
+# ---------------------------------------------------------------------------
+
+def test_sweep_state_roundtrip_dedup_bf16_wire(tmp_path):
+    """The dedup ring's shared-row DedupChunk state — bf16 wire rows,
+    int32 ids/ptr, f32 sidebands — round-trips exactly; shape or wire
+    dtype drift at restore raises instead of resuming a wrong sweep."""
+    ring = MRSVMConfig(sv_capacity=32, svm=SVMConfig(),
+                       shuffle_impl="ring", shuffle_wire_dtype="bfloat16")
+    from repro.core.sweep import init_sharded_sweep_sv, uses_dedup_state
+    assert uses_dedup_state(ring, False)
+    state = init_sharded_sweep_sv(ring, 3, 16, 4, 8)
+    # fill with distinguishable values (leaf-wise ramps in each dtype)
+    state = jax.tree_util.tree_map(
+        lambda a: (jnp.arange(a.size).reshape(a.shape) % 7).astype(a.dtype),
+        state)
+    path = str(tmp_path / "sweep_0.npz")
+    save_sweep_state(path, state, step=0)
+    back = restore_sweep_state(path, ring, 3, 16, 4, 8)
+    _tree_equal(back, state)
+
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_sweep_state(path, ring, 2, 16, 4, 8)     # width drift
+    import dataclasses as dc
+    f32_ring = dc.replace(ring, shuffle_wire_dtype="float32")
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        restore_sweep_state(path, f32_ring, 3, 16, 4, 8)  # wire drift
+
+
+# ---------------------------------------------------------------------------
+# mid-wave recovery: exactly-once at the model level
+# ---------------------------------------------------------------------------
+
+def test_mid_wave_failure_requeues_all_unswapped(cfg, monkeypatch):
+    """A fold that dies before ANY swap puts every admitted batch back
+    at the head of its queue; the retry folds them exactly once."""
+    svc = StreamingSVMService(cfg, num_partitions=4)
+    for i, s in enumerate("ab"):
+        svc.register(s, fit_mapreduce(*_sep_data(10 + i, 192), 4, cfg))
+        svc.submit(s, *_sep_data(20 + i, 96))
+    assert svc.pending() == 2
+
+    import repro.serving.svm_stream as mod
+    def boom(*a, **k):
+        raise RuntimeError("worker lost mid-wave")
+    monkeypatch.setattr(mod, "fit_mapreduce_sweep", boom)
+    with pytest.raises(RuntimeError, match="worker lost"):
+        svc.run_wave()
+    assert svc.pending() == 2                    # requeued, rows pinned
+    for s in "ab":
+        assert svc.snapshot(s).version == 0
+        assert svc._queues[s][0].X is not None
+    monkeypatch.undo()
+
+    st = svc.run_wave()                          # surviving-mesh retry
+    assert st.streams == 2 and st.batches == 2
+    assert svc.pending() == 0 and len(svc.done) == 2
+    assert all(svc.snapshot(s).version == 1 for s in "ab")
+    assert svc.throughput_report()["requeued"] == 2
+
+
+def test_mid_wave_failure_completes_swapped_streams(cfg, monkeypatch):
+    """Partial wave: streams that already swapped are done (their fold
+    is published); only the un-swapped stream's batches requeue."""
+    import dataclasses as dc
+    svc = StreamingSVMService(cfg, num_partitions=4)
+    # different feature dims → two singleton fold groups, d=16 first
+    svc.register("lo", fit_mapreduce(*_sep_data(1, 192, d=16), 4, cfg))
+    svc.register("hi", fit_mapreduce(*_sep_data(2, 192, d=24), 4, cfg))
+    svc.submit("lo", *_sep_data(21, 96, d=16))
+    svc.submit("hi", *_sep_data(22, 96, d=24))
+
+    import repro.serving.svm_stream as mod
+    real = mod.update_mapreduce
+    def die_on_hi(model, *a, **k):
+        if model.sv.x.shape[1] == 24:
+            raise RuntimeError("worker lost mid-wave")
+        return real(model, *a, **k)
+    monkeypatch.setattr(mod, "update_mapreduce", die_on_hi)
+    with pytest.raises(RuntimeError, match="worker lost"):
+        svc.run_wave()
+    assert svc.snapshot("lo").version == 1       # published before loss
+    assert svc.snapshot("hi").version == 0
+    assert svc.pending() == 1 and len(svc.done) == 1
+    monkeypatch.undo()
+    st = svc.run_wave()
+    assert st.streams == 1 and svc.snapshot("hi").version == 1
+
+
+def test_submit_after_scheduler_death_raises():
+    """Doomed work is refused: once the background scheduler has died,
+    submit surfaces the error instead of growing queues forever."""
+    bad_cfg = MRSVMConfig(sv_capacity=36, max_rounds=2,
+                          svm=SVMConfig(C=1.0, max_epochs=5))
+    X0, y0 = _sep_data(9, 128)
+    svc = StreamingSVMService(bad_cfg, num_partitions=8)
+    svc.register("t", fit_mapreduce(X0, y0, 4, bad_cfg))
+    svc.start(idle_poll_s=0.005)
+    svc.submit("t", X0, y0)
+    with pytest.raises(RuntimeError, match="scheduler died"):
+        svc.wait_idle(timeout_s=60)
+    with pytest.raises(RuntimeError, match="scheduler died"):
+        svc.submit("t", X0, y0)
+
+
+# ---------------------------------------------------------------------------
+# sparse tenants stream end to end (the PR 6 format bugfix)
+# ---------------------------------------------------------------------------
+
+def test_sparse_tenant_streams_end_to_end(sparse_cfg):
+    """A blocked-CSR tenant submits, folds (single and batched wave),
+    and serves — matching update_mapreduce exactly on the single-stream
+    path and at solver tolerance on the batched one."""
+    Xs0, ys0 = _sparse_data(3, 256)
+    m0 = fit_mapreduce(Xs0, ys0, 4, sparse_cfg)
+    svc = StreamingSVMService(sparse_cfg, num_partitions=4)
+    svc.register("sp", m0)
+
+    Xn, yn = _sparse_data(13, 96)
+    svc.submit("sp", Xn, yn)
+    st = svc.run_wave()
+    assert st is not None and not st.batched
+    ref = update_mapreduce(m0, Xn, yn, 4, sparse_cfg)
+    Xt, _ = _sparse_data(53, 128)
+    np.testing.assert_array_equal(
+        np.asarray(svc.decision_values("sp", Xt)),
+        np.asarray(decision_values(ref, Xt, sparse_cfg)))
+    assert sparse.is_sparse(svc.snapshot("sp").model.sv.x)
+
+    # second sparse tenant → the wave rides the batched sweep fold
+    Xs1, ys1 = _sparse_data(4, 256, w_key=5)
+    m1 = fit_mapreduce(Xs1, ys1, 4, sparse_cfg)
+    svc.register("sp2", m1)
+    new = {"sp": _sparse_data(14, 96), "sp2": _sparse_data(15, 96, w_key=5)}
+    base = {s: svc.snapshot(s).model for s in new}
+    for s, (X, y) in new.items():
+        svc.submit(s, X, y)
+    st = svc.run_wave()
+    assert st.batched and st.streams == 2
+    for s, (X, y) in new.items():
+        ref = update_mapreduce(base[s], X, y, 4, sparse_cfg)
+        np.testing.assert_allclose(
+            np.asarray(svc.decision_values(s, Xt)),
+            np.asarray(decision_values(ref, Xt, sparse_cfg)),
+            rtol=1e-4, atol=1e-4)
+
+
+def test_mixed_format_wave_folds_by_group(cfg, sparse_cfg):
+    """Sparse and dense tenants admitted in ONE wave fold group-wise
+    instead of failing on the stack."""
+    svc = StreamingSVMService(sparse_cfg, num_partitions=4)
+    Xs, ys = _sparse_data(6, 192)
+    Xd, yd = _sep_data(7, 192)
+    svc.register("sp", fit_mapreduce(Xs, ys, 4, sparse_cfg))
+    svc.register("de", fit_mapreduce(Xd, yd, 4, cfg))
+    svc.submit("sp", *_sparse_data(16, 96))
+    svc.submit("de", *_sep_data(17, 96))
+    st = svc.run_wave()
+    assert st is not None and st.streams == 2
+    assert svc.snapshot("sp").version == 1
+    assert svc.snapshot("de").version == 1
+    with pytest.raises(ValueError, match="row format"):
+        svc.submit("de", *_sparse_data(18, 32))
+
+
+# ---------------------------------------------------------------------------
+# elasticity + admission control
+# ---------------------------------------------------------------------------
+
+def test_bucket_padding_keeps_results_correct(cfg):
+    """An odd tenant count folds at the next power-of-two job width;
+    padded mask-zero jobs must not perturb the real tenants."""
+    svc = StreamingSVMService(cfg, num_partitions=4)
+    assert [svc._bucket_width(n) for n in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+    models, new = {}, {}
+    for i, s in enumerate("abc"):
+        models[s] = fit_mapreduce(*_sep_data(10 + i, 192, w_key=3 + i),
+                                  4, cfg)
+        svc.register(s, models[s])
+        new[s] = _sep_data(20 + i, 96, w_key=3 + i)
+        svc.submit(s, *new[s])
+    st = svc.run_wave()
+    assert st.batched and st.streams == 3
+    Xt, _ = _sep_data(60, 256)
+    for s in "abc":
+        ref = update_mapreduce(models[s], *new[s], 4, cfg)
+        np.testing.assert_allclose(
+            np.asarray(svc.decision_values(s, Xt)),
+            np.asarray(decision_values(ref, Xt, cfg)),
+            rtol=1e-4, atol=1e-4)
+
+
+def test_queue_cap_sheds_oldest_or_rejects(cfg):
+    X, y = _sep_data(0, 256)
+    m = fit_mapreduce(X, y, 4, cfg)
+    svc = StreamingSVMService(cfg, num_partitions=4,
+                              max_queue_per_stream=2)
+    svc.register("t", m)
+    uids = [svc.submit("t", *_sep_data(i + 1, 32)) for i in range(3)]
+    assert svc.pending() == 2                    # oldest shed, not grown
+    assert [mb.uid for mb in svc._queues["t"]] == uids[1:]
+    assert svc.throughput_report()["shed"] == 1
+
+    rej = StreamingSVMService(cfg, num_partitions=4,
+                              max_queue_per_stream=1,
+                              shed_policy="reject")
+    rej.register("t", m)
+    rej.submit("t", *_sep_data(4, 32))
+    with pytest.raises(RuntimeError, match="admission control"):
+        rej.submit("t", *_sep_data(5, 32))
+    with pytest.raises(ValueError, match="shed_policy"):
+        StreamingSVMService(cfg, shed_policy="drop_newest")
+
+
+def test_wave_width_bound_admits_oldest_first(cfg):
+    svc = StreamingSVMService(cfg, num_partitions=4,
+                              max_streams_per_wave=2, slo_s=0.0)
+    for i, s in enumerate("abc"):
+        svc.register(s, fit_mapreduce(*_sep_data(10 + i, 192), 4, cfg))
+        svc.submit(s, *_sep_data(20 + i, 64))
+    st = svc.run_wave()
+    assert st.streams == 2
+    assert svc.snapshot("a").version == 1 and svc.snapshot("b").version == 1
+    assert svc.snapshot("c").version == 0        # width-bounded out
+    st2 = svc.run_wave()
+    assert st2.streams == 1 and svc.snapshot("c").version == 1
+    # slo_s=0 counts every completion as a violation → the counter works
+    assert svc.throughput_report()["slo_violations"] == 3

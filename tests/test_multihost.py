@@ -8,9 +8,11 @@ match the single-process functional reference, with
 (allgather and ring). ``tests/mp_worker.py`` is the per-process body;
 this file is the launcher (``make test-dist-mp`` runs just this).
 """
+import signal
 import socket
 import subprocess
 import sys
+import time
 from pathlib import Path
 
 import pytest
@@ -58,3 +60,69 @@ def test_two_process_round_matches_functional():
     for pid, (p, out) in enumerate(zip(procs, outs)):
         assert p.returncode == 0, f"process {pid} failed:\n{out}"
         assert "MP_ROUND_OK" in out, f"process {pid}:\n{out}"
+
+
+def _launch_ft(port: int, ckpt_dir: str, phase: str,
+               rounds: int = 4, kill_round: int = 2):
+    env = subprocess_env(PYTHONPATH=str(REPO / "src"))
+    return [
+        subprocess.Popen(
+            [sys.executable, str(REPO / "tests" / "mp_worker.py"),
+             str(pid), "2", str(port), str(rounds),
+             "ft", ckpt_dir, str(kill_round), phase],
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True, env=env)
+        for pid in range(2)
+    ]
+
+
+@pytest.mark.slow
+def test_kill_worker_midwave_restart_converges(tmp_path):
+    """The kill-a-worker leg (ISSUE 7): SIGKILL one of the 2
+    jax.distributed processes mid-wave, restart both from the durable
+    round-state checkpoint, and prove the resumed sweep converges to
+    the SAME model — bit-for-bit against an uninterrupted run (risks,
+    per-config SV buffers, ws, bs)."""
+    kill_round = 2
+    ckpt_dir = str(tmp_path / "ft_ckpt")
+    (tmp_path / "ft_ckpt").mkdir()
+
+    # Phase A — crash: process 1 SIGKILLs itself after completing round
+    # kill_round-1; process 0 is stranded mid-collective in round
+    # kill_round. The coordinator's last durable snapshot must be round
+    # kill_round-1 (a round is saved only after it fully completes).
+    procs = _launch_ft(_free_port(), ckpt_dir, "crash",
+                       kill_round=kill_round)
+    try:
+        assert procs[1].wait(timeout=600) == -signal.SIGKILL
+        sys.path.insert(0, str(REPO / "src"))
+        from repro.ckpt.checkpoint import latest_step
+        deadline = time.time() + 60       # process 0 may still be saving
+        while (latest_step(ckpt_dir) != kill_round - 1
+               and time.time() < deadline):
+            time.sleep(0.5)
+        assert latest_step(ckpt_dir) == kill_round - 1
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+        outs = [p.communicate()[0] for p in procs]
+    assert procs[1].returncode == -signal.SIGKILL, outs[1]
+
+    # Phase B — restart on a FRESH coordinator port: both processes
+    # restore the round state and must land exactly where an
+    # uninterrupted run lands.
+    procs = _launch_ft(_free_port(), ckpt_dir, "resume",
+                       kill_round=kill_round)
+    outs = []
+    try:
+        for p in procs:
+            out, _ = p.communicate(timeout=900)
+            outs.append(out)
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    for pid, (p, out) in enumerate(zip(procs, outs)):
+        assert p.returncode == 0, f"restarted process {pid} failed:\n{out}"
+        assert "MP_FT_OK" in out, f"restarted process {pid}:\n{out}"

@@ -68,6 +68,42 @@ def test_ckpt_shape_mismatch_raises():
             restore(path, {"a": jnp.ones((3, 3))})
 
 
+def test_ckpt_dtype_mismatch_raises():
+    """ISSUE 7 bugfix: restore validates dtypes instead of silently
+    casting (the bf16 u16-view round trip is the one transparent case)."""
+    tree = {"a": jnp.ones((2, 2), jnp.float32),
+            "b": jnp.ones((3,), jnp.bfloat16)}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "s.npz")
+        save(path, tree)
+        out = restore(path, tree)                       # exact: passes
+        assert out["b"].dtype == jnp.bfloat16
+        with pytest.raises(ValueError, match="dtype mismatch"):
+            restore(path, {"a": jnp.ones((2, 2), jnp.int32),
+                           "b": tree["b"]})
+        with pytest.raises(ValueError, match="dtype mismatch"):
+            restore(path, {"a": tree["a"],              # bf16 → f32 drift
+                           "b": jnp.ones((3,), jnp.float32)})
+
+
+def test_ckpt_meta_written_atomically():
+    """ISSUE 7 bugfix: the meta pointer goes through tmp + os.replace
+    like the npz payload — no in-place write, no stray tmp left."""
+    from repro.ckpt.checkpoint import atomic_write_json, latest_path
+    with tempfile.TemporaryDirectory() as d:
+        save(os.path.join(d, "s0.npz"), {"a": jnp.ones((2,))}, step=0)
+        save(os.path.join(d, "s1.npz"), {"a": jnp.ones((2,))}, step=1)
+        assert latest_step(d) == 1
+        assert latest_path(d) == os.path.join(d, "s1.npz")
+        assert not os.path.exists(os.path.join(d, "ckpt_meta.json.tmp"))
+        # a leftover torn tmp (crash mid-write) never shadows the meta
+        with open(os.path.join(d, "ckpt_meta.json.tmp"), "w") as f:
+            f.write('{"latest_step"')
+        atomic_write_json(os.path.join(d, "ckpt_meta.json"),
+                          {"latest_step": 2, "file": "s1.npz"})
+        assert latest_step(d) == 2
+
+
 def test_data_batches_deterministic_and_resumable():
     cfg = DataConfig(batch_size=4, seq_len=32, seed=9)
     mcfg = smoke_variant(get_config("tinyllama-1.1b"))
