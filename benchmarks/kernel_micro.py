@@ -7,7 +7,6 @@ from typing import List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import decode_attention, gram_matrix, risk_eval
 from repro.kernels import ref

@@ -1,0 +1,56 @@
+"""repro.analysis — jaxpr/HLO invariant linter (DESIGN.md §14).
+
+Static analysis over traced jaxprs and compiled post-SPMD HLO that
+turns the repo's prose invariants into machine-checkable rules, each
+with an explicit allowlist mechanism:
+
+1. collective-schedule (:mod:`.schedule`) — every compiled program's
+   ordered collective sequence is structurally valid (start/done
+   pairing, deadlock-free permute hops, disjoint replica groups) and
+   agrees across participants; committed dry-run artifacts stay in
+   sync with fresh compiles.
+2. retrace (:mod:`.retrace`) — steady-state hot regions (streaming
+   waves, sweep rounds past the first) must hit the jit cache.
+3. host-sync (:mod:`.hostsync`) — hot loops synchronize with the
+   device only at their named readback points.
+4. dense-materialization (:mod:`.denseleak`) — sparse programs never
+   inflate an O(n·d) dense row block outside the chunked densify.
+5. dtype-drift (:mod:`.dtype_drift`) — solver-state leaves (y/α/w/b)
+   never pass a reduced-precision op outside the bf16 wire pack.
+
+Entry points: ``make lint-jax`` → :mod:`repro.analysis.lint` (the full
+matrix over the real step builders), ``tests/test_analysis.py`` (the
+pytest tier), and the per-module check functions below for use inside
+drivers (``core.sweep``, ``serving.svm_stream``).
+"""
+from repro.analysis.base import Allowed, LintViolation, RuleReport
+from repro.analysis.denseleak import (DEFAULT_MAX_DENSE_ROWS,
+                                      check_memory_ceiling,
+                                      check_no_dense_materialization)
+from repro.analysis.dtype_drift import check_no_dtype_drift
+from repro.analysis.hlo import (CollectiveOp, dtype_nbits,
+                                parse_collective_ops, tensor_nbytes,
+                                tensor_shapes, while_body_computations)
+from repro.analysis.hostsync import (allowed_host_sync,
+                                     check_no_host_callbacks,
+                                     host_guards_enforced,
+                                     no_implicit_host_sync)
+from repro.analysis.retrace import (RetraceError, RetraceStats, no_retrace,
+                                    watch_compiles)
+from repro.analysis.schedule import (assert_schedules_agree, check_schedule,
+                                     collective_schedule,
+                                     compare_collective_counts)
+
+__all__ = [
+    "Allowed", "LintViolation", "RuleReport",
+    "CollectiveOp", "dtype_nbits", "parse_collective_ops",
+    "tensor_nbytes", "tensor_shapes", "while_body_computations",
+    "collective_schedule", "check_schedule", "assert_schedules_agree",
+    "compare_collective_counts",
+    "RetraceError", "RetraceStats", "no_retrace", "watch_compiles",
+    "allowed_host_sync", "check_no_host_callbacks",
+    "host_guards_enforced", "no_implicit_host_sync",
+    "DEFAULT_MAX_DENSE_ROWS", "check_memory_ceiling",
+    "check_no_dense_materialization",
+    "check_no_dtype_drift",
+]

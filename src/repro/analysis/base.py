@@ -1,0 +1,50 @@
+"""Shared vocabulary of the invariant linter (DESIGN.md §14).
+
+Every rule reports through :class:`LintViolation` — one exception type
+carrying (rule, program, op, detail) so `make lint-jax` and the pytest
+tier print uniform, greppable messages naming the offending op AND the
+program it appeared in. Rules never print-and-continue: a violation is
+an exception, an allowlisted occurrence is silence plus an entry in the
+returned report, so CI cannot drift into warning blindness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+class LintViolation(AssertionError):
+    """An invariant rule fired. ``rule``/``program``/``op`` are
+    structured so tests can assert on WHAT failed, not on message
+    prose."""
+
+    def __init__(self, rule: str, program: str, op: str, detail: str):
+        self.rule = rule
+        self.program = program
+        self.op = op
+        self.detail = detail
+        super().__init__(
+            f"[{rule}] program={program!r} op={op!r}: {detail}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Allowed:
+    """One allowlisted occurrence: recorded, never raised. Rules return
+    these so a reviewer can audit exactly what the allowlist absorbed
+    (an allowlist that silently swallows everything is the bug the
+    linter exists to prevent)."""
+    rule: str
+    program: str
+    op: str
+    reason: str
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleReport:
+    """Outcome of one rule over one program (returned on success; on
+    failure the rule raises :class:`LintViolation` instead)."""
+    rule: str
+    program: str
+    checked: int                       # ops/eqns the rule examined
+    allowed: Tuple[Allowed, ...] = ()
+    note: Optional[str] = None         # e.g. 'skipped: no memory_analysis'

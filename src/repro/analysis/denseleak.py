@@ -1,0 +1,93 @@
+"""Rule 4 — dense-materialization lint (DESIGN.md §14).
+
+The sparse path's whole value proposition (PR 6) is that nothing ever
+materializes an O(n·d) dense row block at vocabulary-scale ``d`` — the
+one sanctioned densify is ``sparse.cross_dots``'s chunked scatter
+(``chunk`` rows of scratch at a time, default 64) on the serve/Gram
+path. A future edit that densifies a whole shard (`rows_to_dense`
+applied to the batch, a stray ``@`` against a dense identity) silently
+re-inflates memory by 100×+; this rule makes that a lint failure.
+
+Two layers:
+
+* :func:`check_no_dense_materialization` — jaxpr scan: any intermediate
+  whose trailing dim is the feature dim ``d`` and whose leading dims
+  multiply past ``max_dense_rows`` is a violation. The ceiling IS the
+  allowlist: the chunked densify stays under it by construction.
+* :func:`check_memory_ceiling` — the compiled program's
+  ``memory_analysis().temp_size_in_bytes`` must stay under a caller-
+  derived ceiling (e.g. a fraction of the dense block's bytes); skipped
+  with a note where the backend exposes no memory analysis.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.analysis.base import LintViolation, RuleReport
+from repro.analysis.hostsync import _iter_eqns
+
+RULE = "dense-materialization"
+
+# the sanctioned scratch width of sparse.cross_dots plus headroom for a
+# vmapped config axis on top of it
+DEFAULT_MAX_DENSE_ROWS = 256
+
+
+def check_no_dense_materialization(
+        fn, args, *, d: int,
+        max_dense_rows: int = DEFAULT_MAX_DENSE_ROWS,
+        program: str = "<program>") -> RuleReport:
+    """Trace ``fn(*args)`` and reject intermediates of shape
+    ``(..., d)`` with more than ``max_dense_rows`` leading rows. Run
+    this on ``row_format='sparse'`` programs only — the dense path
+    materializes (n, d) blocks by design."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    checked = 0
+    for eqn in _iter_eqns(jaxpr):
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            shape = getattr(aval, "shape", None)
+            if not shape or len(shape) < 2 or shape[-1] != d:
+                continue
+            checked += 1
+            rows = 1
+            for s in shape[:-1]:
+                rows *= int(s)
+            if rows > max_dense_rows:
+                raise LintViolation(
+                    RULE, program, eqn.primitive.name,
+                    f"intermediate of shape {tuple(shape)} materializes "
+                    f"{rows} dense rows at feature dim d={d} "
+                    f"(ceiling: {max_dense_rows} rows — the chunked "
+                    "cross_dots densify). A sparse program must never "
+                    "inflate a full row block.")
+    return RuleReport(rule=RULE, program=program, checked=checked)
+
+
+def check_memory_ceiling(compiled, *, limit_bytes: int,
+                         program: str = "<program>") -> RuleReport:
+    """Compiled-program temp memory must stay under ``limit_bytes``.
+    Callers derive the limit from the dense block the program must NOT
+    allocate (e.g. ``n_rows * d * itemsize // 2``)."""
+    mem = _memory_analysis(compiled)
+    temp = getattr(mem, "temp_size_in_bytes", None) if mem else None
+    if temp is None:
+        return RuleReport(rule=RULE, program=program, checked=0,
+                          note="skipped: backend exposes no "
+                               "memory_analysis")
+    if int(temp) > limit_bytes:
+        raise LintViolation(
+            RULE, program, "memory_analysis.temp_size_in_bytes",
+            f"compiled temp memory {int(temp)} B exceeds the sparse "
+            f"ceiling {limit_bytes} B — an O(n·d) dense intermediate "
+            "is being materialized")
+    return RuleReport(rule=RULE, program=program, checked=1)
+
+
+def _memory_analysis(compiled) -> Optional[object]:
+    try:
+        return compiled.memory_analysis()
+    except Exception:
+        return None

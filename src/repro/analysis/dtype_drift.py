@@ -1,0 +1,248 @@
+"""Rule 5 — dtype-drift lint (DESIGN.md §14).
+
+Solver state — the labels ``y``, duals ``α``, hypothesis ``(w, b)`` —
+is f32 by contract (``core.svm.fit_binary_linear`` promotes), and the
+ONE sanctioned reduced-precision passage is the ring transport's bf16
+wire pack, which immediately ``bitcast_convert_type``s the bf16 pairs
+into f32 lanes (``core.mapreduce_svm._pack_lanes``). Anything else —
+a stray ``.astype(cfg.dtype)`` on ``α``, a bf16 matmul pulling ``y``
+down — is silent precision loss eq. 7/eq. 8 convergence then inherits.
+
+Mechanism: forward taint propagation over the traced jaxpr. Caller
+marks the solver-state input leaves; taint flows through every eqn
+(control-flow sub-jaxprs included, ``while``/``scan`` carries to a
+fixpoint) EXCEPT comparison-family ops, whose boolean outputs carry no
+precision. A ``convert_element_type`` of a tainted value from a ≥32-bit
+float to a narrower float is a violation — unless its result reaches a
+``bitcast_convert_type`` through layout-only ops (the wire-pack
+allowlist), or the caller allowlists the convert's source line.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.base import Allowed, LintViolation, RuleReport
+
+RULE = "dtype-drift"
+
+# ops that only rearrange bits between a downcast and the wire bitcast
+_LAYOUT_PRIMS = frozenset({
+    "reshape", "broadcast_in_dim", "squeeze", "expand_dims", "transpose",
+    "slice", "dynamic_slice", "pad", "concatenate", "rev", "copy",
+})
+# outputs are boolean/ordinal structure, not solver precision
+_STOP_PRIMS = frozenset({
+    "eq", "ne", "lt", "gt", "ge", "le", "is_finite", "sign",
+    "argmax", "argmin", "reduce_and", "reduce_or", "iota",
+})
+
+
+def _is_literal(v) -> bool:
+    # jaxpr Literals carry .val; Vars don't. Structural test so the
+    # 0.4.x→0.8.x jax.core/jax.extend.core move can't break us.
+    return hasattr(v, "val")
+
+
+def _is_float(aval) -> bool:
+    dt = getattr(aval, "dtype", None)
+    return dt is not None and jnp.issubdtype(dt, jnp.floating)
+
+
+def _itemsize(aval) -> int:
+    return jnp.dtype(aval.dtype).itemsize
+
+
+def _source_line(eqn) -> str:
+    try:
+        from jax._src import source_info_util
+        return source_info_util.summarize(eqn.source_info)
+    except Exception:
+        return "<unknown source>"
+
+
+def _sub_positional(eqn):
+    """(sub_jaxpr, …) when the eqn is a plain call-like wrapper whose
+    invars/outvars map positionally (pjit, shard_map, remat, custom_*).
+    ``while``/``scan``/``cond`` are handled structurally by the
+    propagator and excluded here."""
+    if eqn.primitive.name in ("while", "scan", "cond"):
+        return None
+    subs = []
+    for v in eqn.params.values():
+        for k in (v if isinstance(v, (tuple, list)) else (v,)):
+            inner = getattr(k, "jaxpr", k)
+            if hasattr(inner, "eqns"):
+                subs.append(inner)
+    if len(subs) == 1 and len(subs[0].invars) == len(eqn.invars):
+        return subs[0]
+    return None
+
+
+def _layout_flow(jaxpr, start_vars) -> tuple:
+    """Wire-pack allowlist reachability: does any var in ``start_vars``
+    reach a ``bitcast_convert_type`` through layout-only ops? One
+    forward pass (eqns are topologically ordered), descending into
+    call-like sub-jaxprs — ``jnp.pad`` et al. trace as ``pjit[name=_pad]``
+    wrappers, so the pack pipeline crosses call boundaries. Returns
+    ``(hit_bitcast, reached_output_positions)``."""
+    reached = set(start_vars)
+    hit = False
+    for eqn in jaxpr.eqns:
+        in_hits = [i for i, v in enumerate(eqn.invars)
+                   if not _is_literal(v) and v in reached]
+        if not in_hits:
+            continue
+        name = eqn.primitive.name
+        if name == "bitcast_convert_type":
+            hit = True
+            continue
+        sub = _sub_positional(eqn)
+        if sub is not None:
+            sub_hit, sub_out = _layout_flow(
+                sub, {sub.invars[i] for i in in_hits})
+            hit = hit or sub_hit
+            for j in sub_out:
+                if j < len(eqn.outvars):
+                    reached.add(eqn.outvars[j])
+        elif name in _LAYOUT_PRIMS:
+            reached.update(eqn.outvars)
+    out_pos = {j for j, v in enumerate(jaxpr.outvars)
+               if not _is_literal(v) and v in reached}
+    return hit, out_pos
+
+
+class _Prop:
+    def __init__(self, program: str, allow_lines: Sequence[str]):
+        self.program = program
+        self.allow_lines = tuple(allow_lines)
+        self.checked = 0
+        self.allowed: List[Allowed] = []
+
+    def run(self, jaxpr, in_taint: Sequence[bool]) -> List[bool]:
+        """Propagate taint through one (open) jaxpr; returns out-taint.
+        Downcast checks happen inline; the wire-pack allowlist is
+        resolved against this jaxpr's consumer graph."""
+        env = {}
+        for var in jaxpr.constvars:
+            env[var] = False
+        if len(in_taint) != len(jaxpr.invars):
+            raise ValueError(
+                f"taint mask has {len(in_taint)} entries for "
+                f"{len(jaxpr.invars)} jaxpr inputs ({self.program})")
+        for var, t in zip(jaxpr.invars, in_taint):
+            env[var] = bool(t)
+
+        def read(v) -> bool:
+            return False if _is_literal(v) else env.get(v, False)
+
+        pending = []                       # (eqn, detail) downcasts
+        for eqn in jaxpr.eqns:
+            self.checked += 1
+            name = eqn.primitive.name
+            ts = [read(v) for v in eqn.invars]
+            any_t = any(ts)
+
+            if name == "while":
+                out = self._while(eqn, ts)
+            elif name == "scan":
+                out = self._scan(eqn, ts)
+            elif name == "cond":
+                out = self._cond(eqn, ts)
+            else:
+                sub = _sub_positional(eqn)
+                if sub is not None:
+                    sub_out = self.run(sub, ts)
+                    out = sub_out if len(sub_out) == len(eqn.outvars) \
+                        else [any(sub_out)] * len(eqn.outvars)
+                elif name in _STOP_PRIMS:
+                    out = [False] * len(eqn.outvars)
+                else:
+                    if (name == "convert_element_type" and any_t
+                            and _is_float(eqn.invars[0].aval)
+                            and _itemsize(eqn.invars[0].aval) >= 4
+                            and _is_float(eqn.outvars[0].aval)
+                            and _itemsize(eqn.outvars[0].aval) < 4):
+                        pending.append((eqn, (
+                            f"solver state downcast "
+                            f"{eqn.invars[0].aval.dtype}→"
+                            f"{eqn.outvars[0].aval.dtype} at "
+                            f"{_source_line(eqn)}")))
+                    out = [any_t] * len(eqn.outvars)
+            for var, t in zip(eqn.outvars, out):
+                env[var] = bool(t)
+
+        for eqn, detail in pending:
+            if _layout_flow(jaxpr, {eqn.outvars[0]})[0]:
+                self.allowed.append(Allowed(
+                    RULE, self.program, "convert_element_type",
+                    "bf16 wire pack (result bitcast into f32 lanes)"))
+            elif any(tag in detail for tag in self.allow_lines):
+                self.allowed.append(Allowed(
+                    RULE, self.program, "convert_element_type",
+                    f"caller allowlist: {detail}"))
+            else:
+                raise LintViolation(RULE, self.program,
+                                    "convert_element_type", detail)
+        return [read(v) for v in jaxpr.outvars]
+
+    # -- control flow --------------------------------------------------
+
+    def _while(self, eqn, ts):
+        cn = eqn.params["cond_nconsts"]
+        bn = eqn.params["body_nconsts"]
+        body = getattr(eqn.params["body_jaxpr"], "jaxpr",
+                       eqn.params["body_jaxpr"])
+        body_consts = ts[cn:cn + bn]
+        carry = list(ts[cn + bn:])
+        for _ in range(len(carry) + 1):
+            out = self.run(body, body_consts + carry)
+            new = [a or b for a, b in zip(carry, out)]
+            if new == carry:
+                break
+            carry = new
+        return carry
+
+    def _scan(self, eqn, ts):
+        nc = eqn.params["num_consts"]
+        ncar = eqn.params["num_carry"]
+        body = getattr(eqn.params["jaxpr"], "jaxpr", eqn.params["jaxpr"])
+        consts, carry, xs = ts[:nc], list(ts[nc:nc + ncar]), ts[nc + ncar:]
+        ys_taint = [False] * (len(eqn.outvars) - ncar)
+        for _ in range(len(carry) + 1):
+            out = self.run(body, consts + carry + xs)
+            new = [a or b for a, b in zip(carry, out[:ncar])]
+            ys_taint = [a or b for a, b in zip(ys_taint, out[ncar:])]
+            if new == carry:
+                break
+            carry = new
+        return carry + ys_taint
+
+    def _cond(self, eqn, ts):
+        out = [False] * len(eqn.outvars)
+        for br in eqn.params["branches"]:
+            sub = getattr(br, "jaxpr", br)
+            b_out = self.run(sub, ts[1:])
+            out = [a or b for a, b in zip(out, b_out)]
+        return out
+
+
+def check_no_dtype_drift(fn, args, *, taint: Sequence[bool],
+                         program: str = "<program>",
+                         allow_lines: Sequence[str] = ()) -> RuleReport:
+    """Trace ``fn(*args)`` and verify no tainted (solver-state) value
+    passes through a reduced-precision convert outside the wire-pack
+    allowlist. ``taint`` aligns with ``jax.tree_util.tree_leaves(args)``
+    — True marks a solver-state leaf (y/α/w/b). ``allow_lines`` adds
+    caller-sanctioned source substrings (file:line) to the allowlist."""
+    closed = jax.make_jaxpr(fn)(*args)
+    flat = len(jax.tree_util.tree_leaves(args))
+    if len(taint) != flat:
+        raise ValueError(f"taint mask has {len(taint)} entries for "
+                         f"{flat} argument leaves")
+    prop = _Prop(program, allow_lines)
+    prop.run(closed.jaxpr, list(taint))
+    return RuleReport(rule=RULE, program=program, checked=prop.checked,
+                      allowed=tuple(prop.allowed))

@@ -1,0 +1,222 @@
+"""Hardened post-SPMD HLO text parser — the extraction layer under both
+the collective-schedule rule and ``launch.hlo_analysis`` roofline math.
+
+The compiled artifact JAX exposes portably is ``compiled.as_text()``;
+this module turns that text into structured :class:`CollectiveOp`
+records instead of the loose per-line regex scan the roofline gate grew
+up with. Hardened over the original `launch/hlo_analysis.py` scan:
+
+* tuple-typed outputs — ``(f32[8]{0}, u32[], token[])`` — yield every
+  element's (dtype, dims), not just the ones a byte table knows;
+* ``ROOT``-prefixed ops and ``-start``/``-done`` async pairs;
+* full ``replica_groups={{0,1},{2,3}}`` group lists AND the iota form
+  ``replica_groups=[2,4]<=[8]``;
+* ``source_target_pairs`` of collective-permute (the ring transport's
+  deadlock surface);
+* computation attribution: every op knows which HLO computation it
+  appeared in, and :func:`while_body_computations` names the ones that
+  re-execute per loop trip (the EXPERIMENTS.md scan-counting caveat,
+  now machine-readable).
+
+Unknown dtypes no longer vanish: ``tensor_nbytes`` falls back to a
+conservative 4-byte estimate and warns once per dtype, so a new XLA
+narrow type (``f8e4m3``, ``u4``) can only OVERcount the perf gate's
+wire bytes, never silently undercount them (ISSUE 8 satellite).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+import warnings
+from typing import List, Optional, Tuple
+
+# Bits, not bytes: the sub-byte types (u4/s4, the fp8 family's 8) and
+# pred pack differently on device, but wire math wants logical size.
+_DTYPE_BITS = {
+    "pred": 8,
+    "s2": 2, "u2": 2, "s4": 4, "u4": 4,
+    "f4e2m1fn": 4,
+    "s8": 8, "u8": 8,
+    "f8e5m2": 8, "f8e4m3": 8, "f8e4m3fn": 8, "f8e4m3b11fnz": 8,
+    "f8e5m2fnuz": 8, "f8e4m3fnuz": 8, "f8e8m0fnu": 8,
+    "s16": 16, "u16": 16, "bf16": 16, "f16": 16,
+    "s32": 32, "u32": 32, "f32": 32, "tf32": 32,
+    "s64": 64, "u64": 64, "f64": 64, "c64": 64,
+    "c128": 128,
+}
+_FALLBACK_BITS = 32            # conservative: overcount, never undercount
+_warned_dtypes = set()
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute",
+                    "collective-broadcast")
+
+_TYPE_RE = re.compile(r"([\w]+)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{(\{[\d,]+\}(?:,\{[\d,]+\})*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(\{\d+,\d+\}(?:,\{\d+,\d+\})*)\}")
+_CHANNEL_RE = re.compile(r"channel_id=(\d+)")
+_PAIR_RE = re.compile(r"\{(\d+),(\d+)\}")
+_OP_RE = re.compile(
+    r"^\s*(?P<root>ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<out>\([^=]*?\)|[\w]+\[[\d,]*\](?:\{[\d,]*\})?)\s+"
+    r"(?P<op>[\w\-]+)\(", re.M)
+# computation header: '%name (args) -> type {' or 'ENTRY %name ... {',
+# always at column 0 in printed HLO
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*")
+_WHILE_ATTR_RE = re.compile(r"(?:body|condition)=%?([\w.\-]+)")
+
+
+def tensor_shapes(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Every (dtype, dims) in an HLO type string — tuple types yield all
+    elements. ``token``/opaque pseudo-types carry no ``[dims]`` and are
+    skipped by construction."""
+    out = []
+    for dt, dims in _TYPE_RE.findall(type_str):
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def dtype_nbits(dt: str) -> int:
+    """Logical bit width of an HLO dtype; unknown types warn once and
+    fall back to a conservative 32 bits."""
+    bits = _DTYPE_BITS.get(dt)
+    if bits is None:
+        if dt not in _warned_dtypes:
+            _warned_dtypes.add(dt)
+            warnings.warn(
+                f"hlo parser: unknown dtype {dt!r}; counting it as "
+                f"{_FALLBACK_BITS} bits (conservative overcount)",
+                stacklevel=2)
+        bits = _FALLBACK_BITS
+    return bits
+
+
+def tensor_nbytes(type_str: str) -> List[int]:
+    """Byte size of every tensor in a type string (tuples flattened).
+    Sub-byte element types round the total up to whole bytes."""
+    sizes = []
+    for dt, shape in tensor_shapes(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        sizes.append(math.ceil(n * dtype_nbits(dt) / 8))
+    return sizes
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective in a compiled program, in textual order."""
+    kind: str                                   # base: 'all-gather', …
+    name: str                                   # HLO result name
+    computation: str                            # owning computation
+    shapes: Tuple[Tuple[str, Tuple[int, ...]], ...]   # output (dtype, dims)
+    replica_groups: Optional[Tuple[Tuple[int, ...], ...]] = None
+    iota_groups: Optional[Tuple[int, int]] = None     # (group_size, ngroups)
+    source_target_pairs: Optional[Tuple[Tuple[int, int], ...]] = None
+    channel_id: Optional[int] = None
+    is_start: bool = False
+    is_done: bool = False
+    line: str = ""
+
+    @property
+    def group_size(self) -> int:
+        if self.replica_groups:
+            return max(len(g) for g in self.replica_groups)
+        if self.iota_groups:
+            return self.iota_groups[0]
+        if self.source_target_pairs is not None:
+            return 1
+        return 1
+
+    @property
+    def max_nbytes(self) -> int:
+        sizes = [math.ceil(_nelems(s) * dtype_nbits(dt) / 8)
+                 for dt, s in self.shapes]
+        return max(sizes) if sizes else 0
+
+    def signature(self) -> tuple:
+        """Schedule identity: what every participant must agree on.
+        Names/channel ids are compiler-run-local and excluded."""
+        return (self.kind, self.shapes, self.replica_groups,
+                self.iota_groups, self.source_target_pairs)
+
+
+def _nelems(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def _classify(op: str) -> Tuple[Optional[str], bool, bool]:
+    """(base kind, is_start, is_done) of an HLO opcode, or (None, …)."""
+    for kind in COLLECTIVE_KINDS:
+        if op == kind:
+            return kind, False, False
+        if op == kind + "-start":
+            return kind, True, False
+        if op == kind + "-done":
+            return kind, False, True
+    return None, False, False
+
+
+def _parse_groups(line: str):
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return tuple(tuple(int(x) for x in g.split(","))
+                     for g in m.group(1)[1:-1].split("},{")), None
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return None, (int(m.group(2)), int(m.group(1)))
+    return None, None
+
+
+def parse_collective_ops(hlo_text: str) -> List[CollectiveOp]:
+    """All collectives of a compiled module, in textual order, with
+    computation attribution. ``-done`` halves of async pairs are
+    included (callers filter on ``is_done`` — the roofline counts the
+    start, the schedule checker pairs them)."""
+    ops: List[CollectiveOp] = []
+    computation = "<module>"
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if line.endswith("{") and not raw[:1].isspace():
+            m = _COMP_RE.match(line)
+            if m:
+                computation = m.group(1)
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        kind, is_start, is_done = _classify(m.group("op"))
+        if kind is None:
+            continue
+        groups, iota = _parse_groups(line)
+        pm = _PAIRS_RE.search(line)
+        pairs = (tuple((int(a), int(b))
+                       for a, b in _PAIR_RE.findall(pm.group(1)))
+                 if pm else None)
+        cm = _CHANNEL_RE.search(line)
+        ops.append(CollectiveOp(
+            kind=kind, name=m.group("name"), computation=computation,
+            shapes=tuple(tensor_shapes(m.group("out"))),
+            replica_groups=groups, iota_groups=iota,
+            source_target_pairs=pairs,
+            channel_id=int(cm.group(1)) if cm else None,
+            is_start=is_start, is_done=is_done, line=line.strip()))
+    return ops
+
+
+def while_body_computations(hlo_text: str) -> frozenset:
+    """Names of computations that re-execute per while-loop trip (their
+    collectives appear ONCE in text but run once per trip — the scan
+    caveat `launch.dryrun --measure` corrects for)."""
+    out = set()
+    for raw in hlo_text.splitlines():
+        if " while(" in raw or "while-start(" in raw:
+            for name in _WHILE_ATTR_RE.findall(raw):
+                out.add(name)
+    return frozenset(out)

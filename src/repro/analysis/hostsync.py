@@ -1,0 +1,110 @@
+"""Rule 3 — host-sync lint (DESIGN.md §14).
+
+Hot loops (`StreamingSVMService.run_wave`, `core.sweep._run_rounds`)
+may synchronize with the device ONLY at their designed readback points
+(the eq. 8 convergence risks). Two layers:
+
+* runtime guard — :func:`no_implicit_host_sync` arms JAX's
+  ``transfer_guard_device_to_host("disallow")`` for a region; the
+  designed readbacks are wrapped in :func:`allowed_host_sync` (a nested
+  ``"allow"`` guard — the innermost guard wins), which IS the explicit
+  allowlist: every sanctioned sync point is named in source at the call
+  site. On the CPU backend device buffers are host-resident, so the
+  guard physically cannot fire there — it is the TPU/GPU tripwire; the
+  static layer below is the backend-independent check.
+* static lint — :func:`check_no_host_callbacks` walks the jaxpr of a
+  hot-loop program and rejects host-callback primitives
+  (``pure_callback``, ``io_callback``, ``debug_callback`` — each one an
+  implicit device→host round-trip per call) anywhere in the traced
+  program, including sub-jaxprs.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Collection, Tuple
+
+import jax
+
+from repro.analysis.base import Allowed, LintViolation, RuleReport
+
+RULE = "host-sync"
+
+# one device→host round-trip per executed call, each
+_CALLBACK_PRIMS = ("pure_callback", "io_callback", "debug_callback",
+                   "outside_call", "host_callback_call")
+
+
+@contextlib.contextmanager
+def no_implicit_host_sync():
+    """Arm the implicit device→host transfer tripwire for a region."""
+    with jax.transfer_guard_device_to_host("disallow"):
+        yield
+
+
+@contextlib.contextmanager
+def allowed_host_sync(reason: str):
+    """A designed sync point inside a :func:`no_implicit_host_sync`
+    region. ``reason`` is deliberately mandatory: the allowlist lives
+    in source, next to the readback it sanctions."""
+    del reason                       # documentation-only, by design
+    with jax.transfer_guard_device_to_host("allow"):
+        yield
+
+
+def host_guards_enforced() -> bool:
+    """Whether this backend can fire the runtime guard at all (False on
+    CPU, where 'device' buffers already live in host memory)."""
+    import numpy as np
+    x = jax.numpy.zeros((), jax.numpy.float32)
+    try:
+        with jax.transfer_guard_device_to_host("disallow"):
+            np.asarray(x)
+        return False
+    except Exception:
+        return True
+
+
+def _iter_eqns(jaxpr):
+    """Every eqn of a (closed) jaxpr, sub-jaxprs included."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn):
+            yield from _iter_eqns(sub)
+
+
+def _sub_jaxprs(eqn) -> Tuple:
+    subs = []
+    for v in eqn.params.values():
+        kinds = v if isinstance(v, (tuple, list)) else (v,)
+        for k in kinds:
+            if hasattr(k, "eqns") or hasattr(getattr(k, "jaxpr", None),
+                                             "eqns"):
+                subs.append(k)
+    return tuple(subs)
+
+
+def check_no_host_callbacks(fn, args, program: str = "<program>",
+                            allow: Collection[str] = ()) -> RuleReport:
+    """Trace ``fn(*args)`` (ShapeDtypeStructs welcome) and reject
+    host-callback primitives. ``allow`` names primitives explicitly
+    sanctioned for this program (e.g. a deliberate ``io_callback`` in a
+    checkpoint path)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    checked = 0
+    allowed = []
+    for eqn in _iter_eqns(jaxpr):
+        checked += 1
+        name = eqn.primitive.name
+        if name in _CALLBACK_PRIMS or "callback" in name:
+            if name in allow:
+                allowed.append(Allowed(RULE, program, name,
+                                       "caller allowlist"))
+                continue
+            raise LintViolation(
+                RULE, program, name,
+                "host-callback primitive inside a hot-loop program — "
+                "one implicit device→host round-trip per call (move it "
+                "out of the loop or allowlist it explicitly)")
+    return RuleReport(rule=RULE, program=program, checked=checked,
+                      allowed=tuple(allowed))

@@ -1,0 +1,470 @@
+"""`make lint-jax` — run the invariant rules against the real programs.
+
+Matrix (static rules): every SVM step builder — ``build_svm_round_step``,
+``build_svm_sweep_step``, ``build_svm_serve_step`` — under both shuffle
+transports (``allgather``/``ring``) and both row formats
+(``dense``/``sparse_csr``) on an 8-device host mesh:
+
+* host-sync: the traced program contains no host-callback primitive;
+* dtype-drift: solver-state leaves (y/α) never downcast outside the
+  bf16 wire-pack allowlist;
+* dense-materialization (sparse programs): no intermediate inflates a
+  dense row block past the chunked-densify ceiling, and the compiled
+  temp memory stays under the dense block the program must not
+  allocate;
+* collective-schedule: each compiled program's schedule is structurally
+  valid, and two independent builds of the same program extract the
+  SAME ordered schedule (the single-process determinism proxy for
+  cross-process agreement).
+
+Dynamic rules: a real ``fit_mapreduce_sweep`` under
+``no_implicit_host_sync`` with ``fail_on_retrace=True``, and a
+``StreamingSVMService(fail_on_retrace=True)`` folding two
+identically-shaped waves — the second must hit the jit cache.
+
+Modes:
+    python -m repro.analysis.lint                # the full matrix
+    python -m repro.analysis.lint --artifacts D  # committed dry-run
+        artifacts: re-compile each recorded (shape, mesh, transport)
+        and fail if the schedule is invalid or the recorded collective
+        counts went stale (the CI gate over benchmarks/artifacts/)
+    python -m repro.analysis.lint --self-test    # seed one violation
+        per rule family and require the rule to fire naming it
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def _force_host_devices() -> None:
+    # Artifact mode re-compiles against the production 16x16 / 2x16x16
+    # meshes; the matrix runs on a small 8-device host mesh. Must be
+    # set before first backend init (jax locks the device count).
+    n = 512 if "--artifacts" in sys.argv else 8
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+if __name__ == "__main__":
+    _force_host_devices()
+
+import argparse
+import dataclasses
+import glob
+import json
+
+
+# ---------------------------------------------------------------------------
+# Harness configuration: small shapes, meaningful invariants.
+# ---------------------------------------------------------------------------
+
+# The feature dim is what the dense-leak ceiling keys on; the
+# per-device row count is chosen ABOVE the ceiling so densifying a
+# whole shard is a detectable violation, not noise under it.
+LINT_FEATURES = 512
+LINT_ROWS_PER_DEVICE = 512
+LINT_SV_CAPACITY = 32
+LINT_NNZ_CAP = 32
+NUM_CONFIGS = 4
+NUM_STREAMS = 4
+
+
+def _lint_cfg(row_format: str):
+    from repro.configs.svm_tfidf import SVMTfidfConfig
+    # dtype is forced to f32: the dtype-drift rule tracks solver state
+    # staying f32, which the bf16-featured default would trivialize.
+    return dataclasses.replace(
+        SVMTfidfConfig(), dtype="float32", num_features=LINT_FEATURES,
+        rows_per_device=LINT_ROWS_PER_DEVICE, sv_capacity=LINT_SV_CAPACITY,
+        nnz_cap=LINT_NNZ_CAP, row_format=row_format,
+        stream_rows_per_wave=LINT_ROWS_PER_DEVICE)
+
+
+def _build(kind: str, cfg, mesh, shuffle: str):
+    from repro.launch import steps as steps_lib
+    if kind == "round":
+        return steps_lib.build_svm_round_step(cfg, mesh,
+                                              shuffle_impl=shuffle)
+    if kind == "sweep":
+        return steps_lib.build_svm_sweep_step(cfg, mesh, NUM_CONFIGS,
+                                              shuffle_impl=shuffle)
+    return steps_lib.build_svm_serve_step(cfg, mesh, NUM_STREAMS,
+                                          shuffle_impl=shuffle)
+
+
+def _compile(bundle, mesh):
+    import jax
+    from repro import compat
+    with compat.set_mesh(mesh):
+        jitted = jax.jit(
+            bundle.fn,
+            in_shardings=compat.to_shardings(mesh, bundle.in_shardings),
+            out_shardings=compat.to_shardings(mesh, bundle.out_shardings),
+            donate_argnums=bundle.donate_argnums)
+        return jitted.lower(*bundle.args).compile()
+
+
+# ---------------------------------------------------------------------------
+# Solver-state taint masks (dtype-drift rule).
+# ---------------------------------------------------------------------------
+
+def _taint_like(tree, val: bool = False):
+    import jax
+    return jax.tree_util.tree_map(lambda _: val, tree)
+
+
+def _sv_taint(sv):
+    """Taint tree of an SV state pytree: the label/dual sidebands
+    (``y``, ``alpha``) are solver state; feature rows (deliberately
+    wire-dtype on the ring), ids, ptr and masks are not."""
+    solver_state = {"y": True, "alpha": True}
+    fields = type(sv)._fields
+    return type(sv)(*(_taint_like(getattr(sv, f), solver_state.get(f, False))
+                      for f in fields))
+
+
+def _bundle_taint(bundle):
+    import jax
+    rows, y, mask, sv = bundle.args[:4]
+    taint = (_taint_like(rows), True, False, _sv_taint(sv)) + tuple(
+        _taint_like(a) for a in bundle.args[4:])
+    return jax.tree_util.tree_leaves(taint)
+
+
+# ---------------------------------------------------------------------------
+# The matrix.
+# ---------------------------------------------------------------------------
+
+def _report(rep) -> None:
+    extra = f", allowed={len(rep.allowed)}" if rep.allowed else ""
+    note = f" [{rep.note}]" if rep.note else ""
+    print(f"  OK [{rep.rule}] checked={rep.checked}{extra}{note}")
+
+
+def run_matrix() -> int:
+    from repro import analysis
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(data=8)
+    failures = 0
+    for row_format in ("dense", "sparse_csr"):
+        cfg = _lint_cfg(row_format)
+        for shuffle in ("allgather", "ring"):
+            for kind in ("round", "sweep", "serve"):
+                name = f"{kind}/{shuffle}/{row_format}"
+                print(f"program {name}")
+                bundle = _build(kind, cfg, mesh, shuffle)
+                _report(analysis.check_no_host_callbacks(
+                    bundle.fn, bundle.args, program=name))
+                _report(analysis.check_no_dtype_drift(
+                    bundle.fn, bundle.args, taint=_bundle_taint(bundle),
+                    program=name))
+                if row_format == "sparse_csr":
+                    _report(analysis.check_no_dense_materialization(
+                        bundle.fn, bundle.args, d=cfg.num_features,
+                        program=name))
+                compiled = _compile(bundle, mesh)
+                if row_format == "sparse_csr":
+                    _report(analysis.check_memory_ceiling(
+                        compiled,
+                        limit_bytes=_sparse_temp_ceiling(cfg, kind),
+                        program=name))
+                hlo = compiled.as_text()
+                _report(analysis.check_schedule(hlo, program=name))
+                # determinism proxy: an independent second build must
+                # extract the SAME ordered collective schedule
+                hlo2 = _compile(_build(kind, cfg, mesh, shuffle),
+                                mesh).as_text()
+                _report(analysis.assert_schedules_agree(
+                    {"trace0": analysis.collective_schedule(hlo),
+                     "trace1": analysis.collective_schedule(hlo2)},
+                    program=name))
+    failures += run_dynamic()
+    return failures
+
+
+def _sparse_temp_ceiling(cfg, kind: str) -> int:
+    """Temp-memory ceiling of a sparse program: ONE dense copy of its
+    vmapped per-device shard (jobs · per · d · f32) — the block the
+    sparse path exists to never materialize. Measured legit temps sit
+    at 15–55 % of this across all six sparse programs (the ring wire
+    buffers and the vmapped solver scratch scale with nnz_cap = d/16,
+    not d); a full densify adds the entire block on top and trips it."""
+    per = cfg.rows_per_device
+    jobs = 1
+    if kind == "sweep":
+        jobs = NUM_CONFIGS
+    elif kind == "serve":
+        jobs = NUM_STREAMS
+        per = -(-(cfg.stream_rows_per_wave + cfg.sv_capacity) // 8)
+    return jobs * per * cfg.num_features * 4
+
+
+def run_dynamic() -> int:
+    """Dynamic rules on the functional drivers: retrace + host-sync on
+    live hot loops (small shapes; correctness of the loop discipline,
+    not the model)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import analysis
+    from repro.core import (MRSVMConfig, SVMConfig, fit_mapreduce,
+                            fit_mapreduce_sweep, sweep_grid)
+    from repro.serving import StreamingSVMService
+
+    cfg = MRSVMConfig(sv_capacity=32, max_rounds=3, gamma=1e-4,
+                      svm=SVMConfig(C=1.0, max_epochs=8))
+    w = jax.random.normal(jax.random.PRNGKey(9), (16,))
+    X = jax.random.normal(jax.random.PRNGKey(0), (128, 16))
+    y = jnp.sign(X @ w)
+
+    print("program dynamic/sweep-rounds")
+    params = sweep_grid(cfg.svm, C=[0.5, 1.0])
+    with analysis.no_implicit_host_sync():
+        fit_mapreduce_sweep(X, y, 4, cfg, params, fail_on_retrace=True)
+    print("  OK [retrace] steady-state sweep rounds hit the jit cache")
+    print("  OK [host-sync] designed readbacks pass the armed guard"
+          + ("" if analysis.host_guards_enforced()
+             else " [note: CPU backend cannot fire the runtime guard]"))
+
+    print("program dynamic/streaming-wave")
+    svc = StreamingSVMService(cfg, num_partitions=4, fail_on_retrace=True)
+    svc.register("t0", fit_mapreduce(X, y, 4, cfg))
+    for wave in range(2):           # wave 0 warms; wave 1 must hit
+        Xb = jax.random.normal(jax.random.PRNGKey(10 + wave), (64, 16))
+        svc.submit("t0", Xb, jnp.sign(Xb @ w))
+        svc.run_wave()
+    rep = svc.throughput_report()
+    print(f"  OK [retrace] steady-state wave fold hit the jit cache "
+          f"(fold_programs={rep['fold_programs']}, "
+          f"retraces={rep['retraces']})")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Artifact mode: the CI staleness gate over benchmarks/artifacts/.
+# ---------------------------------------------------------------------------
+
+def run_artifacts(art_dir: str) -> int:
+    from repro import analysis
+    from repro.configs import get_config
+    from repro.launch.hlo_analysis import collective_stats
+    from repro.launch.mesh import make_production_mesh
+
+    paths = sorted(glob.glob(os.path.join(art_dir, "dryrun_*.json")))
+    if not paths:
+        print(f"no dryrun artifacts under {art_dir}")
+        return 0
+    failures = 0
+    meshes = {}
+    for path in paths:
+        with open(path) as f:
+            record = json.load(f)
+        name = os.path.basename(path)
+        if record.get("status") != "ok":
+            print(f"skip {name}: status={record.get('status')}")
+            continue
+        if record.get("arch") != "svm_tfidf":
+            print(f"skip {name}: non-svm arch (schedule gate covers the "
+                  "paper workload)")
+            continue
+        multi_pod = record["mesh"] == "2x16x16"
+        if multi_pod not in meshes:
+            meshes[multi_pod] = make_production_mesh(multi_pod=multi_pod)
+        mesh = meshes[multi_pod]
+        cfg = get_config(record["arch"])
+        over = {}
+        if record.get("row_format"):
+            over["row_format"] = record["row_format"]
+        if record.get("nnz_cap") is not None:
+            over["nnz_cap"] = record["nnz_cap"]
+        if over:
+            cfg = dataclasses.replace(cfg, **over)
+        shape = record.get("shape")
+        shuffle = record.get("shuffle")
+        from repro.launch import steps as steps_lib
+        if shape == "svm_sweep":
+            bundle = steps_lib.build_svm_sweep_step(
+                cfg, mesh, num_configs=8, shuffle_impl=shuffle)
+        elif shape == "svm_serve":
+            bundle = steps_lib.build_svm_serve_step(
+                cfg, mesh, num_streams=4, shuffle_impl=shuffle)
+        else:
+            bundle = steps_lib.build_svm_round_step(
+                cfg, mesh, shuffle_impl=shuffle)
+        hlo = _compile(bundle, mesh).as_text()
+        analysis.check_schedule(hlo, program=name)
+        analysis.compare_collective_counts(
+            record.get("collectives", {}), collective_stats(hlo),
+            program=name)
+        print(f"OK {name}: schedule valid, collective counts current")
+    return failures
+
+
+# ---------------------------------------------------------------------------
+# Self-test: seed one violation per rule family; each must fire.
+# ---------------------------------------------------------------------------
+
+def _expect(rule: str, fn) -> int:
+    from repro.analysis import LintViolation
+    try:
+        fn()
+    except LintViolation as e:
+        if e.rule != rule:
+            print(f"FAIL self-test [{rule}]: wrong rule fired: {e}")
+            return 1
+        if not e.op or not e.program:
+            print(f"FAIL self-test [{rule}]: violation does not name "
+                  f"op/program: {e}")
+            return 1
+        print(f"  OK seeded [{rule}] violation fired: op={e.op!r} "
+              f"program={e.program!r}")
+        return 0
+    print(f"FAIL self-test [{rule}]: seeded violation did not fire")
+    return 1
+
+
+def run_self_test() -> int:
+    import jax
+    import jax.numpy as jnp
+
+    from repro import analysis
+    from repro.core.mapreduce_svm import pack_wire_rows
+
+    failures = 0
+
+    # retrace: per-call jit(lambda) in a steady-state region — the
+    # exact bug class the module-level-jit discipline exists to prevent
+    def seeded_retrace():
+        with analysis.no_retrace("self-test wave"):
+            jax.jit(lambda x: x * 2.0)(jnp.float32(1.0))
+    failures += _expect("retrace", seeded_retrace)
+
+    # retrace allowlist: a declared warm-up budget absorbs the compile
+    with analysis.no_retrace("self-test warmup", allow=1):
+        jax.jit(lambda x: x * 3.0)(jnp.float32(1.0))
+    print("  OK [retrace] allow=1 absorbs the declared warm-up compile")
+
+    # collective-schedule: a ring hop where device 3 receives twice —
+    # mismatched ppermute schedules deadlock exactly like this
+    bad_ring = """\
+ENTRY %main () -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  ROOT %cp = f32[8]{0} collective-permute(%p), channel_id=1, source_target_pairs={{0,3},{1,2},{2,3}}
+}
+"""
+    failures += _expect("collective-schedule",
+                        lambda: analysis.check_schedule(bad_ring,
+                                                        "self-test ring"))
+
+    # schedule agreement: one participant truncates the sequence
+    good = analysis.collective_schedule("""\
+ENTRY %main () -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  %ar = f32[8]{0} all-reduce(%p), replica_groups={{0,1,2,3}}
+  ROOT %ag = f32[32]{0} all-gather(%ar), replica_groups={{0,1,2,3}}
+}
+""")
+    failures += _expect(
+        "collective-schedule",
+        lambda: analysis.assert_schedules_agree(
+            {"proc0": good, "proc1": good[:1]}, "self-test agreement"))
+
+    # artifact staleness: recorded counts disagree with a fresh compile
+    failures += _expect(
+        "collective-schedule",
+        lambda: analysis.compare_collective_counts(
+            {"all-reduce": {"count": 3}}, {"all-reduce": {"count": 2}},
+            "self-test artifact"))
+
+    # host-sync: a debug callback inside a would-be hot-loop program
+    def leaky(x):
+        jax.debug.callback(lambda v: None, x)
+        return x * 2.0
+    failures += _expect(
+        "host-sync",
+        lambda: analysis.check_no_host_callbacks(
+            leaky, (jnp.zeros((4,)),), "self-test hot loop"))
+
+    # dense-materialization: densify a whole 512-row shard at d=512
+    d = LINT_FEATURES
+    def densify(v):
+        return (v[:, None] * jnp.ones((LINT_ROWS_PER_DEVICE, d))).sum()
+    failures += _expect(
+        "dense-materialization",
+        lambda: analysis.check_no_dense_materialization(
+            densify, (jnp.zeros((LINT_ROWS_PER_DEVICE,)),), d=d,
+            program="self-test densify"))
+
+    # dtype-drift: a stray bf16 downcast of tainted solver state
+    def drift(alpha):
+        return alpha.astype(jnp.bfloat16).sum()
+    failures += _expect(
+        "dtype-drift",
+        lambda: analysis.check_no_dtype_drift(
+            drift, (jnp.zeros((8,), jnp.float32),), taint=[True],
+            program="self-test drift"))
+
+    # dtype-drift wire-pack allowlist: downcast → pack → bitcast passes
+    def pack(alpha):
+        return pack_wire_rows(alpha.astype(jnp.bfloat16), jnp.bfloat16)[0]
+    rep = analysis.check_no_dtype_drift(
+        pack, (jnp.zeros((8, 16), jnp.float32),), taint=[True],
+        program="self-test wire pack")
+    if not rep.allowed:
+        print("FAIL self-test [dtype-drift]: wire-pack downcast was not "
+              "recorded as allowlisted")
+        failures += 1
+    else:
+        print(f"  OK [dtype-drift] wire-pack allowlist absorbed the "
+              f"downcast ({rep.allowed[0].reason})")
+
+    # unknown-dtype fallback: never a silent skip
+    import warnings
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        sizes = analysis.tensor_nbytes("f6e3m2[64]")
+    if sizes != [256] or not w:
+        print(f"FAIL self-test [hlo-parser]: unknown dtype fallback "
+              f"returned {sizes} (warned={bool(w)})")
+        failures += 1
+    else:
+        print("  OK [hlo-parser] unknown dtype warned and counted "
+              "conservatively")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="jaxpr/HLO invariant linter (DESIGN.md §14)")
+    ap.add_argument("--artifacts", default=None, metavar="DIR",
+                    help="verify committed dry-run artifacts instead of "
+                         "running the builder matrix")
+    ap.add_argument("--self-test", action="store_true",
+                    help="seed one violation per rule family; each must "
+                         "fire naming the offending op and program")
+    args = ap.parse_args(argv)
+    from repro.analysis.base import LintViolation
+    try:
+        if args.self_test:
+            failures = run_self_test()
+        elif args.artifacts:
+            failures = run_artifacts(args.artifacts)
+        else:
+            failures = run_matrix()
+    except LintViolation as e:
+        print(f"LINT FAILURE: {e}")
+        return 1
+    if failures:
+        print(f"{failures} lint failure(s)")
+        return 1
+    print("lint-jax: all invariant rules passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

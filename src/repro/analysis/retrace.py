@@ -1,0 +1,119 @@
+"""Rule 2 — retrace detector (DESIGN.md §14).
+
+The repo's jit-cache discipline (module-level jits in
+``core.mapreduce_svm`` / ``core.sweep``, power-of-two wave buckets in
+``serving.svm_stream``) exists so steady-state hot loops NEVER
+recompile. This context manager turns that discipline into a failing
+check: wrap a region that must hit the cache; any compile inside it
+raises :class:`RetraceError` naming the recompiled function.
+
+Mechanism: ``jax_log_compiles`` emits a WARNING-level ``Compiling
+<name> with global shapes and types …`` record on a ``jax.*`` logger
+for every cache-missing trace→compile (stable across the supported
+0.4.x→0.8.x matrix; see DESIGN.md §7). We attach one handler to the
+root ``jax`` logger — child records propagate — and filter on the
+message prefix, so the detector needs no private cache-stat APIs.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import logging
+import re
+from typing import List
+
+import jax
+
+from repro.analysis.base import LintViolation
+
+RULE = "retrace"
+
+_COMPILE_PREFIX = "Compiling "
+_NAME_RE = re.compile(r"Compiling ([\w.<>\-]+)")
+
+
+class RetraceError(LintViolation):
+    def __init__(self, program: str, events: List[str]):
+        names = ", ".join(events) or "<unknown>"
+        super().__init__(RULE, program, names,
+                         f"{len(events)} compilation(s) inside a "
+                         "steady-state region that must hit the jit "
+                         "cache")
+        self.events = list(events)
+
+
+@dataclasses.dataclass
+class RetraceStats:
+    """Mutable capture handed to the ``with`` body: ``events`` grows one
+    function name per compile observed inside the region."""
+    events: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def count(self) -> int:
+        return len(self.events)
+
+
+class _CompileHandler(logging.Handler):
+    def __init__(self, stats: RetraceStats):
+        super().__init__(level=logging.WARNING)
+        self.stats = stats
+
+    def emit(self, record: logging.LogRecord) -> None:
+        try:
+            msg = record.getMessage()
+        except Exception:
+            return
+        if not msg.startswith(_COMPILE_PREFIX):
+            return
+        m = _NAME_RE.match(msg)
+        self.stats.events.append(m.group(1) if m else "<unknown>")
+
+
+@contextlib.contextmanager
+def watch_compiles():
+    """Count compiles in a region WITHOUT failing — the accounting
+    primitive under :func:`no_retrace` and the streaming service's
+    retrace counters. Yields :class:`RetraceStats`."""
+    stats = RetraceStats()
+    handler = _CompileHandler(stats)
+    logger = logging.getLogger("jax")
+    prev_level = logger.level
+    prev_propagate = logger.propagate
+    prev_flag = bool(jax.config.jax_log_compiles)
+    logger.addHandler(handler)
+    # the log_compiles records are WARNING-level; make sure an app that
+    # silenced the jax logger doesn't blind the detector
+    if logger.getEffectiveLevel() > logging.WARNING:
+        logger.setLevel(logging.WARNING)
+    dispatch_logger = logging.getLogger("jax._src.dispatch")
+    prev_dispatch = dispatch_logger.level
+    if not prev_flag:
+        jax.config.update("jax_log_compiles", True)
+        # log_compiles promotes a firehose of jax-internal records to
+        # WARNING; keep them off the app's handlers while armed (our
+        # handler on the 'jax' logger still sees the pxla 'Compiling'
+        # records it needs). A caller who turned log_compiles on
+        # themselves keeps their output untouched.
+        logger.propagate = False
+        dispatch_logger.setLevel(logging.ERROR)
+    try:
+        yield stats
+    finally:
+        if not prev_flag:
+            jax.config.update("jax_log_compiles", False)
+        logger.removeHandler(handler)
+        logger.setLevel(prev_level)
+        logger.propagate = prev_propagate
+        dispatch_logger.setLevel(prev_dispatch)
+
+
+@contextlib.contextmanager
+def no_retrace(program: str = "<steady state>", allow: int = 0):
+    """Fail with :class:`RetraceError` if more than ``allow`` compiles
+    happen inside the region. ``allow`` is the explicit allowlist knob:
+    a warm-up region that legitimately compiles N programs passes
+    ``allow=N`` and still catches the N+1st."""
+    with watch_compiles() as stats:
+        yield stats
+    if stats.count > allow:
+        raise RetraceError(program, stats.events)

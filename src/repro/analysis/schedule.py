@@ -1,0 +1,146 @@
+"""Rule 1 — collective-schedule checker (DESIGN.md §14).
+
+A multi-process SPMD program deadlocks when participants disagree on
+the ordered sequence of collectives they will issue (CloudSVM's global
+iterate-merge loop is exactly such a schedule). Three machine checks:
+
+* :func:`check_schedule` — structural validity of ONE compiled program:
+  async ``-start``/``-done`` ops pair up within their computation, and
+  every collective-permute's ``source_target_pairs`` form a partial
+  permutation (no device is the source or target of two messages in
+  one hop — the ring transport's deadlock-freedom condition).
+* :func:`assert_schedules_agree` — N programs (one per process, or the
+  same builder traced twice as the single-process determinism proxy)
+  must extract to the SAME ordered schedule signature.
+* :func:`compare_collective_counts` — per-kind op counts of a fresh
+  compile vs. a committed dry-run artifact's recorded ``collectives``
+  (the CI staleness gate over ``benchmarks/artifacts/``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+from repro.analysis import hlo
+from repro.analysis.base import LintViolation, RuleReport
+
+RULE = "collective-schedule"
+
+
+def collective_schedule(hlo_text: str) -> Tuple[tuple, ...]:
+    """Ordered schedule signature of a compiled program: one entry per
+    issued collective (``-done`` halves excluded — the ``-start`` is
+    the issue point), in textual order. While-body collectives appear
+    once; per-trip multiplicity is schedule-invariant (every process
+    runs the same trip count or the program is already wrong)."""
+    return tuple(op.signature() for op in hlo.parse_collective_ops(hlo_text)
+                 if not op.is_done)
+
+
+def check_schedule(hlo_text: str, program: str = "<program>") -> RuleReport:
+    """Structural schedule validity of one compiled program."""
+    ops = hlo.parse_collective_ops(hlo_text)
+    # -start/-done pairing, per computation and kind
+    open_starts: Dict[Tuple[str, str], List[hlo.CollectiveOp]] = {}
+    for op in ops:
+        key = (op.computation, op.kind)
+        if op.is_start:
+            open_starts.setdefault(key, []).append(op)
+        elif op.is_done:
+            if not open_starts.get(key):
+                raise LintViolation(
+                    RULE, program, op.name,
+                    f"{op.kind}-done in computation {op.computation!r} "
+                    "with no preceding matching -start")
+            open_starts[key].pop()
+    for (comp, kind), pending in open_starts.items():
+        if pending:
+            raise LintViolation(
+                RULE, program, pending[0].name,
+                f"{kind}-start in computation {comp!r} never consumed "
+                "by a matching -done (dangling async collective)")
+
+    # collective-permute deadlock freedom: one send and one receive per
+    # device per hop
+    for op in ops:
+        if op.kind != "collective-permute" or op.is_done:
+            continue
+        pairs = op.source_target_pairs or ()
+        srcs = [s for s, _ in pairs]
+        tgts = [t for _, t in pairs]
+        if len(set(srcs)) != len(srcs):
+            dup = sorted({s for s in srcs if srcs.count(s) > 1})
+            raise LintViolation(
+                RULE, program, op.name,
+                f"collective-permute has duplicate source device(s) "
+                f"{dup} in source_target_pairs={list(pairs)} — a device "
+                "cannot issue two sends in one hop")
+        if len(set(tgts)) != len(tgts):
+            dup = sorted({t for t in tgts if tgts.count(t) > 1})
+            raise LintViolation(
+                RULE, program, op.name,
+                f"collective-permute has duplicate target device(s) "
+                f"{dup} in source_target_pairs={list(pairs)} — a device "
+                "cannot receive two messages in one hop")
+
+    # replica_groups must partition (no device in two groups)
+    for op in ops:
+        if not op.replica_groups or op.is_done:
+            continue
+        seen: Dict[int, int] = {}
+        for gi, g in enumerate(op.replica_groups):
+            for dev in g:
+                if dev in seen:
+                    raise LintViolation(
+                        RULE, program, op.name,
+                        f"{op.kind} replica_groups place device {dev} in "
+                        f"groups {seen[dev]} and {gi} — groups must be "
+                        "disjoint")
+                seen[dev] = gi
+    return RuleReport(rule=RULE, program=program, checked=len(ops))
+
+
+def assert_schedules_agree(schedules: Dict[str, Sequence[tuple]],
+                           program: str = "<program>") -> RuleReport:
+    """All participants extracted the same ordered collective schedule.
+    Keys name the participants (process ids, trace attempts); the error
+    names the first position where two schedules diverge."""
+    items = sorted(schedules.items())
+    if len(items) < 2:
+        return RuleReport(rule=RULE, program=program,
+                          checked=len(items and items[0][1]))
+    ref_name, ref = items[0]
+    for name, sched in items[1:]:
+        if len(sched) != len(ref):
+            raise LintViolation(
+                RULE, program, f"{ref_name} vs {name}",
+                f"collective counts diverge: {ref_name} issues "
+                f"{len(ref)} collectives, {name} issues {len(sched)}")
+        for i, (a, b) in enumerate(zip(ref, sched)):
+            if a != b:
+                raise LintViolation(
+                    RULE, program, f"schedule[{i}]",
+                    f"{ref_name} and {name} disagree at collective #{i}: "
+                    f"{a[0]}{a[1]} vs {b[0]}{b[1]} — a cross-process "
+                    "launch of this pair would deadlock")
+    return RuleReport(rule=RULE, program=program,
+                      checked=len(ref) * len(items))
+
+
+def compare_collective_counts(recorded: Dict[str, dict],
+                              fresh: Dict[str, dict],
+                              program: str = "<artifact>") -> RuleReport:
+    """Per-kind collective COUNTS of a committed artifact vs. a fresh
+    compile of the same (arch, shape, mesh, transport). Byte fields are
+    excluded on purpose: they move with dtype-table fixes (this PR's
+    satellite) without the schedule changing."""
+    kinds = sorted(set(recorded) | set(fresh))
+    for kind in kinds:
+        r = int(recorded.get(kind, {}).get("count", 0))
+        f = int(fresh.get(kind, {}).get("count", 0))
+        if r != f:
+            raise LintViolation(
+                RULE, program, kind,
+                f"committed artifact records {r} {kind} op(s) but a "
+                f"fresh compile issues {f} — the artifact is stale; "
+                "re-run `python -m repro.launch.dryrun`")
+    return RuleReport(rule=RULE, program=program, checked=len(kinds))

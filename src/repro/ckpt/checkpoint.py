@@ -4,8 +4,7 @@ from __future__ import annotations
 
 import json
 import os
-import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +40,7 @@ import numpy as np
 
 from repro import compat
 from repro import sparse as sparse_rows
+from repro.analysis.hostsync import allowed_host_sync
 from repro.core import risk as risk_lib
 from repro.core.svm import (BinarySVM, SolverParams, SVMConfig,
                             decision_kernel, decision_linear, fit_binary)
@@ -269,7 +270,10 @@ def fit_mapreduce(X: jax.Array, y: jax.Array, num_partitions: int,
     for t in range(cfg.max_rounds):
         out = _round_jit(Xp, yp, maskp, sv, params, cfg=cfg)
         sv = out.sv
-        risks = np.asarray(out.risks)
+        # eq. 8's designed device→host sync point: sanctioned for the
+        # host-sync lint (DESIGN.md §14) by name, right where it happens.
+        with allowed_host_sync("eq. 8 risk readback"):
+            risks = np.asarray(out.risks)
         l_star = int(np.argmin(risks))
         r_star = float(risks[l_star])
         if r_star < best[0]:

@@ -37,6 +37,7 @@ Two execution modes mirror :mod:`repro.core.mapreduce_svm`:
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import NamedTuple, Optional, Sequence, Tuple
 
@@ -45,6 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
+from repro.analysis.hostsync import allowed_host_sync
+from repro.analysis.retrace import no_retrace
 from repro import sparse as sparse_rows
 from repro.core.mapreduce_svm import (MRSVMConfig, SVBuffer,
                                       _device_risks, _round_candidates,
@@ -135,7 +138,7 @@ def _freeze(done: np.ndarray, old, new):
 
 def _run_rounds(step, svb, d: int, cfg: MRSVMConfig,
                 params: SolverParams, verbose: bool, tag: str,
-                snapshot=None):
+                snapshot=None, fail_on_retrace: bool = False):
     """Shared eq. 8-masked host round loop of both sweep modes.
 
     ``step(svb, eff_params) -> (sv_new, r_star (S,), ws (S, d), bs (S,))``
@@ -154,6 +157,16 @@ def _run_rounds(step, svb, d: int, cfg: MRSVMConfig,
     per-config (S, cap, …) buffer ONLY on rounds where a config
     converges (its frozen view) and on the last active round, keeping
     the expansion off the per-round hot path.
+
+    Invariant hooks (DESIGN.md §14): the per-round device→host
+    readbacks (risks, improved hypotheses) are the loop's DESIGNED sync
+    points and run under ``allowed_host_sync``, so a caller-armed
+    ``no_implicit_host_sync`` guard passes them while catching any
+    stray transfer. ``fail_on_retrace`` arms the retrace detector on
+    every round past the first: steady-state rounds must hit the jit
+    cache (round 0 compiles; a convergence round's ``snapshot``
+    expansion is off the hot path by design and stays outside the
+    guard).
     """
     S = _num_configs(params)
     done = np.zeros(S, bool)
@@ -166,20 +179,26 @@ def _run_rounds(step, svb, d: int, cfg: MRSVMConfig,
     frozen = None if snapshot is not None else svb
     inf = jnp.asarray(np.inf, params.tol.dtype)
     for t in range(cfg.max_rounds):
-        dmask = jnp.asarray(done)
-        eff = params._replace(
-            tol=jnp.where(dmask, inf, params.tol),
-            max_epochs=jnp.where(dmask, 0.0, params.max_epochs))
-        sv_new, r_star, ws, bs = step(svb, eff)
-        if snapshot is None:
-            frozen = _freeze(done, frozen, sv_new)
-        svb = frozen if snapshot is None else sv_new
-        r_star = np.asarray(r_star)
+        guard = (no_retrace(f"[{tag}] steady-state round {t}")
+                 if fail_on_retrace and t >= 1
+                 else contextlib.nullcontext())
+        with guard:
+            dmask = jnp.asarray(done)
+            eff = params._replace(
+                tol=jnp.where(dmask, inf, params.tol),
+                max_epochs=jnp.where(dmask, 0.0, params.max_epochs))
+            sv_new, r_star, ws, bs = step(svb, eff)
+            if snapshot is None:
+                frozen = _freeze(done, frozen, sv_new)
+            svb = frozen if snapshot is None else sv_new
+            with allowed_host_sync("eq. 8 convergence readback"):
+                r_star = np.asarray(r_star)
         act = ~done
         improved = act & (r_star < best_risk)
         if improved.any():
-            best_w[improved] = np.asarray(ws)[improved]
-            best_b[improved] = np.asarray(bs)[improved]
+            with allowed_host_sync("improved-hypothesis readback"):
+                best_w[improved] = np.asarray(ws)[improved]
+                best_b[improved] = np.asarray(bs)[improved]
             best_risk = np.where(improved, r_star, best_risk)
         rounds[act] += 1
         history.append({"round": t, "risks": np.where(act, r_star, np.nan),
@@ -233,7 +252,8 @@ def _sweep_final_jit(svb: SVBuffer, params: SolverParams, cfg):
 def fit_mapreduce_sweep(X: jax.Array, y: jax.Array, num_partitions: int,
                         cfg: MRSVMConfig, params: SolverParams,
                         mask: Optional[jax.Array] = None,
-                        verbose: bool = False) -> SweepResult:
+                        verbose: bool = False,
+                        fail_on_retrace: bool = False) -> SweepResult:
     """Run S MapReduce-SVM jobs in one batched computation.
 
     Every data input is either shared or carries a leading (S,) job
@@ -281,7 +301,8 @@ def fit_mapreduce_sweep(X: jax.Array, y: jax.Array, num_partitions: int,
                                 cfg=cfg, x_ax=x_ax, m_ax=m_ax)
 
     svb, best_risk, best_w, best_b, rounds, history = _run_rounds(
-        step, svb, d, cfg, params, verbose, "sweep")
+        step, svb, d, cfg, params, verbose, "sweep",
+        fail_on_retrace=fail_on_retrace)
 
     # Final consolidated models: retrain each config on its SV_global.
     final = _sweep_final_jit(svb, params, cfg=cfg)
@@ -839,7 +860,8 @@ class ShardedSweep(NamedTuple):
 def run_sharded_sweep(round_fn, X: jax.Array, y: jax.Array,
                       mask: Optional[jax.Array], cfg: MRSVMConfig,
                       params: SolverParams,
-                      verbose: bool = False) -> ShardedSweep:
+                      verbose: bool = False,
+                      fail_on_retrace: bool = False) -> ShardedSweep:
     """Host round loop over :func:`build_sharded_sweep_round` with the
     same per-config eq. 8 masking as :func:`fit_mapreduce_sweep`.
     When ``round_fn`` was built with ``per_config_data``, pass
@@ -865,11 +887,13 @@ def run_sharded_sweep(round_fn, X: jax.Array, y: jax.Array,
     def step(sv_b, eff):
         sv_new, risks, ws, bs = round_fn(X, y, mask, sv_b, eff)
         # (ws, bs) are already the per-config best-reducer picks.
-        return sv_new, np.asarray(risks).min(axis=1), ws, bs
+        with allowed_host_sync("per-reducer risk readback"):
+            risks = np.asarray(risks)
+        return sv_new, risks.min(axis=1), ws, bs
 
     svb, best_risk, best_w, best_b, rounds, history = _run_rounds(
         step, svb, d, cfg, params, verbose, "sharded-sweep",
-        snapshot=snapshot)
+        snapshot=snapshot, fail_on_retrace=fail_on_retrace)
     return ShardedSweep(risks=jnp.asarray(best_risk), ws=jnp.asarray(best_w),
                         bs=jnp.asarray(best_b), sv=svb, rounds=rounds,
                         history=history)

@@ -23,7 +23,6 @@ budget with double buffering.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 from repro import compat
 

@@ -17,7 +17,6 @@ SSM sequence terms are counted explicitly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
 
 from repro.models.config import ModelConfig
 

@@ -19,72 +19,51 @@ Caveat recorded in EXPERIMENTS.md: ops inside while-loop (scan) bodies
 appear ONCE in the text; dryrun's --measure pass compiles a standalone
 single layer to recover per-trip counts (collective_total =
 full + (L-1)·layer).
+
+Extraction is delegated to the hardened parser in
+:mod:`repro.analysis.hlo` (ISSUE 8): structured :class:`CollectiveOp`
+records with full replica_groups / source_target_pairs / start-done
+pairing, shared with the collective-schedule lint rule — the roofline
+gate and the deadlock checker read the SAME ops. Unknown dtypes no
+longer silently drop out of the byte math: they warn once and count at
+a conservative 4-byte fallback.
 """
 from __future__ import annotations
 
-import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
+from repro.analysis import hlo as hlo_parser
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
+# Byte widths kept for external readers of this module; the parser's
+# bit-level table (repro.analysis.hlo._DTYPE_BITS) is the source of
+# truth and additionally covers the sub-byte types (u4/s4, fp8 family).
 _DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16,
+    dt: max(1, bits // 8) for dt, bits in hlo_parser._DTYPE_BITS.items()
 }
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
-_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-_OP_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<out>\([^=]*?\)|[\w.\-]+\[[\d,]*\]"
-    r"(?:\{[\d,]*\})?)\s+(?P<op>[\w\-]+)\(", re.M)
-
 
 def _tensor_sizes(type_str: str) -> List[int]:
-    out = []
-    for dt, dims in _TYPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        out.append(n * _DTYPE_BYTES[dt])
-    return out
-
-
-def _group_size(line: str) -> int:
-    m = _GROUPS_BRACE_RE.search(line)
-    if m:
-        return len(m.group(1).split(","))
-    m = _GROUPS_IOTA_RE.search(line)
-    if m:
-        return int(m.group(2))
-    return 1
+    """Byte sizes of every tensor in an HLO type string. Unknown dtypes
+    warn once and count at a conservative fallback (never skipped: a
+    silent skip undercounts the perf gate's wire bytes)."""
+    return hlo_parser.tensor_nbytes(type_str)
 
 
 def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
     """Per-kind {count, operand_bytes, output_bytes, wire_bytes}."""
     stats: Dict[str, Dict[str, float]] = {}
-    lines = hlo_text.splitlines()
-    for line in lines:
-        m = _OP_RE.match(line)
-        if not m:
+    for op in hlo_parser.parse_collective_ops(hlo_text):
+        if op.is_done or op.kind not in _COLLECTIVES:
             continue
-        op = m.group("op")
-        base = next((c for c in _COLLECTIVES
-                     if op == c or op == c + "-start"), None)
-        if base is None:
+        biggest = op.max_nbytes
+        if not biggest:
             continue
-        sizes = _tensor_sizes(m.group("out"))
-        if not sizes:
-            continue
-        biggest = max(sizes)
-        g = max(_group_size(line), 1)
+        base = op.kind
+        g = max(op.group_size, 1)
         if base == "all-gather":
             operand, wire = biggest / g, biggest * (g - 1) / g
         elif base == "reduce-scatter":

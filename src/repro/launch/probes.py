@@ -11,7 +11,6 @@ plus its extra-trip multiplier for the given architecture.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -109,7 +108,7 @@ def build_probes(cfg: ModelConfig, mesh, shape: InputShape,
                       cfg.num_layers - 1)
         elif cfg.family == "hybrid":
             from repro.models import mamba2
-            from repro.models.layers import apply_norm, mlp_template, norm_template
+            from repro.models.layers import apply_norm, norm_template
 
             def mamba_fn(lp, h):
                 x = apply_norm(h, lp["norm"], cfg.norm_style, cfg.norm_eps)

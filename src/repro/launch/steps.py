@@ -281,7 +281,7 @@ def build_svm_round_step(svm_cfg, mesh,
     ring-pipelined transport per ``shuffle_impl`` (DESIGN.md §2/§10)."""
     import numpy as np
     from repro.core.mapreduce_svm import (MRSVMConfig, SVBuffer,
-                                          init_sv_buffer, make_sharded_round)
+                                          make_sharded_round)
 
     axes = batch_axes(mesh)
     ndev = int(np.prod([mesh.shape[a] for a in axes]))

@@ -32,7 +32,6 @@ from repro import optim
 from repro.ckpt import save
 from repro.configs import get_config
 from repro.data import DataConfig, lm_batch_at, svm_rows_shard
-from repro.launch import sharding as shd
 from repro.launch.cluster import (add_cluster_flags, cluster_config_from_args,
                                   init_cluster)
 from repro.launch.mesh import make_host_mesh

@@ -7,7 +7,7 @@ encoder (sinusoidal positions), causal decoder with cross-attention
 (learned positions), GELU MLPs, LayerNorms, biased projections."""
 from __future__ import annotations
 
-from typing import Dict, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.models import attention as attn_lib
 from repro.models.config import ModelConfig
 from repro.models.layers import (PSpec, apply_mlp, apply_norm,
-                                 chunked_lm_loss, cross_entropy_loss,
+                                 chunked_lm_loss,
                                  embed_template, embed_tokens, lm_logits,
                                  mlp_template, norm_template,
                                  template_abstract, template_axes,

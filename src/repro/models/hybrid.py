@@ -4,7 +4,7 @@ weights are reused at each application point; each application keeps
 its own KV cache during decode."""
 from __future__ import annotations
 
-from typing import Dict, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -12,8 +12,8 @@ import jax.numpy as jnp
 from repro.models import attention as attn_lib
 from repro.models import mamba2
 from repro.models.config import ModelConfig
-from repro.models.layers import (PSpec, apply_mlp, apply_norm,
-                                 chunked_lm_loss, cross_entropy_loss,
+from repro.models.layers import (apply_mlp, apply_norm,
+                                 chunked_lm_loss,
                                  embed_template, embed_tokens, lm_logits,
                                  mlp_template, norm_template,
                                  template_abstract, template_axes,

@@ -15,7 +15,7 @@ the MXU). Decode is the O(1) recurrence, so `long_500k` runs.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,7 @@
 """RWKV-6 full model (attention-free 'ssm' family)."""
 from __future__ import annotations
 
-from typing import Dict, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -9,7 +9,7 @@ import jax.numpy as jnp
 from repro.models import rwkv6
 from repro.models.config import ModelConfig
 from repro.models.layers import (apply_norm, chunked_lm_loss,
-                                 cross_entropy_loss, embed_template,
+                                 embed_template,
                                  embed_tokens, lm_logits, norm_template,
                                  template_abstract, template_axes,
                                  template_init)

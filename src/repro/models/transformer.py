@@ -13,9 +13,7 @@ compiles in the same budget as 6-layer whisper).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +22,7 @@ from repro.models import attention as attn_lib
 from repro.models import moe as moe_lib
 from repro.models.config import ModelConfig
 from repro.models.layers import (PSpec, apply_mlp, apply_norm,
-                                 chunked_lm_loss, cross_entropy_loss,
+                                 chunked_lm_loss,
                                  embed_template, embed_tokens, lm_logits,
                                  mlp_template, norm_template,
                                  template_abstract, template_axes,

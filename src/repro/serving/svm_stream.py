@@ -48,6 +48,7 @@ a handful of compiled programs.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -61,6 +62,7 @@ import numpy as np
 
 from repro import compat
 from repro import sparse as sparse_rows
+from repro.analysis.retrace import RetraceError, watch_compiles
 from repro.ckpt import checkpoint as ckpt
 from repro.core.mapreduce_svm import (MapReduceSVM, MRSVMConfig, SVBuffer,
                                       decision_values as mr_decision_values,
@@ -183,7 +185,8 @@ class StreamingSVMService:
                  shed_policy: str = "drop_oldest",
                  max_streams_per_wave: Optional[int] = None,
                  slo_s: Optional[float] = None,
-                 pad_wave_to_bucket: bool = True):
+                 pad_wave_to_bucket: bool = True,
+                 fail_on_retrace: bool = False):
         # ``shuffle_impl`` overrides the SV merge transport of the
         # config (DESIGN.md §10). The functional folds this host-local
         # service runs have no collective, but the config is the single
@@ -210,6 +213,13 @@ class StreamingSVMService:
         # first), ``slo_s`` counts latency-SLO violations, and
         # ``pad_wave_to_bucket`` pads the job axis to the next power of
         # two so any tenant count reuses log2 compiled sweep programs.
+        # ``fail_on_retrace`` arms the invariant linter's retrace
+        # detector (DESIGN.md §14): a STEADY-STATE fold — one whose
+        # exact input signature (bucket width, row padding, formats)
+        # already compiled in this service's lifetime — must hit the
+        # jit cache; any compile inside it raises ``RetraceError``
+        # naming the recompiled program. First-time signatures warm the
+        # cache freely.
         if shed_policy not in ("drop_oldest", "reject"):
             raise ValueError(f"unknown shed_policy {shed_policy!r} "
                              "(expected 'drop_oldest' or 'reject')")
@@ -225,6 +235,9 @@ class StreamingSVMService:
         self.max_streams_per_wave = max_streams_per_wave
         self.slo_s = slo_s
         self.pad_wave_to_bucket = pad_wave_to_bucket
+        self.fail_on_retrace = fail_on_retrace
+        self._fold_signatures: set = set()
+        self._retraces = 0
         self.shed: List[MicroBatch] = []
         self._requeued = 0
         self._slo_violations = 0
@@ -561,9 +574,13 @@ class StreamingSVMService:
                         # single tenant: the plain incremental round
                         s = group[0]
                         snap, batches, Xn, yn = joined[s]
-                        model = update_mapreduce(snap.model, Xn, yn,
-                                                 self.L, self.cfg,
-                                                 params=snap.params)
+                        sig = self._fold_signature(
+                            "single", Xn, yn, snap.model.sv)
+                        with self._retrace_guard(
+                                sig, f"run_wave single-tenant fold {s}"):
+                            model = update_mapreduce(snap.model, Xn, yn,
+                                                     self.L, self.cfg,
+                                                     params=snap.params)
                         self._swap(s, model, snap.params)
                         swapped.append(s)
                     else:
@@ -601,6 +618,32 @@ class StreamingSVMService:
                 if self._waves_since_ckpt >= self.checkpoint_every_waves:
                     self.checkpoint()
             return st
+
+    @contextlib.contextmanager
+    def _retrace_guard(self, signature: tuple, label: str):
+        """Steady-state jit-cache tripwire around one fold
+        (DESIGN.md §14). The signature — every folded leaf's
+        (shape, dtype) plus the driver width — identifies a compiled
+        program family; the first fold of a signature warms the cache,
+        any later fold of the SAME signature that still compiles is a
+        retrace bug and raises :class:`RetraceError`."""
+        if not self.fail_on_retrace:
+            self._fold_signatures.add(signature)
+            yield
+            return
+        first = signature not in self._fold_signatures
+        with watch_compiles() as stats:
+            yield
+        self._fold_signatures.add(signature)
+        if not first and stats.count:
+            self._retraces += stats.count
+            raise RetraceError(label, stats.events)
+
+    @staticmethod
+    def _fold_signature(kind: str, *trees) -> tuple:
+        leaves = jax.tree_util.tree_leaves(trees)
+        return (kind,) + tuple((tuple(a.shape), str(a.dtype))
+                               for a in leaves)
 
     def _fold_groups(self, names, joined) -> List[List[str]]:
         """Partition admitted streams into stackable fold groups.
@@ -692,8 +735,11 @@ class StreamingSVMService:
         mb_ = jnp.stack(ms)                      # (S', n_max)
         params_b = stack_params(ps)
 
-        res = fit_mapreduce_sweep(Xb, yb, self.L, self.cfg, params_b,
-                                  mask=mb_)
+        sig = self._fold_signature("batched", Xb, yb, mb_, params_b)
+        with self._retrace_guard(
+                sig, f"run_wave batched fold ({len(names)} streams)"):
+            res = fit_mapreduce_sweep(Xb, yb, self.L, self.cfg, params_b,
+                                      mask=mb_)
         for i, s in enumerate(names):            # padding jobs dropped
             snap = joined[s][0]
             model = MapReduceSVM(
@@ -810,4 +856,6 @@ class StreamingSVMService:
             "shed": len(self.shed),
             "requeued": self._requeued,
             "slo_violations": self._slo_violations,
+            "fold_programs": len(self._fold_signatures),
+            "retraces": self._retraces,
         }

@@ -10,7 +10,7 @@ tf×idf weighting is a gather of ``idf`` at each row's column ids.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,373 @@
+"""repro.analysis unit tier (ISSUE 8): the HLO parser against synthetic
+post-SPMD text fixtures, each rule family against hand-seeded positives
+and negatives, and (slow tier) the ``python -m repro.analysis.lint``
+CLI as a subprocess. The full builder matrix lives in `make lint-jax`;
+here each rule is exercised in isolation so a regression names the
+broken rule, not the whole matrix."""
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import analysis
+from repro.analysis import LintViolation
+from conftest import subprocess_env
+
+# ---------------------------------------------------------------- parser
+
+# shapes of real post-SPMD HLO: column-0 computation headers, indented
+# ops, ROOT prefixes, async start/done pairs, both replica_groups forms
+_HLO_FIXTURE = """\
+HloModule jit_step, entry_computation_layout={()->f32[8]{0}}
+
+%region_0.11 (arg0: f32[8], arg1: f32[8]) -> f32[8] {
+  %arg0 = f32[8]{0} parameter(0)
+  %arg1 = f32[8]{0} parameter(1)
+  ROOT %add.1 = f32[8]{0} add(%arg0, %arg1)
+}
+
+%while_body.20 (p: (f32[8], u32[])) -> (f32[8], u32[]) {
+  %p = (f32[8]{0}, u32[]) parameter(0)
+  %gte = f32[8]{0} get-tuple-element(%p), index=0
+  %cp.1 = f32[8]{0} collective-permute(%gte), channel_id=3, source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  ROOT %tup = (f32[8]{0}, u32[]) tuple(%cp.1, %gte)
+}
+
+%while_cond.30 (p: (f32[8], u32[])) -> pred[] {
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main.42 (arg: f32[2,8]) -> f32[8] {
+  %arg = f32[2,8]{1,0} parameter(0)
+  %ag-start = (f32[2,8]{1,0}, f32[8,8]{1,0}) all-gather-start(%arg), channel_id=1, replica_groups=[2,4]<=[8], dimensions={0}
+  %ag-done = f32[8,8]{1,0} all-gather-done(%ag-start)
+  %ar.5 = f32[8]{0} all-reduce(%ag-done), channel_id=2, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%region_0.11
+  %wh = (f32[8]{0}, u32[]) while((f32[8]{0}, u32[]) %init), condition=%while_cond.30, body=%while_body.20
+  ROOT %rs.9 = f32[1]{0} reduce-scatter(%ar.5), channel_id=4, replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}, to_apply=%region_0.11
+}
+"""
+
+
+def test_parse_collective_ops_fixture():
+    ops = analysis.parse_collective_ops(_HLO_FIXTURE)
+    kinds = [(op.kind, op.is_start, op.is_done) for op in ops]
+    assert kinds == [
+        ("collective-permute", False, False),
+        ("all-gather", True, False),
+        ("all-gather", False, True),
+        ("all-reduce", False, False),
+        ("reduce-scatter", False, False),
+    ]
+    by_name = {op.name: op for op in ops}
+    # tuple-typed async start yields BOTH element shapes
+    ag = by_name["ag-start"]
+    assert ag.shapes == (("f32", (2, 8)), ("f32", (8, 8)))
+    assert ag.iota_groups == (4, 2)          # group_size=4, 2 groups
+    assert ag.group_size == 4
+    # brace-form groups
+    ar = by_name["ar.5"]
+    assert ar.replica_groups == ((0, 1, 2, 3), (4, 5, 6, 7))
+    assert ar.channel_id == 2
+    # permute pairs + computation attribution inside the while body
+    cp = by_name["cp.1"]
+    assert cp.source_target_pairs == ((0, 1), (1, 2), (2, 3), (3, 0))
+    assert cp.computation == "while_body.20"
+    # ROOT-prefixed op still parses
+    rs = by_name["rs.9"]
+    assert rs.kind == "reduce-scatter"
+    assert rs.computation == "main.42"
+
+
+def test_while_body_computations():
+    assert analysis.while_body_computations(_HLO_FIXTURE) == frozenset(
+        {"while_body.20", "while_cond.30"})
+
+
+def test_tensor_shapes_tuple_and_token():
+    shapes = analysis.tensor_shapes("(f32[2,8]{1,0}, u32[], token[])")
+    # token[] carries no dims and parses as an empty-shape pseudo-tensor
+    assert ("f32", (2, 8)) in shapes and ("u32", ()) in shapes
+
+
+def test_tensor_nbytes_subbyte_and_f8():
+    assert analysis.dtype_nbits("f8e4m3fn") == 8
+    assert analysis.dtype_nbits("u4") == 4
+    # 9 u4 elements round up to 5 whole bytes
+    assert analysis.tensor_nbytes("u4[9]") == [5]
+    assert analysis.tensor_nbytes("bf16[4,4]") == [32]
+
+
+def test_unknown_dtype_warns_and_overcounts():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        sizes = analysis.tensor_nbytes("f6e3m2[64]")
+    # conservative 32-bit fallback: overcount, never a silent skip
+    assert sizes == [256]
+    assert any("unknown dtype" in str(x.message) for x in w)
+    # warned once per dtype, not per call
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        analysis.tensor_nbytes("f6e3m2[64]")
+    assert not [x for x in w2 if "f6e3m2" in str(x.message)]
+
+
+def test_hlo_analysis_delegates_to_parser():
+    from repro.launch.hlo_analysis import collective_stats
+    stats = collective_stats(_HLO_FIXTURE)
+    # the -done half is not double-counted
+    assert stats["all-gather"]["count"] == 1
+    assert stats["collective-permute"]["count"] == 1
+    assert stats["all-reduce"]["count"] == 1
+    assert stats["reduce-scatter"]["count"] == 1
+    # all-gather wire at g=4: out*(g-1)/g of the 256-byte gathered block
+    assert stats["all-gather"]["wire_bytes"] == pytest.approx(256 * 3 / 4)
+
+
+# ------------------------------------------------------------- schedule
+
+def test_check_schedule_ok():
+    report = analysis.check_schedule(_HLO_FIXTURE, program="fixture")
+    assert report.checked == 5
+
+
+def test_check_schedule_dangling_start():
+    text = _HLO_FIXTURE.replace(
+        "  %ag-done = f32[8,8]{1,0} all-gather-done(%ag-start)\n", "")
+    with pytest.raises(LintViolation) as ei:
+        analysis.check_schedule(text, program="fixture")
+    assert ei.value.rule == "collective-schedule"
+    assert "never consumed" in str(ei.value)
+
+
+def test_check_schedule_duplicate_permute_target():
+    text = _HLO_FIXTURE.replace("{{0,1},{1,2},{2,3},{3,0}}",
+                                "{{0,1},{1,2},{2,1},{3,0}}")
+    with pytest.raises(LintViolation) as ei:
+        analysis.check_schedule(text, program="fixture")
+    assert "duplicate target device(s) [1]" in str(ei.value)
+
+
+def test_check_schedule_overlapping_groups():
+    text = _HLO_FIXTURE.replace("replica_groups={{0,1,2,3},{4,5,6,7}}",
+                                "replica_groups={{0,1,2,3},{3,5,6,7}}")
+    with pytest.raises(LintViolation) as ei:
+        analysis.check_schedule(text, program="fixture")
+    assert "device 3" in str(ei.value) and "disjoint" in str(ei.value)
+
+
+def test_schedules_agree_and_diverge():
+    sched = analysis.collective_schedule(_HLO_FIXTURE)
+    assert len(sched) == 4                   # -done excluded
+    analysis.assert_schedules_agree({"p0": sched, "p1": sched})
+    with pytest.raises(LintViolation) as ei:
+        analysis.assert_schedules_agree({"p0": sched, "p1": sched[:-1]})
+    assert "counts diverge" in str(ei.value)
+    swapped = (sched[1], sched[0]) + sched[2:]
+    with pytest.raises(LintViolation) as ei:
+        analysis.assert_schedules_agree({"p0": sched, "p1": swapped})
+    assert ei.value.op == "schedule[0]"
+
+
+def test_compare_collective_counts_stale():
+    fresh = {"all-gather": {"count": 2, "wire_bytes": 1.0}}
+    analysis.compare_collective_counts(
+        {"all-gather": {"count": 2, "wire_bytes": 999.0}}, fresh)
+    with pytest.raises(LintViolation) as ei:
+        analysis.compare_collective_counts(
+            {"all-gather": {"count": 3}}, fresh, program="artifact")
+    assert "stale" in str(ei.value) and ei.value.program == "artifact"
+
+
+# -------------------------------------------------------------- retrace
+
+def test_no_retrace_catches_per_call_jit():
+    x = jnp.arange(8.0)
+    with pytest.raises(analysis.RetraceError) as ei:
+        with analysis.no_retrace(program="steady"):
+            # the classic bug: a fresh jit wrapper per call never hits
+            # the cache
+            jax.jit(lambda v: v * 2.0)(x).block_until_ready()
+    assert ei.value.rule == "retrace"
+    assert ei.value.program == "steady"
+    assert ei.value.events                   # names the compiled fn
+
+
+def test_no_retrace_allow_absorbs_warmup():
+    x = jnp.arange(8.0)
+    f = jax.jit(lambda v: v + 1.5)
+    with analysis.no_retrace(program="warmup", allow=1) as stats:
+        f(x).block_until_ready()             # first call compiles
+        f(x).block_until_ready()             # cache hit
+    assert stats.count <= 1
+
+
+def test_watch_compiles_counts_zero_on_cache_hit():
+    f = jax.jit(lambda v: v - 3.0)
+    x = jnp.arange(4.0)
+    f(x).block_until_ready()                 # compile outside the watch
+    with analysis.watch_compiles() as stats:
+        f(x).block_until_ready()
+    assert stats.count == 0
+
+
+# ------------------------------------------------------------ host-sync
+
+def test_check_no_host_callbacks_flags_debug_callback():
+    def bad(v):
+        jax.debug.callback(lambda a: None, v)
+        return v * 2
+
+    with pytest.raises(LintViolation) as ei:
+        analysis.check_no_host_callbacks(bad, (jnp.zeros(4),),
+                                         program="hot-loop")
+    assert ei.value.rule == "host-sync"
+    assert "callback" in ei.value.op
+
+    report = analysis.check_no_host_callbacks(
+        bad, (jnp.zeros(4),), program="hot-loop",
+        allow=("debug_callback",))
+    assert [a.op for a in report.allowed] == ["debug_callback"]
+
+
+def test_check_no_host_callbacks_clean_program():
+    report = analysis.check_no_host_callbacks(
+        lambda v: jnp.tanh(v) @ v, (jnp.zeros((4, 4)),), program="clean")
+    assert report.checked >= 1 and not report.allowed
+
+
+def test_runtime_guard_fires_where_enforced():
+    x = jnp.ones(4)
+    if not analysis.host_guards_enforced():
+        # CPU backend: buffers are host-resident, the guard physically
+        # cannot fire — the static layer above is the check here.
+        with analysis.no_implicit_host_sync():
+            np.asarray(x)
+        return
+    with pytest.raises(Exception):
+        with analysis.no_implicit_host_sync():
+            np.asarray(x)
+    with analysis.no_implicit_host_sync():
+        with analysis.allowed_host_sync("designed readback"):
+            np.asarray(x)
+
+
+# ----------------------------------------------------------- dense leak
+
+def test_dense_materialization_flags_full_block():
+    d = 512
+
+    def bad(idx):
+        return jnp.zeros((d, d)) + idx        # full dense block
+
+    with pytest.raises(LintViolation) as ei:
+        analysis.check_no_dense_materialization(
+            bad, (jnp.float32(1),), d=d, program="sparse-serve")
+    assert ei.value.rule == "dense-materialization"
+    assert "(512, 512)" in str(ei.value)
+
+
+def test_dense_materialization_allows_chunked_densify():
+    d = 512
+
+    def chunked(idx):
+        return jnp.zeros((64, d)) + idx       # cross_dots-sized scratch
+
+    report = analysis.check_no_dense_materialization(
+        chunked, (jnp.float32(1),), d=d, program="sparse-serve")
+    assert report.checked >= 1
+
+
+def test_memory_ceiling_on_compiled_program():
+    compiled = jax.jit(lambda v: v * 2.0).lower(jnp.zeros(64)).compile()
+    report = analysis.check_memory_ceiling(
+        compiled, limit_bytes=1 << 20, program="tiny")
+    # either the backend reports temp bytes under the roomy ceiling or
+    # it exposes no memory_analysis and the rule says so
+    assert report.checked == 1 or "memory_analysis" in (report.note or "")
+
+
+# ---------------------------------------------------------- dtype drift
+
+def test_dtype_drift_flags_tainted_downcast():
+    def bad(alpha):
+        return (alpha.astype(jnp.bfloat16) * 2).astype(jnp.float32)
+
+    with pytest.raises(LintViolation) as ei:
+        analysis.check_no_dtype_drift(
+            bad, (jnp.ones(8),), taint=[True], program="round")
+    assert ei.value.rule == "dtype-drift"
+    assert "float32" in str(ei.value) and "bfloat16" in str(ei.value)
+
+
+def test_dtype_drift_ignores_untainted_downcast():
+    def mixed(alpha, rows):
+        return alpha * 2.0, rows.astype(jnp.bfloat16)
+
+    report = analysis.check_no_dtype_drift(
+        mixed, (jnp.ones(8), jnp.ones(8)), taint=[True, False],
+        program="round")
+    assert report.checked >= 2
+
+
+def test_dtype_drift_wire_pack_allowlisted():
+    from repro.core.mapreduce_svm import pack_wire_rows
+
+    def pack(alpha_rows):
+        flat, _ = pack_wire_rows(alpha_rows.astype(jnp.bfloat16),
+                                 jnp.bfloat16)
+        return flat
+
+    report = analysis.check_no_dtype_drift(
+        pack, (jnp.ones((4, 8)),), taint=[True], program="ring-pack")
+    assert any("wire pack" in a.reason for a in report.allowed)
+
+
+def test_dtype_drift_caller_allow_lines():
+    def bad(alpha):
+        return alpha.astype(jnp.bfloat16)
+
+    with pytest.raises(LintViolation):
+        analysis.check_no_dtype_drift(
+            bad, (jnp.ones(8),), taint=[True], program="round")
+    report = analysis.check_no_dtype_drift(
+        bad, (jnp.ones(8),), taint=[True], program="round",
+        allow_lines=("test_analysis.py",))
+    assert any("caller allowlist" in a.reason for a in report.allowed)
+
+
+def test_dtype_drift_through_scan_carry():
+    def loop(alpha):
+        def body(c, _):
+            return c.astype(jnp.bfloat16).astype(jnp.float32), ()
+        out, _ = jax.lax.scan(body, alpha, None, length=3)
+        return out
+
+    with pytest.raises(LintViolation) as ei:
+        analysis.check_no_dtype_drift(
+            loop, (jnp.ones(8),), taint=[True], program="sweep")
+    assert ei.value.rule == "dtype-drift"
+
+
+# --------------------------------------------------- lint CLI (slow)
+
+@pytest.mark.slow
+def test_lint_cli_self_test():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "--self-test"],
+        env=subprocess_env(), capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK seeded [retrace]" in proc.stdout
+    assert "all invariant rules passed" in proc.stdout
+
+
+@pytest.mark.slow
+def test_lint_cli_full_matrix():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint"],
+        env=subprocess_env(), capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "all invariant rules passed" in proc.stdout

@@ -1,5 +1,4 @@
 """Property tests for model building blocks (hypothesis + targeted)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

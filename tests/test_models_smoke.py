@@ -10,7 +10,6 @@ import pytest
 
 from repro import optim
 from repro.configs import ARCH_IDS, get_config
-from repro.data import DataConfig, lm_batch_at
 from repro.models.config import smoke_variant
 from repro.models.transformer import build_model
 

@@ -1,7 +1,5 @@
 """Serving scheduler: wave batching, completion, determinism."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config

@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import (KernelConfig, SVMConfig, decision_kernel,
                         decision_linear, fit_binary)
-from repro.core.svm import fit_binary_kernel, fit_binary_linear
+from repro.core.svm import fit_binary_kernel
 
 
 def _separable(n=200, d=10, margin=0.5, seed=0):

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.text import (CLASS_NEG, CLASS_POS, CorpusConfig, TURKISH_STOPWORDS,
+from repro.text import (CorpusConfig, TURKISH_STOPWORDS,
                         chi2_scores, fit_idf, fit_transform, generate,
                         hash_token, normalize, tokenize, transform, vectorize)
 
