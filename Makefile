@@ -6,7 +6,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-dist test-dist-mp test-fast lint lint-jax lint-artifacts check
+.PHONY: test test-dist test-dist-mp test-chaos test-fast lint lint-jax lint-artifacts check
 
 # Tier-1: the ROADMAP verify command.
 test:
@@ -26,6 +26,19 @@ test-dist:
 # (ISSUE 5 / DESIGN.md §11, §13).
 test-dist-mp:
 	$(PY) -m pytest -q tests/test_multihost.py
+
+# Chaos (ISSUE 9 / DESIGN.md §15): the deterministic fault-injection
+# sweep — every armed plan must be SURVIVED (bit-for-bit vs the
+# fault-free run) or DETECTED (typed FaultDetected naming layer,
+# cause, operator action); never a hang, never a silent wrong answer.
+# Then the 2-process leg: SIGKILL a peer (stranded survivor exits
+# typed via the collective watchdog, code 17), corrupt the newest
+# snapshot generation, restart through a flaky handshake and converge
+# from the previous intact generation.
+test-chaos:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) -m repro.faults.chaos --seeds 0,1,2
+	$(PY) -m pytest -q tests/test_multihost.py -k chaos
 
 # Quick signal while iterating (skips the slow dry-run subprocess tests).
 test-fast:

@@ -1,2 +1,8 @@
-from repro.ckpt.checkpoint import (atomic_write_json, latest_path,
-                                   latest_step, restore, save)
+from repro.ckpt.checkpoint import (CorruptCheckpointError,
+                                   atomic_write_json, file_crc32,
+                                   latest_path, latest_step,
+                                   leaf_checksums, restore, save)
+
+__all__ = ["CorruptCheckpointError", "atomic_write_json", "file_crc32",
+           "latest_path", "latest_step", "leaf_checksums", "restore",
+           "save"]

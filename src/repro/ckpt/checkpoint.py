@@ -1,19 +1,44 @@
 """Flat-npz pytree checkpointing (the framework's fault-tolerance layer;
-stands in for HDFS durability in the paper's Hadoop deployment)."""
+stands in for HDFS durability in the paper's Hadoop deployment).
+
+Hardening (DESIGN.md §15): writes are crash-durable (tmp file fsync'd,
+directory fsync'd after the rename — a power cut at the wrong instant
+can't leave a zero-length file installed), retried with backoff on
+``OSError``, and content-addressed: ``save`` returns the written
+file's crc32 and, with ``step``, records it in a monotonically-growing
+``generations`` list in ``ckpt_meta.json`` (keep-last-N, older media
+GC'd). ``latest_step``/``latest_path`` verify the recorded crc32
+newest-first and SKIP corrupt generations, so a flipped bit in the
+newest snapshot falls back to the previous intact one instead of
+restoring silently wrong state.
+"""
 from __future__ import annotations
 
 import json
 import os
+import zlib
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
+
 _SEP = "||"
 
 
 _BF16 = "__bf16__"
+
+_META = "ckpt_meta.json"
+
+# generations kept per checkpoint directory (satellite knob; callers
+# override per save)
+DEFAULT_KEEP = 3
+
+
+class CorruptCheckpointError(ValueError):
+    """A stored leaf failed its recorded content checksum."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -28,31 +53,137 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
-def atomic_write_json(path: str, payload: Any) -> None:
-    """Write JSON via tmp + rename: readers see the old file or the new
-    one, never a torn write (the same guarantee ``save`` gives npz)."""
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(payload, f)
-    os.replace(tmp, path)
+def _fsync_dir(dirname: str) -> None:
+    """Best-effort directory fsync: makes the rename itself durable
+    (POSIX persists a replace only once the directory entry is synced;
+    some filesystems refuse O_RDONLY dir fsync — then we did our best)."""
+    try:
+        fd = os.open(dirname or ".", os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
-def save(path: str, tree: Any, step: Optional[int] = None) -> None:
-    """Atomic save (write tmp → rename)."""
+def file_crc32(path: str) -> int:
+    """crc32 of the file's bytes (chunked; zlib — no new deps)."""
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                return crc
+            crc = zlib.crc32(chunk, crc)
+
+
+def leaf_checksums(tree: Any) -> Dict[str, int]:
+    """crc32 per flat leaf key, computed over the STORED byte view
+    (bf16 leaves checksum their u16 wire form) — recorded alongside a
+    save so :func:`restore` can verify each payload independently of
+    the npz container."""
+    return {key: zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            for key, arr in _flatten(tree).items()}
+
+
+def atomic_write_json(path: str, payload: Any, attempts: int = 3,
+                      on_retry=None) -> None:
+    """Write JSON via tmp + fsync + rename: readers see the old file or
+    the new one, never a torn OR empty write (the same guarantee
+    ``save`` gives npz). Retries transient ``OSError`` with backoff;
+    exhaustion raises a typed ``FaultDetected("ckpt", ...)``."""
+    def write():
+        faults.maybe_raise("ckpt.write", kinds=("ckpt_write_fail",))
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        _fsync_dir(os.path.dirname(path))
+
+    faults.retry_with_backoff(
+        write, attempts=attempts, base_s=0.02, retry_on=OSError,
+        on_retry=on_retry, layer="ckpt",
+        cause=f"manifest write {os.path.basename(path)}",
+        action="check disk space/permissions; the previously installed "
+               "manifest is still intact")
+
+
+def save(path: str, tree: Any, step: Optional[int] = None,
+         keep: int = DEFAULT_KEEP, attempts: int = 3,
+         on_retry=None) -> int:
+    """Atomic, durable save (write tmp → fsync → rename → dir fsync).
+
+    Returns the crc32 of the written bytes — the content address a
+    manifest records so a later restore can verify the medium. With
+    ``step`` the directory's ``ckpt_meta.json`` gains a generation
+    record ``{step, file, crc32}``; only the newest ``keep``
+    generations are retained and older npz files are GC'd (unless a
+    kept generation still references them).
+    """
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    tmp = path + ".tmp"
-    np.savez(tmp, **_flatten(tree))
-    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    flat = _flatten(tree)
+
+    def write() -> int:
+        faults.maybe_raise("ckpt.write", kinds=("ckpt_write_fail",))
+        tmp = path + ".tmp"
+        np.savez(tmp, **flat)
+        actual = tmp if tmp.endswith(".npz") else tmp + ".npz"
+        with open(actual, "rb") as f:
+            os.fsync(f.fileno())
+        # crc of the INTENDED bytes, before the media-corruption seam:
+        # a chaos-corrupted file must MISmatch its recorded crc, which
+        # is exactly how restore detects it and falls back.
+        crc = file_crc32(actual)
+        spec = faults.fire("ckpt.media", kinds=("ckpt_corrupt",))
+        if spec is not None:
+            faults.corrupt_file(actual, spec)
+        os.replace(actual, path)
+        _fsync_dir(os.path.dirname(path))
+        return crc
+
+    crc = faults.retry_with_backoff(
+        write, attempts=attempts, base_s=0.02, retry_on=OSError,
+        on_retry=on_retry, layer="ckpt",
+        cause=f"snapshot write {os.path.basename(path)}",
+        action="check disk space/permissions; the previous snapshot "
+               "generation is still intact")
     if step is not None:
-        # The meta pointer is what every restore reads first — it must
-        # be replaced atomically too, or a crash mid-write leaves the
-        # whole directory unrestorable despite intact npz files.
-        meta = os.path.join(os.path.dirname(path) or ".", "ckpt_meta.json")
-        atomic_write_json(
-            meta, {"latest_step": step, "file": os.path.basename(path)})
+        _record_generation(os.path.dirname(path) or ".", step,
+                           os.path.basename(path), crc, keep, on_retry)
+    return crc
 
 
-def restore(path: str, like: Any) -> Any:
+def _record_generation(ckpt_dir: str, step: int, fname: str, crc: int,
+                       keep: int, on_retry=None) -> None:
+    """Append a generation to the meta pointer, prune to ``keep``, GC
+    dropped media. The meta keeps the flat ``latest_step``/``file``
+    fields too, so pre-generation readers stay compatible."""
+    meta = _read_meta(ckpt_dir) or {}
+    gens = [g for g in meta.get("generations", [])
+            if g.get("file") != fname]
+    gens.append({"step": step, "file": fname, "crc32": crc})
+    dropped, gens = (gens[:-keep], gens[-keep:]) if keep >= 1 \
+        else ([], gens)
+    atomic_write_json(
+        os.path.join(ckpt_dir, _META),
+        {"latest_step": step, "file": fname, "generations": gens},
+        on_retry=on_retry)
+    kept_files = {g["file"] for g in gens}
+    for g in dropped:
+        if g["file"] not in kept_files:
+            try:
+                os.remove(os.path.join(ckpt_dir, g["file"]))
+            except OSError:
+                pass
+
+
+def restore(path: str, like: Any,
+            checksums: Optional[Dict[str, int]] = None) -> Any:
     """Restore into the structure of ``like`` (validates shapes/dtypes).
 
     Dtype drift raises instead of casting: a checkpoint restores
@@ -60,6 +191,11 @@ def restore(path: str, like: Any) -> Any:
     resumed run diverge from the uninterrupted one). The bf16 u16-view
     round-trip is transparent — a bf16 leaf restored into a bf16
     ``like`` passes.
+
+    With ``checksums`` (a :func:`leaf_checksums` record) every stored
+    leaf's bytes are verified before adoption; a mismatch raises
+    :class:`CorruptCheckpointError` — corrupt payload never restores
+    silently.
     """
     data = np.load(path, allow_pickle=False)
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
@@ -67,11 +203,21 @@ def restore(path: str, like: Any) -> Any:
     for path_elems, leaf in paths:
         key = _SEP.join(str(p) for p in path_elems)
         if key + _BF16 in data:
-            arr = data[key + _BF16].view(jnp.bfloat16)
+            skey = key + _BF16
+            raw = data[skey]
+            arr = raw.view(jnp.bfloat16)
         elif key in data:
-            arr = data[key]
+            skey = key
+            raw = arr = data[key]
         else:
             raise KeyError(f"checkpoint missing leaf {key!r}")
+        if checksums is not None and skey in checksums:
+            got = zlib.crc32(np.ascontiguousarray(raw).tobytes())
+            if got != checksums[skey]:
+                raise CorruptCheckpointError(
+                    f"checksum mismatch for leaf {skey!r} in "
+                    f"{os.path.basename(path)} — the snapshot payload "
+                    "is corrupt")
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(
                 f"shape mismatch for {key}: ckpt {arr.shape} vs {leaf.shape}")
@@ -105,19 +251,55 @@ def with_dtypes(like: Any, dtypes: Dict[str, str]) -> Any:
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
-    meta = os.path.join(ckpt_dir, "ckpt_meta.json")
+def _read_meta(ckpt_dir: str) -> Optional[dict]:
+    meta = os.path.join(ckpt_dir, _META)
     if not os.path.exists(meta):
         return None
-    with open(meta) as f:
-        return json.load(f).get("latest_step")
+    try:
+        with open(meta) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None                     # unreadable pointer ≡ no pointer
+
+
+def _newest_intact(ckpt_dir: str, meta: dict) -> Optional[dict]:
+    """The newest generation whose medium verifies against its
+    recorded crc32; corrupt/missing generations are skipped (counted
+    as ``ckpt_fallbacks``). Pre-generation flat metas have no recorded
+    crc — the pointer is trusted as before."""
+    gens = meta.get("generations")
+    if gens is None:
+        if meta.get("file") is None:
+            return None
+        return {"step": meta.get("latest_step"), "file": meta["file"]}
+    for rec in reversed(gens):
+        p = os.path.join(ckpt_dir, rec["file"])
+        if not os.path.exists(p):
+            faults.count("ckpt_fallbacks")
+            continue
+        crc = rec.get("crc32")
+        if crc is not None and file_crc32(p) != crc:
+            faults.count("ckpt_fallbacks")
+            continue
+        return rec
+    return None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    meta = _read_meta(ckpt_dir)
+    if meta is None:
+        return None
+    rec = _newest_intact(ckpt_dir, meta)
+    return rec.get("step") if rec is not None else None
 
 
 def latest_path(ckpt_dir: str) -> Optional[str]:
-    """Path of the checkpoint the meta pointer names, or ``None``."""
-    meta = os.path.join(ckpt_dir, "ckpt_meta.json")
-    if not os.path.exists(meta):
+    """Path of the newest INTACT checkpoint generation (crc32-verified
+    when recorded), or ``None``."""
+    meta = _read_meta(ckpt_dir)
+    if meta is None:
         return None
-    with open(meta) as f:
-        name = json.load(f).get("file")
-    return os.path.join(ckpt_dir, name) if name else None
+    rec = _newest_intact(ckpt_dir, meta)
+    if rec is None or not rec.get("file"):
+        return None
+    return os.path.join(ckpt_dir, rec["file"])

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
+from repro import faults
 from repro import sparse as sparse_rows
 from repro.analysis.hostsync import allowed_host_sync
 from repro.core import risk as risk_lib
@@ -94,6 +95,14 @@ class MRSVMConfig:
     shuffle_wire_dtype: str = "bfloat16"  # ring: SV feature-row wire dtype
     sweep_dedup: bool = True              # ring sweep: cross-config dedup
     dedup_max_unique: Optional[int] = None  # unique slots/chunk; None=lossless
+    # Ring wire-integrity check (DESIGN.md §15): each hop's coalesced
+    # message carries one extra f32 lane holding the int32 wrap-sum of
+    # its bitcast payload; a receiver-side mismatch poisons the round's
+    # risks to +inf, which the host driver turns into a typed
+    # FaultDetected at its eq. 8 readback. Off by default — the lane
+    # changes the compiled program, and the committed dry-run artifacts
+    # record the unchecked transport.
+    shuffle_wire_check: bool = False
 
     def __post_init__(self):
         if self.shuffle_impl not in ("allgather", "ring"):
@@ -268,12 +277,30 @@ def fit_mapreduce(X: jax.Array, y: jax.Array, num_partitions: int,
     history = []
     rounds_done = 0
     for t in range(cfg.max_rounds):
-        out = _round_jit(Xp, yp, maskp, sv, params, cfg=cfg)
+        # transport seams (DESIGN.md §15): a delayed round completes
+        # late but EXACTLY (survived bit-for-bit); a transiently failing
+        # merge is retried with backoff — only the injected
+        # TransientFault retries, real solver errors surface at once.
+        faults.maybe_sleep("transport.round", when=t)
+
+        def run_round():
+            faults.maybe_raise("transport.merge",
+                               kinds=("transport_exc",), when=t)
+            return _round_jit(Xp, yp, maskp, sv, params, cfg=cfg)
+
+        out = faults.retry_with_backoff(
+            run_round, attempts=3, base_s=0.05,
+            retry_on=faults.TransientFault, layer="transport",
+            cause=f"merge collective at round {t}",
+            action="check inter-host links; a persistent failure means "
+                   "the mesh lost a member — restart from the last "
+                   "checkpoint")
         sv = out.sv
         # eq. 8's designed device→host sync point: sanctioned for the
         # host-sync lint (DESIGN.md §14) by name, right where it happens.
         with allowed_host_sync("eq. 8 risk readback"):
             risks = np.asarray(out.risks)
+        faults.check_finite_risks(risks, where=f"mapreduce round {t}")
         l_star = int(np.argmin(risks))
         r_star = float(risks[l_star])
         if r_star < best[0]:
@@ -514,12 +541,25 @@ def _ring_merge(cand: SVBuffer, w, b, Xl, cfg: MRSVMConfig, axes,
         w.astype(f32), b.reshape(1).astype(f32)])
     o_x = k * wslots
     o_w = o_x + 4 * k
+    if cfg.shuffle_wire_check:
+        # Integrity lane (DESIGN.md §15): the int32 wrap-sum of the
+        # bitcast message rides as one trailing f32 lane. Every slice
+        # below addresses the message by offset from the front, so the
+        # lane is invisible to assembly; the receiver re-sums each
+        # arrived chunk after the roll.
+        csum = jnp.sum(jax.lax.bitcast_convert_type(side, jnp.int32))
+        side = jnp.concatenate(
+            [side, jax.lax.bitcast_convert_type(csum.reshape(1), f32)])
     L = side.shape[0]
     msgs = []
     part_scores = []
     cur = side
     for t in range(ndev):
-        nxt = compat.ring_shift(cur, axes) if t < ndev - 1 else None
+        # faults.garble_wire is the trace-time chaos seam: a no-op
+        # (bit-identical program) unless a ring_garble plan is armed
+        # while this round is being BUILT.
+        nxt = (faults.garble_wire(compat.ring_shift(cur, axes), hop=t)
+               if t < ndev - 1 else None)
         msgs.append(cur)
         wt, bt = cur[o_w:o_w + d], cur[o_w + d]
         part_scores.append((Xl @ wt + bt).astype(w.dtype))  # eq. 7 stage
@@ -544,7 +584,14 @@ def _ring_merge(cand: SVBuffer, w, b, Xl, cfg: MRSVMConfig, axes,
     W = M[:, o_w:o_w + d]                            # (ndev, d)
     B = M[:, o_w + d]                                # (ndev,)
     scores = jnp.roll(jnp.stack(part_scores[::-1]), idx + 1, axis=0).T
-    return sv_acc, W, B, scores
+    if cfg.shuffle_wire_check:
+        got = jax.lax.bitcast_convert_type(M[:, L - 1], jnp.int32)
+        want = jnp.sum(
+            jax.lax.bitcast_convert_type(M[:, :L - 1], jnp.int32), axis=1)
+        wire_ok = jnp.all(got == want)
+    else:
+        wire_ok = None
+    return sv_acc, W, B, scores, wire_ok
 
 
 def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
@@ -591,8 +638,8 @@ def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
         cand, w, b = _round_candidates(Xl, yl, ml, sv, cfg, axes, idx,
                                        k, per, params)
         if cfg.shuffle_impl == "ring":
-            new_sv, W, B, scores = _ring_merge(cand, w, b, Xl, cfg, axes,
-                                               num_devices, k)
+            new_sv, W, B, scores, wire_ok = _ring_merge(
+                cand, w, b, Xl, cfg, axes, num_devices, k)
         else:
             new_sv = compat.tree_map(
                 lambda a: compat.all_gather(a, axes, tiled=True), cand)
@@ -600,7 +647,13 @@ def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
             W = compat.all_gather(w, axes)                  # (ndev, d)
             B = compat.all_gather(b, axes)                  # (ndev,)
             scores = Xl @ W.T + B[None, :]                  # (per, ndev)
+            wire_ok = None
         risks = _device_risks(scores, yl, ml, cfg, axes)
+        if wire_ok is not None:
+            # wire-checksum sentinel: the host driver's eq. 8 readback
+            # sees +inf and raises FaultDetected("transport", ...)
+            risks = jnp.where(wire_ok, risks,
+                              jnp.full_like(risks, jnp.inf))
         l_star = jnp.argmin(risks)
         return new_sv, risks, W[l_star], B[l_star]
 

@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import compat
+from repro import compat, faults
 from repro.analysis.hostsync import allowed_host_sync
 from repro.analysis.retrace import no_retrace
 from repro import sparse as sparse_rows
@@ -194,6 +194,8 @@ def _run_rounds(step, svb, d: int, cfg: MRSVMConfig,
             with allowed_host_sync("eq. 8 convergence readback"):
                 r_star = np.asarray(r_star)
         act = ~done
+        faults.check_finite_risks(r_star, where=f"{tag} round {t}",
+                                  mask=act)
         improved = act & (r_star < best_risk)
         if improved.any():
             with allowed_host_sync("improved-hypothesis readback"):

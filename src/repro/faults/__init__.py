@@ -1,0 +1,24 @@
+"""Deterministic fault injection + the hardening primitives it drives
+(DESIGN.md §15). ``python -m repro.faults.chaos`` is the seed-sweep
+harness (``make test-chaos``); :mod:`repro.faults.chaos` is imported
+lazily there, never from here (it imports the layers under attack)."""
+from repro.faults.plan import (KINDS, FaultDetected, FaultPlan, FaultSpec,
+                               InjectedFault, InjectedWriteError,
+                               TransientFault, active, check_finite_risks,
+                               corrupt_file, count, counters, fire,
+                               garble_wire, inject, maybe_raise,
+                               maybe_sleep, poison_batch, reset_counters,
+                               set_active)
+from repro.faults.retry import retry_with_backoff
+from repro.faults.watchdog import (WATCHDOG_EXIT_CODE, CollectiveWatchdog,
+                                   exit_handler)
+
+__all__ = [
+    "KINDS", "FaultDetected", "FaultPlan", "FaultSpec", "InjectedFault",
+    "InjectedWriteError", "TransientFault", "active",
+    "check_finite_risks", "corrupt_file", "count", "counters", "fire",
+    "garble_wire", "inject", "maybe_raise", "maybe_sleep",
+    "poison_batch", "reset_counters", "set_active",
+    "retry_with_backoff", "WATCHDOG_EXIT_CODE", "CollectiveWatchdog",
+    "exit_handler",
+]

@@ -1,0 +1,474 @@
+"""Seed-sweep chaos harness (``make test-chaos``).
+
+Runs every fault scenario under a deterministic :class:`FaultPlan` per
+seed and asserts the survived-vs-detected contract (DESIGN.md §15):
+
+* **survived** — transient faults (delayed round, flaky merge call,
+  failed checkpoint write, flaky coordinator handshake, a killed wave
+  scheduler, poisoned rows behind quarantine) are absorbed by the
+  hardening and the result is BIT-FOR-BIT the fault-free one;
+* **detected** — corrupting/terminal faults (garbled ring wire,
+  corrupted snapshot media, a stalled collective) raise a typed
+  :class:`FaultDetected` naming layer + cause — or demonstrably fall
+  back to the newest intact checkpoint generation;
+* never a hang (the whole sweep runs under its own self-protective
+  :class:`CollectiveWatchdog`), never a silent wrong answer.
+
+Usage::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.faults.chaos --seeds 0,1,2
+
+The harness forces 8 faked host devices itself when launched before
+jax's first import, so a bare ``python -m repro.faults.chaos`` works
+too. Exit status 0 iff every scenario met its expected outcome.
+
+NOT imported from :mod:`repro.faults` — this module imports the layers
+under attack (core, ckpt, serving), which import ``repro.faults``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+from repro.faults.plan import (FaultDetected, FaultPlan, InjectedFault,
+                               counters, inject, reset_counters)
+from repro.faults.watchdog import CollectiveWatchdog
+
+NDEV = 8
+
+
+def _ensure_devices() -> None:
+    """Force 8 faked host devices BEFORE jax's first backend init (the
+    count locks at first use; a harness that silently ran on 1 device
+    would skip every sharded scenario)."""
+    if "jax" in sys.modules:
+        return
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    xf = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in xf:
+        os.environ["XLA_FLAGS"] = \
+            (xf + f" --xla_force_host_platform_device_count={NDEV}").strip()
+
+
+# ---------------------------------------------------------------------------
+# shared fixtures (built once, reused across seeds)
+# ---------------------------------------------------------------------------
+
+class Ctx:
+    """Lazily-built clean references the scenarios diff against."""
+
+    def __init__(self):
+        self._cache = {}
+
+    def problem(self):
+        if "problem" not in self._cache:
+            import jax
+            import jax.numpy as jnp
+            X = jax.random.normal(jax.random.PRNGKey(0), (256, 16))
+            w = jax.random.normal(jax.random.PRNGKey(1), (16,))
+            y = jnp.sign(X @ w)
+            self._cache["problem"] = (X, y)
+        return self._cache["problem"]
+
+    def cfg(self):
+        if "cfg" not in self._cache:
+            from repro.core import MRSVMConfig, SVMConfig
+            self._cache["cfg"] = MRSVMConfig(
+                sv_capacity=64, max_rounds=3, gamma=1e-4,
+                svm=SVMConfig(C=1.0, max_epochs=10))
+        return self._cache["cfg"]
+
+    def clean_model(self):
+        """Fault-free functional fit — the bit-for-bit oracle."""
+        if "clean" not in self._cache:
+            from repro.core.mapreduce_svm import fit_mapreduce
+            X, y = self.problem()
+            self._cache["clean"] = fit_mapreduce(X, y, NDEV, self.cfg())
+        return self._cache["clean"]
+
+    def ring_cfg(self, wire_check: bool):
+        import dataclasses as dc
+        return dc.replace(self.cfg(), shuffle_impl="ring",
+                          shuffle_wire_dtype="float32",
+                          shuffle_wire_check=wire_check)
+
+    def mesh(self):
+        if "mesh" not in self._cache:
+            from repro import compat
+            self._cache["mesh"] = compat.make_mesh((NDEV,), ("data",))
+        return self._cache["mesh"]
+
+
+def _model_leaves(m):
+    import numpy as np
+    return {"w": np.asarray(m.w), "b": np.asarray(m.b),
+            "alpha": np.asarray(m.final.alpha),
+            "fw": np.asarray(m.final.w), "fb": np.asarray(m.final.b),
+            "ids": np.asarray(m.sv.ids), "mask": np.asarray(m.sv.mask),
+            "svx": np.asarray(m.sv.x)}
+
+
+def _assert_bitwise_equal(got, want, what: str) -> None:
+    import numpy as np
+    a, b = _model_leaves(got), _model_leaves(want)
+    for k in a:
+        if not np.array_equal(a[k], b[k]):
+            raise AssertionError(
+                f"{what}: leaf {k!r} differs from the fault-free run "
+                "— the fault was absorbed but NOT bit-for-bit")
+
+
+# ---------------------------------------------------------------------------
+# scenarios — each returns a detail string on the expected outcome and
+# raises AssertionError on a contract violation
+# ---------------------------------------------------------------------------
+
+def scenario_delay_round(seed: int, ctx: Ctx) -> str:
+    """delay_round → SURVIVED: a stalled round completes late but the
+    converged model is bit-identical to the fault-free run."""
+    from repro.core.mapreduce_svm import fit_mapreduce
+    X, y = ctx.problem()
+    plan = FaultPlan.single("delay_round", seed)
+    t0 = time.monotonic()
+    with inject(plan) as armed:
+        m = fit_mapreduce(X, y, NDEV, ctx.cfg())
+    assert armed.fired, "the delay never fired (dead seam)"
+    _assert_bitwise_equal(m, ctx.clean_model(), "delay_round")
+    return (f"slept at round {plan.specs[0].when}, "
+            f"+{time.monotonic() - t0:.2f}s wall, model bit-identical")
+
+
+def scenario_transport_exc(seed: int, ctx: Ctx) -> str:
+    """transport_exc → SURVIVED: the merge call fails transiently 1-2×
+    and retry-with-backoff absorbs it; model bit-identical."""
+    from repro.core.mapreduce_svm import fit_mapreduce
+    X, y = ctx.problem()
+    plan = FaultPlan.single("transport_exc", seed)
+    before = counters().get("retries", 0)
+    with inject(plan) as armed:
+        m = fit_mapreduce(X, y, NDEV, ctx.cfg())
+    assert sum(armed.remaining) == 0, "injected failures not all raised"
+    retried = counters().get("retries", 0) - before
+    assert retried >= plan.specs[0].count, \
+        f"expected ≥{plan.specs[0].count} retries, saw {retried}"
+    _assert_bitwise_equal(m, ctx.clean_model(), "transport_exc")
+    return f"{retried} retries absorbed, model bit-identical"
+
+
+def scenario_wire_check_clean(seed: int, ctx: Ctx) -> str:
+    """No fault, integrity lane ON → the checked ring reproduces the
+    unchecked ring bit-for-bit (the lane is free when honest)."""
+    import numpy as np
+    from repro.core.mapreduce_svm import (build_sharded_round,
+                                          init_sv_buffer)
+    from repro.faults.plan import check_finite_risks
+    X, y = ctx.problem()
+    n, d = X.shape
+    import jax.numpy as jnp
+    mask = jnp.ones((n,))
+    outs = []
+    for wire_check in (False, True):
+        cfg = ctx.ring_cfg(wire_check)
+        fn = build_sharded_round(ctx.mesh(), ("data",), cfg, n // NDEV)
+        sv = init_sv_buffer(cfg.sv_capacity, d)
+        for _ in range(2):
+            sv, risks, w, b = fn(X, y, mask, sv)
+        check_finite_risks(risks, where="clean checked ring")
+        outs.append((np.asarray(risks), np.asarray(sv.ids),
+                     np.asarray(sv.x), np.asarray(w)))
+    for a, b2 in zip(outs[0], outs[1]):
+        assert np.array_equal(a, b2), \
+            "integrity lane changed the clean ring's results"
+    return "checked ring ≡ unchecked ring bit-for-bit, risks finite"
+
+
+def scenario_ring_garble(seed: int, ctx: Ctx) -> str:
+    """ring_garble → DETECTED: one mantissa bit flipped on one ring hop
+    is caught by the wire checksum — FaultDetected names transport."""
+    from repro.core.mapreduce_svm import (build_sharded_round,
+                                          init_sv_buffer)
+    from repro.faults.plan import check_finite_risks
+    import jax.numpy as jnp
+    X, y = ctx.problem()
+    n, d = X.shape
+    mask = jnp.ones((n,))
+    cfg = ctx.ring_cfg(True)
+    plan = FaultPlan.single("ring_garble", seed)
+    with inject(plan) as armed:
+        # garble is a TRACE-time seam: the plan must be armed while the
+        # round program is built+first-traced (fresh build per seed)
+        fn = build_sharded_round(ctx.mesh(), ("data",), cfg, n // NDEV)
+        sv = init_sv_buffer(cfg.sv_capacity, d)
+        sv, risks, w, b = fn(X, y, mask, sv)
+    assert armed.fired, "the garble never baked into the trace"
+    try:
+        check_finite_risks(risks, where="garbled ring round")
+    except FaultDetected as e:
+        assert e.layer == "transport", f"wrong layer {e.layer!r}"
+        return (f"hop {plan.specs[0].when} garble caught: "
+                f"[{e.layer}] wire checksum sentinel")
+    raise AssertionError(
+        "garbled wire produced FINITE risks — silent corruption")
+
+
+def scenario_stall(seed: int, ctx: Ctx) -> str:
+    """stall → DETECTED: a body that stops beating trips the collective
+    watchdog; the heartbeat file records the typed diagnosis."""
+    import json
+    plan = FaultPlan.single("stall", seed)
+    hb = os.path.join(tempfile.mkdtemp(prefix="chaos_hb_"), "hb.json")
+    fired = []
+    with inject(plan):
+        with CollectiveWatchdog(0.25, heartbeat_path=hb,
+                                layer="transport",
+                                cause=f"seed {seed} stalled merge",
+                                on_timeout=fired.append) as wd:
+            time.sleep(0.7)            # stranded: no beat() arrives
+        try:
+            wd.check()
+        except FaultDetected as e:
+            assert e.layer == "transport"
+            with open(hb) as f:
+                status = json.load(f)
+            assert status["status"] == "timeout", status
+            return (f"watchdog fired after {status['elapsed_s']}s "
+                    "(deadline 0.25s), heartbeat says timeout")
+    raise AssertionError("stalled section did not trip the watchdog")
+
+
+def _service(cfg, ckpt_dir, **kw):
+    from repro.serving import StreamingSVMService
+    return StreamingSVMService(cfg, num_partitions=4,
+                               checkpoint_dir=ckpt_dir, **kw)
+
+
+def _register_stream(svc, ctx):
+    from repro.core.mapreduce_svm import fit_mapreduce
+    X, y = ctx.problem()
+    svc.register("t", fit_mapreduce(X, y, 4, ctx.cfg()))
+
+
+def scenario_ckpt_write_fail(seed: int, ctx: Ctx) -> str:
+    """ckpt_write_fail → SURVIVED: 1-2 injected write failures are
+    retried; the installed checkpoint restores bit-exact."""
+    from repro.serving import StreamingSVMService
+    d = tempfile.mkdtemp(prefix="chaos_ckpt_")
+    svc = _service(ctx.cfg(), d)
+    _register_stream(svc, ctx)
+    plan = FaultPlan.single("ckpt_write_fail", seed)
+    with inject(plan) as armed:
+        svc.checkpoint()
+    assert sum(armed.remaining) == 0, "write failures not all injected"
+    assert svc.throughput_report()["retries"] >= plan.specs[0].count
+    svc2 = StreamingSVMService.restore(ctx.cfg(), d)
+    _assert_bitwise_equal(svc2.snapshot("t").model,
+                          svc.snapshot("t").model, "ckpt_write_fail")
+    return (f"{svc.throughput_report()['retries']} write retries, "
+            "restore bit-exact")
+
+
+def scenario_ckpt_corrupt(seed: int, ctx: Ctx) -> str:
+    """ckpt_corrupt → DETECTED + FALLBACK: the newest generation's
+    medium is corrupted in flight; restore skips it (crc mismatch) and
+    comes back from the previous intact generation."""
+    import numpy as np
+    from repro.core.mapreduce_svm import update_mapreduce
+    from repro.serving import StreamingSVMService
+    X, y = ctx.problem()
+    d = tempfile.mkdtemp(prefix="chaos_ckpt_")
+    svc = _service(ctx.cfg(), d)
+    _register_stream(svc, ctx)          # generation 0 (intact)
+    w_gen0 = np.asarray(svc.snapshot("t").model.w)
+    # advance the model, then checkpoint generation 1 under corruption
+    m1 = update_mapreduce(svc.snapshot("t").model, X[:64], y[:64], 4,
+                          ctx.cfg())
+    svc._swap("t", m1, None)
+    plan = FaultPlan.single("ckpt_corrupt", seed)
+    with inject(plan) as armed:
+        svc.checkpoint()
+    assert armed.fired, "the media corruption never fired"
+    svc2 = StreamingSVMService.restore(ctx.cfg(), d)
+    assert svc2.restore_fallbacks >= 1, \
+        "restore trusted a corrupt newest generation"
+    got = np.asarray(svc2.snapshot("t").model.w)
+    assert np.array_equal(got, w_gen0), \
+        "fallback restored something other than the previous generation"
+    return ("gen 1 media corrupt → crc mismatch, fell back to intact "
+            "gen 0 bit-exact")
+
+
+def scenario_poison_rows(seed: int, ctx: Ctx) -> str:
+    """poison_rows → SURVIVED: the poisoned batch is quarantined at
+    submit(); the folded model is bit-identical to a clean-only fold."""
+    import jax.numpy as jnp
+    X, y = ctx.problem()
+    Xa, ya = X[:96], y[:96]
+    Xb, yb = X[96:192], y[96:192]
+
+    def fold(poison: bool):
+        svc = _service(ctx.cfg(), None)
+        _register_stream(svc, ctx)
+        if poison:
+            plan = FaultPlan.single("poison_rows", seed)
+            with inject(plan) as armed:
+                svc.submit("t", Xb, yb)     # poisoned → quarantined
+            assert armed.fired, "poison seam never fired"
+            assert svc.throughput_report()["quarantined"] == 1
+        svc.submit("t", Xa, ya)
+        svc.drain()
+        return svc
+
+    clean = fold(poison=False)
+    chaos = fold(poison=True)
+    assert jnp.isfinite(chaos.snapshot("t").model.w).all()
+    _assert_bitwise_equal(chaos.snapshot("t").model,
+                          clean.snapshot("t").model, "poison_rows")
+    return "1 batch quarantined, model ≡ clean-only fold bit-for-bit"
+
+
+def scenario_scheduler_kill(seed: int, ctx: Ctx) -> str:
+    """scheduler_kill → SURVIVED after restart: the wave dies, its
+    batches requeue at the HEAD, the retry wave folds them exactly
+    once — model ≡ an uninterrupted fold."""
+    X, y = ctx.problem()
+    Xa, ya = X[:96], y[:96]
+
+    svc_ref = _service(ctx.cfg(), None)
+    _register_stream(svc_ref, ctx)
+    svc_ref.submit("t", Xa, ya)
+    svc_ref.drain()
+
+    svc = _service(ctx.cfg(), None)
+    _register_stream(svc, ctx)
+    svc.submit("t", Xa, ya)
+    plan = FaultPlan.single("scheduler_kill", seed)
+    with inject(plan):
+        try:
+            svc.run_wave()
+            raise AssertionError("injected scheduler death did not kill "
+                                 "the wave")
+        except InjectedFault:
+            pass
+    assert svc.pending() == 1, "dead wave's batch was not requeued"
+    assert svc.throughput_report()["requeued"] == 1
+    svc.drain()                          # the restarted scheduler's wave
+    _assert_bitwise_equal(svc.snapshot("t").model,
+                          svc_ref.snapshot("t").model, "scheduler_kill")
+    return "wave died, batch requeued, refolded exactly once bit-exact"
+
+
+def scenario_handshake_flake(seed: int, ctx: Ctx) -> str:
+    """handshake_flake → SURVIVED: the coordinator handshake flaps 1-2×
+    and the bounded retry in init_cluster's wrapper absorbs it (the
+    REAL init_cluster path runs in the 2-process chaos leg of
+    tests/test_multihost.py)."""
+    from repro.faults.retry import retry_with_backoff
+    from repro.faults.plan import maybe_raise, TransientFault
+    plan = FaultPlan.single("handshake_flake", seed)
+    calls = []
+
+    def handshake():
+        maybe_raise("cluster.handshake", kinds=("handshake_flake",))
+        calls.append(1)
+
+    with inject(plan) as armed:
+        retry_with_backoff(handshake, attempts=3, base_s=0.01,
+                           retry_on=TransientFault, layer="cluster",
+                           cause="coordinator handshake")
+    assert calls == [1], "handshake did not complete exactly once"
+    assert sum(armed.remaining) == 0
+    return (f"{plan.specs[0].count} flakes absorbed, "
+            "handshake completed once")
+
+
+SCENARIOS = [
+    ("delay_round", "survived", scenario_delay_round),
+    ("transport_exc", "survived", scenario_transport_exc),
+    ("wire_check_clean", "survived", scenario_wire_check_clean),
+    ("ring_garble", "detected", scenario_ring_garble),
+    ("stall", "detected", scenario_stall),
+    ("ckpt_write_fail", "survived", scenario_ckpt_write_fail),
+    ("ckpt_corrupt", "detected", scenario_ckpt_corrupt),
+    ("poison_rows", "survived", scenario_poison_rows),
+    ("scheduler_kill", "survived", scenario_scheduler_kill),
+    ("handshake_flake", "survived", scenario_handshake_flake),
+]
+
+
+def main(argv=None) -> int:
+    _ensure_devices()
+    ap = argparse.ArgumentParser(
+        description="deterministic fault-injection sweep")
+    ap.add_argument("--seeds", default="0,1,2",
+                    help="comma-separated plan seeds")
+    ap.add_argument("--only", default=None,
+                    help="run only scenarios whose name contains this")
+    ap.add_argument("--deadline", type=float, default=240.0,
+                    help="per-scenario watchdog deadline (s) — the "
+                         "harness itself must never hang")
+    args = ap.parse_args(argv)
+    seeds = [int(s) for s in args.seeds.split(",") if s != ""]
+
+    import jax
+    if len(jax.devices()) < NDEV:
+        print(f"chaos: need {NDEV} devices for the sharded scenarios, "
+              f"have {len(jax.devices())} — set XLA_FLAGS="
+              f"--xla_force_host_platform_device_count={NDEV}",
+              file=sys.stderr)
+        return 2
+
+    reset_counters()
+    rows = []
+    failures = 0
+    t_start = time.monotonic()
+    # The harness eats its own dogfood: every scenario runs under the
+    # watchdog, so a hung scenario exits 17 with a typed diagnosis
+    # instead of stranding CI.
+    with CollectiveWatchdog(args.deadline, layer="harness",
+                            cause="chaos scenario") as wd:
+        for seed in seeds:
+            for name, expect, fn in SCENARIOS:
+                if args.only and args.only not in name:
+                    continue
+                t0 = time.monotonic()
+                try:
+                    detail = fn(seed, _CTX)
+                    outcome, ok = expect, True
+                except AssertionError as e:
+                    outcome, ok, detail = "VIOLATED", False, str(e)
+                except BaseException as e:
+                    outcome, ok = "ERROR", False
+                    detail = f"{type(e).__name__}: {e}"
+                rows.append((seed, name, expect, outcome, ok,
+                             time.monotonic() - t0, detail))
+                failures += not ok
+                wd.beat()
+
+    width = max(len(r[1]) for r in rows) if rows else 10
+    print(f"\nchaos sweep: seeds={seeds} "
+          f"({time.monotonic() - t_start:.1f}s total)")
+    print(f"{'seed':>4}  {'scenario':<{width}}  {'expect':<9} "
+          f"{'outcome':<9} {'t(s)':>6}  detail")
+    for seed, name, expect, outcome, ok, dt, detail in rows:
+        mark = "ok " if ok else "FAIL"
+        print(f"{seed:>4}  {name:<{width}}  {expect:<9} "
+              f"{outcome:<9} {dt:>6.1f}  [{mark}] {detail}")
+    cts = {k: v for k, v in sorted(counters().items())}
+    print(f"counters: {cts}")
+    if failures:
+        print(f"chaos: {failures} scenario(s) violated the "
+              "survived-vs-detected contract", file=sys.stderr)
+        return 1
+    print("chaos: every fault survived bit-for-bit or was detected "
+          "and named — no hangs, no silent wrong answers")
+    return 0
+
+
+_CTX = Ctx()
+
+if __name__ == "__main__":
+    sys.exit(main())

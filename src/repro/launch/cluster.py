@@ -34,7 +34,7 @@ import dataclasses
 import os
 from typing import Optional, Sequence
 
-from repro import compat
+from repro import compat, faults
 
 # One process-wide runtime: jax.distributed can only initialize once,
 # so repeated init_cluster() calls return the same handle.
@@ -59,6 +59,12 @@ class ClusterConfig:
     local_device_count: Optional[int] = None
     cpu_collectives: str = "gloo"
     initialization_timeout: int = 120      # s; bounds a dead-peer hang
+    # Coordinator handshake retry (DESIGN.md §15): a restarted process
+    # often races the coordinator coming back up; a bounded
+    # retry-with-backoff turns that window into a survived transient
+    # instead of a launch failure.
+    handshake_retries: int = 3
+    handshake_backoff_s: float = 0.5
 
     def resolved(self) -> "ClusterConfig":
         """Fill unset fields from the environment (explicit args win)."""
@@ -205,11 +211,21 @@ def init_cluster(cfg: Optional[ClusterConfig] = None) -> Cluster:
                 "this JAX has no cross-process CPU collectives "
                 f"({cfg.cpu_collectives!r}); a multi-process CPU run "
                 "would hang at the first collective")
-    compat.distributed_initialize(
-        coordinator_address=cfg.coordinator,
-        num_processes=cfg.num_processes,
-        process_id=cfg.process_id,
-        initialization_timeout=cfg.initialization_timeout)
+    def handshake():
+        faults.maybe_raise("cluster.handshake", kinds=("handshake_flake",))
+        compat.distributed_initialize(
+            coordinator_address=cfg.coordinator,
+            num_processes=cfg.num_processes,
+            process_id=cfg.process_id,
+            initialization_timeout=cfg.initialization_timeout)
+
+    faults.retry_with_backoff(
+        handshake, attempts=cfg.handshake_retries,
+        base_s=cfg.handshake_backoff_s, layer="cluster",
+        cause=f"coordinator handshake with {cfg.coordinator}",
+        action="check that process 0 is reachable at the coordinator "
+               "address, then relaunch this process (the restarted "
+               "process rejoins from the last checkpoint)")
     _CLUSTER = Cluster(process_index=compat.process_index(),
                        process_count=compat.process_count(),
                        coordinator=cfg.coordinator)

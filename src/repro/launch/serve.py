@@ -69,19 +69,23 @@ def serve_svm(svm_cfg, args, cluster) -> None:
         y = jnp.sign((X @ w).astype(jnp.float32)).astype(dt)
         return X, y
 
+    hardening = dict(checkpoint_keep=args.checkpoint_keep,
+                     quarantine=not args.no_quarantine,
+                     fold_deadline_s=args.fold_deadline,
+                     heartbeat_path=args.heartbeat)
     if args.restore:
         if not args.checkpoint_dir:
             raise SystemExit("--restore requires --checkpoint-dir")
         svc = StreamingSVMService.restore(
             cfg, args.checkpoint_dir, cluster=cluster,
-            checkpoint_every_waves=args.checkpoint_every)
+            checkpoint_every_waves=args.checkpoint_every, **hardening)
         print(f"svm-serve: restored {len(svc.streams())} streams from "
               f"{args.checkpoint_dir}")
     else:
         svc = StreamingSVMService(
             cfg, num_partitions=L, max_batches_per_wave=args.streams,
             cluster=cluster, checkpoint_dir=args.checkpoint_dir,
-            checkpoint_every_waves=args.checkpoint_every)
+            checkpoint_every_waves=args.checkpoint_every, **hardening)
     print(f"svm-serve: {args.streams} streams × {rows} rows/wave, "
           f"{d} features, {L} partitions "
           f"(process {cluster.process_index}/{cluster.process_count})")
@@ -153,6 +157,20 @@ def main():
                     help="svm family: rebuild the service from the "
                          "latest manifest in --checkpoint-dir instead "
                          "of retraining stream models")
+    ap.add_argument("--checkpoint-keep", type=int, default=3,
+                    help="svm family: snapshot generations retained; "
+                         "restore falls back past corrupt ones "
+                         "(DESIGN.md §15)")
+    ap.add_argument("--no-quarantine", action="store_true",
+                    help="svm family: fold non-finite batches instead "
+                         "of diverting them at submit()")
+    ap.add_argument("--fold-deadline", type=float, default=None,
+                    help="svm family: watchdog deadline (s) per wave "
+                         "fold — a stranded collective exits the "
+                         "process with code 17 instead of hanging")
+    ap.add_argument("--heartbeat", default=None,
+                    help="svm family: path of the watchdog's JSON "
+                         "heartbeat file (operators poll it)")
     add_cluster_flags(ap)
     args = ap.parse_args()
 

@@ -60,7 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import compat
+from repro import compat, faults
 from repro import sparse as sparse_rows
 from repro.analysis.retrace import RetraceError, watch_compiles
 from repro.ckpt import checkpoint as ckpt
@@ -73,6 +73,16 @@ from repro.core.svm import BinarySVM, SolverParams
 from repro.core.sweep import fit_mapreduce_sweep, stack_params
 
 _MANIFEST = "service_manifest.json"
+
+
+def _all_finite(X, y) -> bool:
+    """Whether a micro-batch's features and labels are all finite —
+    the quarantine gate at the submit() boundary (DESIGN.md §15): one
+    NaN row folded into SV_global poisons the model for every later
+    reader, so the check runs once per batch, not per fold."""
+    vals = X.values if sparse_rows.is_sparse(X) else X
+    return bool(np.isfinite(np.asarray(vals)).all()
+                and np.isfinite(np.asarray(y)).all())
 
 
 def _snapshot_tree(snap: "ModelSnapshot") -> dict:
@@ -186,7 +196,12 @@ class StreamingSVMService:
                  max_streams_per_wave: Optional[int] = None,
                  slo_s: Optional[float] = None,
                  pad_wave_to_bucket: bool = True,
-                 fail_on_retrace: bool = False):
+                 fail_on_retrace: bool = False,
+                 checkpoint_keep: int = 3,
+                 quarantine: bool = True,
+                 fold_deadline_s: Optional[float] = None,
+                 heartbeat_path: Optional[str] = None,
+                 watchdog_handler=None):
         # ``shuffle_impl`` overrides the SV merge transport of the
         # config (DESIGN.md §10). The functional folds this host-local
         # service runs have no collective, but the config is the single
@@ -220,6 +235,14 @@ class StreamingSVMService:
         # jit cache; any compile inside it raises ``RetraceError``
         # naming the recompiled program. First-time signatures warm the
         # cache freely.
+        # Degraded-mode survival (DESIGN.md §15): ``checkpoint_keep``
+        # retains the last N snapshot *generations* (manifest format 2)
+        # so restore can fall back past a corrupt newest one;
+        # ``quarantine`` diverts non-finite batches at submit() instead
+        # of folding NaN into SV_global; ``fold_deadline_s`` arms a
+        # CollectiveWatchdog around each wave's folds (heartbeat at
+        # ``heartbeat_path``) — ``watchdog_handler`` overrides the
+        # default exit-the-process timeout handler for tests/harnesses.
         if shed_policy not in ("drop_oldest", "reject"):
             raise ValueError(f"unknown shed_policy {shed_policy!r} "
                              "(expected 'drop_oldest' or 'reject')")
@@ -236,9 +259,18 @@ class StreamingSVMService:
         self.slo_s = slo_s
         self.pad_wave_to_bucket = pad_wave_to_bucket
         self.fail_on_retrace = fail_on_retrace
+        self.checkpoint_keep = checkpoint_keep
+        self.quarantine = quarantine
+        self.fold_deadline_s = fold_deadline_s
+        self.heartbeat_path = heartbeat_path
+        self.watchdog_handler = watchdog_handler
         self._fold_signatures: set = set()
         self._retraces = 0
         self.shed: List[MicroBatch] = []
+        self.quarantined: List[MicroBatch] = []
+        self.restore_fallbacks = 0
+        self._retries = 0
+        self._watchdog_fires = 0
         self._requeued = 0
         self._slo_violations = 0
         self._waves_since_ckpt = 0
@@ -249,8 +281,19 @@ class StreamingSVMService:
         self._lock = threading.Lock()          # queues + snapshot refs
         self._cv = threading.Condition(self._lock)
         self._wave_lock = threading.Lock()     # serializes folds
+        self._ckpt_lock = threading.Lock()     # serializes checkpoints
         self._uid = 0
         self._wave = 0
+        # Generation counter resumes past an existing manifest so a new
+        # checkpoint NEVER reuses a file name a kept generation record
+        # still references (that would corrupt restorable history).
+        self._generation = 0
+        self._gen_records: List[dict] = []
+        if checkpoint_dir is not None:
+            man = self._read_manifest(checkpoint_dir)
+            if man is not None and man.get("format", 1) >= 2:
+                self._generation = int(man.get("generation", -1)) + 1
+                self._gen_records = list(man.get("generations", []))
         self.done: List[MicroBatch] = []
         self.stats: List[StreamWaveStats] = []
         self._thread: Optional[threading.Thread] = None
@@ -318,77 +361,158 @@ class StreamingSVMService:
         kwargs.setdefault("max_batches_per_wave",
                           man["max_batches_per_wave"])
         svc = cls(cfg, checkpoint_dir=checkpoint_dir, **kwargs)
-        for stream in sorted(man["streams"]):
-            meta = man["streams"][stream]
-            like = _abstract_snapshot_tree(cfg, meta["d"], meta["nnz_cap"],
-                                           meta["has_params"],
-                                           meta["dtypes"])
-            tree = ckpt.restore(
-                os.path.join(checkpoint_dir, meta["file"]), like)
-            model = MapReduceSVM(
-                w=tree["model"]["w"], b=tree["model"]["b"],
-                sv=SVBuffer(**tree["model"]["sv"]),
-                final=BinarySVM(**tree["model"]["final"]),
-                risk=tree["model"]["risk"], rounds=meta["rounds"],
-                history=())
-            params = (SolverParams(**tree["params"])
-                      if meta["has_params"] else None)
-            snap = ModelSnapshot(model=model, params=params,
-                                 version=meta["version"])
-            with svc._lock:
+        if man.get("format", 1) >= 2:
+            gens = list(man.get("generations", []))
+        else:                          # format-1: one implicit generation
+            gens = [{"generation": 0, "wave": man["wave"],
+                     "uid": man["uid"], "streams": man["streams"]}]
+        errors: List[str] = []
+        restored = None
+        for rec in reversed(gens):
+            try:
+                loaded = {}
+                for stream in sorted(rec["streams"]):
+                    meta = rec["streams"][stream]
+                    fpath = os.path.join(checkpoint_dir, meta["file"])
+                    want = meta.get("file_crc32")
+                    if want is not None and ckpt.file_crc32(fpath) != want:
+                        raise ckpt.CorruptCheckpointError(
+                            f"{meta['file']}: medium does not match its "
+                            f"recorded crc32")
+                    like = _abstract_snapshot_tree(
+                        cfg, meta["d"], meta["nnz_cap"],
+                        meta["has_params"], meta["dtypes"])
+                    tree = ckpt.restore(fpath, like,
+                                        checksums=meta.get("checksums"))
+                    model = MapReduceSVM(
+                        w=tree["model"]["w"], b=tree["model"]["b"],
+                        sv=SVBuffer(**tree["model"]["sv"]),
+                        final=BinarySVM(**tree["model"]["final"]),
+                        risk=tree["model"]["risk"], rounds=meta["rounds"],
+                        history=())
+                    params = (SolverParams(**tree["params"])
+                              if meta["has_params"] else None)
+                    loaded[stream] = (
+                        ModelSnapshot(model=model, params=params,
+                                      version=meta["version"]),
+                        meta["slot"])
+                restored = (rec, loaded)
+                break
+            except Exception as e:     # this generation is corrupt/missing
+                errors.append(f"generation {rec.get('generation')}: {e}")
+                faults.count("ckpt_fallbacks")
+                svc.restore_fallbacks += 1
+        if restored is None:
+            raise faults.FaultDetected(
+                "ckpt",
+                f"no intact snapshot generation under {checkpoint_dir!r}"
+                f" ({'; '.join(errors) or 'no generations recorded'})",
+                action="restore from an older backup or re-register the "
+                       "streams from their training pipelines")
+        rec, loaded = restored
+        if svc.restore_fallbacks:
+            print(f"[svm_stream] newest snapshot generation(s) failed "
+                  f"verification — restored generation "
+                  f"{rec.get('generation')} instead "
+                  f"({svc.restore_fallbacks} skipped)", flush=True)
+        with svc._lock:
+            for stream, (snap, slot) in loaded.items():
                 svc._snapshots[stream] = snap
                 svc._queues[stream] = []
-                svc._stream_slot[stream] = meta["slot"]
+                svc._stream_slot[stream] = slot
                 if svc.keep_history:
                     svc._history[stream] = {snap.version: snap}
-        with svc._lock:
-            svc._wave = man["wave"]
-            svc._uid = man["uid"]
+            svc._wave = rec["wave"]
+            svc._uid = rec["uid"]
         return svc
+
+    @staticmethod
+    def _read_manifest(checkpoint_dir: str) -> Optional[dict]:
+        try:
+            with open(os.path.join(checkpoint_dir, _MANIFEST)) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError, ValueError):
+            return None
 
     def checkpoint(self) -> str:
         """Durably snapshot every stream + the service counters;
         returns the manifest path.
 
-        Layout under ``checkpoint_dir``: one flat-npz per stream
-        (atomic tmp→rename, :func:`repro.ckpt.checkpoint.save`) plus an
-        atomically-replaced JSON manifest naming them — a crash at ANY
-        point leaves the previous complete checkpoint installed, never
-        a torn one.
+        Layout under ``checkpoint_dir``: one flat-npz per stream per
+        *generation* (``gen000007_stream0.npz``; atomic tmp→rename,
+        :func:`repro.ckpt.checkpoint.save`) plus an atomically-replaced
+        JSON manifest (format 2) recording the last
+        ``checkpoint_keep`` generations — per-stream per-leaf crc32s
+        and the file crc32 ride along, so :meth:`restore` verifies each
+        payload and falls BACK past a corrupt newest generation instead
+        of restoring silently wrong state. A crash at ANY point leaves
+        the previous complete checkpoint installed, never a torn one;
+        media of pruned generations are GC'd.
         """
         if self.checkpoint_dir is None:
             raise RuntimeError(
                 "service was built without checkpoint_dir")
         os.makedirs(self.checkpoint_dir, exist_ok=True)
-        with self._lock:
-            snaps = dict(self._snapshots)
-            slots = dict(self._stream_slot)
-            wave, uid = self._wave, self._uid
-        streams_meta = {}
-        for stream, snap in snaps.items():
-            fname = f"stream_{slots[stream]}.npz"
-            tree = _snapshot_tree(snap)
-            ckpt.save(os.path.join(self.checkpoint_dir, fname), tree)
-            x = snap.model.sv.x
-            sp = sparse_rows.is_sparse(x)
-            streams_meta[stream] = {
-                "file": fname, "slot": slots[stream],
-                "version": snap.version,
-                "rounds": int(snap.model.rounds),
-                "d": int(x.shape[1]),
-                "nnz_cap": int(x.nnz_cap) if sp else None,
-                "has_params": snap.params is not None,
-                "dtypes": ckpt.leaf_dtypes(tree),
-            }
-        ckpt.atomic_write_json(
-            os.path.join(self.checkpoint_dir, _MANIFEST),
-            {"format": 1, "wave": wave, "uid": uid,
-             "sv_capacity": self.cfg.sv_capacity,
-             "num_partitions": self.L,
-             "max_batches_per_wave": self.max_batches_per_wave,
-             "streams": streams_meta})
-        self._waves_since_ckpt = 0
-        return os.path.join(self.checkpoint_dir, _MANIFEST)
+        with self._ckpt_lock:
+            gen = self._generation
+            self._generation += 1
+            with self._lock:
+                snaps = dict(self._snapshots)
+                slots = dict(self._stream_slot)
+                wave, uid = self._wave, self._uid
+            streams_meta = {}
+            for stream, snap in snaps.items():
+                fname = f"gen{gen:06d}_stream{slots[stream]}.npz"
+                tree = _snapshot_tree(snap)
+                crc = ckpt.save(
+                    os.path.join(self.checkpoint_dir, fname), tree,
+                    on_retry=self._note_retry)
+                x = snap.model.sv.x
+                sp = sparse_rows.is_sparse(x)
+                streams_meta[stream] = {
+                    "file": fname, "slot": slots[stream],
+                    "version": snap.version,
+                    "rounds": int(snap.model.rounds),
+                    "d": int(x.shape[1]),
+                    "nnz_cap": int(x.nnz_cap) if sp else None,
+                    "has_params": snap.params is not None,
+                    "dtypes": ckpt.leaf_dtypes(tree),
+                    "checksums": ckpt.leaf_checksums(tree),
+                    "file_crc32": crc,
+                }
+            rec = {"generation": gen, "wave": wave, "uid": uid,
+                   "streams": streams_meta}
+            records = [r for r in self._gen_records
+                       if r.get("generation") != gen] + [rec]
+            keep = max(int(self.checkpoint_keep), 1)
+            dropped, records = records[:-keep], records[-keep:]
+            self._gen_records = records
+            # Top-level wave/uid/streams mirror the newest generation so
+            # format-1 readers (benchmarks, older tooling) keep working.
+            ckpt.atomic_write_json(
+                os.path.join(self.checkpoint_dir, _MANIFEST),
+                {"format": 2, "wave": wave, "uid": uid,
+                 "sv_capacity": self.cfg.sv_capacity,
+                 "num_partitions": self.L,
+                 "max_batches_per_wave": self.max_batches_per_wave,
+                 "generation": gen, "generations": records,
+                 "streams": streams_meta},
+                on_retry=self._note_retry)
+            kept = {m["file"] for r in records
+                    for m in r["streams"].values()}
+            for r in dropped:
+                for m in r["streams"].values():
+                    if m["file"] not in kept:
+                        try:
+                            os.remove(os.path.join(self.checkpoint_dir,
+                                                   m["file"]))
+                        except OSError:
+                            pass
+            self._waves_since_ckpt = 0
+            return os.path.join(self.checkpoint_dir, _MANIFEST)
+
+    def _note_retry(self, attempt: int, exc: BaseException) -> None:
+        self._retries += 1
 
     def streams(self) -> List[str]:
         with self._lock:
@@ -433,6 +557,11 @@ class StreamingSVMService:
                 f"{self.cluster.process_index} of "
                 f"{self.cluster.process_count} (snapshots stay readable "
                 "here — route submissions to the coordinator)")
+        # featurizer seam: an armed poison_rows fault lands NaN/Inf in
+        # the batch exactly where a buggy upstream vectorizer would
+        spec = faults.fire("serving.submit", kinds=("poison_rows",))
+        if spec is not None:
+            X, y = faults.poison_batch(X, y, spec)
         if not sparse_rows.is_sparse(X):
             X = jnp.asarray(X)
         y = jnp.asarray(y)
@@ -462,6 +591,18 @@ class StreamingSVMService:
                     f"stream {stream!r} serves nnz_cap={sv_x.nnz_cap} "
                     f"rows but the batch has nnz_cap={X.nnz_cap} — "
                     "re-block with the model's cap")
+            if self.quarantine and not _all_finite(X, y):
+                # NaN/Inf never reaches a fold: one poisoned row in
+                # SV_global would corrupt every later wave's model.
+                # The batch is acknowledged (uid) but diverted —
+                # counted in throughput_report for the operator.
+                faults.count("quarantined")
+                self._uid += 1
+                mb = MicroBatch(uid=self._uid, stream=stream,
+                                X=None, y=None,
+                                submitted_s=time.time())
+                self.quarantined.append(mb)
+                return mb.uid
             q = self._queues[stream]
             if (self.max_queue_per_stream is not None
                     and len(q) >= self.max_queue_per_stream):
@@ -569,23 +710,52 @@ class StreamingSVMService:
             swapped: List[str] = []
             any_batched = False
             try:
-                for group in self._fold_groups(names, joined):
-                    if len(group) == 1:
-                        # single tenant: the plain incremental round
-                        s = group[0]
-                        snap, batches, Xn, yn = joined[s]
-                        sig = self._fold_signature(
-                            "single", Xn, yn, snap.model.sv)
-                        with self._retrace_guard(
-                                sig, f"run_wave single-tenant fold {s}"):
-                            model = update_mapreduce(snap.model, Xn, yn,
-                                                     self.L, self.cfg,
-                                                     params=snap.params)
-                        self._swap(s, model, snap.params)
-                        swapped.append(s)
-                    else:
-                        any_batched = True
-                        self._fold_batched(joined, group, swapped)
+                # scheduler seam: an armed scheduler_kill dies here, so
+                # _recover_wave requeues every admitted batch (HEAD of
+                # queue) before the error surfaces.
+                faults.maybe_raise("serving.wave",
+                                   kinds=("scheduler_kill",),
+                                   when=wave_id)
+                wd_ctx = (faults.CollectiveWatchdog(
+                              self.fold_deadline_s,
+                              heartbeat_path=self.heartbeat_path,
+                              layer="serving",
+                              cause=f"wave {wave_id} fold",
+                              action="kill the process and restore the "
+                                     "service from its last checkpoint "
+                                     "generation",
+                              on_timeout=self._on_watchdog_timeout)
+                          if self.fold_deadline_s is not None
+                          else contextlib.nullcontext())
+                with wd_ctx as wd:
+                    # stall seam: a fold that stops making progress —
+                    # bounded sleep past the deadline, so the watchdog
+                    # (not the harness's patience) ends it
+                    if faults.fire("serving.stall", ("stall",),
+                                   when=wave_id) is not None:
+                        time.sleep((self.fold_deadline_s or 0.5) * 1.5)
+                    for group in self._fold_groups(names, joined):
+                        if len(group) == 1:
+                            # single tenant: the plain incremental round
+                            s = group[0]
+                            snap, batches, Xn, yn = joined[s]
+                            sig = self._fold_signature(
+                                "single", Xn, yn, snap.model.sv)
+                            with self._retrace_guard(
+                                    sig,
+                                    f"run_wave single-tenant fold {s}"):
+                                model = update_mapreduce(
+                                    snap.model, Xn, yn, self.L,
+                                    self.cfg, params=snap.params)
+                            self._swap(s, model, snap.params)
+                            swapped.append(s)
+                        else:
+                            any_batched = True
+                            self._fold_batched(joined, group, swapped)
+                        if wd is not None:
+                            wd.beat()
+                if wd is not None:
+                    wd.check()
             except BaseException:
                 self._recover_wave(joined, names, swapped)
                 raise
@@ -802,32 +972,67 @@ class StreamingSVMService:
                 traceback.print_exc()
                 return
 
+    def _on_watchdog_timeout(self, info: dict) -> None:
+        self._watchdog_fires += 1
+        handler = self.watchdog_handler
+        if handler is not None:
+            handler(info)
+        else:
+            faults.exit_handler(info)
+
     def wait_idle(self, timeout_s: float = 120.0,
                   poll_s: float = 0.01) -> bool:
         """Block until every queue is empty AND no wave is in flight.
-        Only meaningful while the background scheduler is running (an
-        idle service with queued work but no scheduler never drains —
-        returns False at the timeout). Raises if the scheduler died."""
+
+        A doomed wait surfaces IMMEDIATELY instead of burning the full
+        timeout: a recorded scheduler error re-raises, a scheduler
+        thread that died WITHOUT recording one (killed interpreter-side,
+        a bug in the loop itself) raises, and queued work with no
+        scheduler running at all raises — in every one of those states
+        no amount of waiting can drain the queues. Returns ``False``
+        only for a genuine timeout (slow folds still in flight)."""
         deadline = time.time() + timeout_s
-        while time.time() < deadline:
+        while True:
             if self._scheduler_error is not None:
                 raise RuntimeError(
                     "streaming scheduler died") from self._scheduler_error
+            thread = self._thread
+            if (thread is not None and not thread.is_alive()
+                    and not self._stop_evt.is_set()):
+                raise RuntimeError(
+                    "scheduler thread died without recording an error — "
+                    "restart the service (restore from its checkpoint "
+                    "if one was configured)")
+            if thread is None and self.pending() > 0:
+                raise RuntimeError(
+                    "no scheduler is running but work is queued — call "
+                    "start() (or drain() synchronously) first")
             if self.pending() == 0 and not self._wave_lock.locked():
                 return True
+            if time.time() >= deadline:
+                return False
             time.sleep(poll_s)
-        return False
 
-    def stop(self, drain: bool = True) -> None:
+    def stop(self, drain: bool = True, timeout_s: float = 60.0) -> None:
         """Stop the scheduler thread; optionally fold what's queued.
-        Re-raises the error that killed the scheduler, if any."""
+        Re-raises the error that killed the scheduler, if any. A thread
+        that refuses to die within ``timeout_s`` — stranded in a fold
+        collective — raises a typed :class:`~repro.faults.FaultDetected`
+        instead of silently leaking the daemon."""
         thread = self._thread
         if thread is None:
             return
         self._stop_evt.set()
         with self._cv:
             self._cv.notify_all()
-        thread.join(timeout=60)
+        thread.join(timeout=timeout_s)
+        if thread.is_alive():
+            raise faults.FaultDetected(
+                "serving",
+                f"scheduler thread refused to die within {timeout_s:.0f}s"
+                " (likely stranded in a fold collective)",
+                action="kill the process and restart from the last "
+                       "checkpoint generation")
         self._thread = None
         if self._scheduler_error is not None:
             raise RuntimeError(
@@ -858,4 +1063,7 @@ class StreamingSVMService:
             "slo_violations": self._slo_violations,
             "fold_programs": len(self._fold_signatures),
             "retraces": self._retraces,
+            "quarantined": len(self.quarantined),
+            "retries": self._retries,
+            "watchdog_fires": self._watchdog_fires,
         }

@@ -28,22 +28,49 @@ pointer. In the ``resume`` phase (fresh coordinator port) both
 processes restore the round state from disk, finish the remaining
 rounds, and assert the result is BIT-FOR-BIT identical to an
 uninterrupted run from scratch; prints MP_FT_OK on success.
+
+Chaos mode (ISSUE 9, ``chaos`` argv tail): the ft leg under the
+fault-injection harness. ``crash`` phase: the round loop runs inside a
+CollectiveWatchdog with a heartbeat file per process — when process 1
+SIGKILLs itself, process 0 strands in the merge collective and must
+exit with WATCHDOG_EXIT_CODE (17) carrying the typed transport
+diagnosis, never hang. ``resume`` phase: an armed handshake_flake plan
+makes init_cluster's coordinator handshake flap (absorbed by its
+retry), the parent has CORRUPTED the newest snapshot generation, so
+latest_step must fall back to ``kill_round - 2`` — and the resumed run
+still lands bit-for-bit on the uninterrupted result; prints
+MP_CHAOS_OK.
 """
 import sys
 
 PID, NPROC, PORT = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3]
 ROUNDS = int(sys.argv[4]) if len(sys.argv) > 4 else 3
-FT = len(sys.argv) > 5 and sys.argv[5] == "ft"
+MODE = sys.argv[5] if len(sys.argv) > 5 else None
+FT = MODE in ("ft", "chaos")
+CHAOS = MODE == "chaos"
 if FT:
     FT_DIR, KILL_ROUND, FT_PHASE = sys.argv[6], int(sys.argv[7]), sys.argv[8]
     assert FT_PHASE in ("crash", "resume"), FT_PHASE
 NDEV = 8                                     # global devices, any NPROC
 
+from repro import faults                     # noqa: E402
 from repro.launch.cluster import ClusterConfig, init_cluster  # noqa: E402
+
+if CHAOS and FT_PHASE == "resume":
+    # arm BEFORE init_cluster: the restarted process's coordinator
+    # handshake flaps 1-2× and the retry in init_cluster absorbs it
+    faults.set_active(faults.FaultPlan.single("handshake_flake", seed=PID))
 
 cluster = init_cluster(ClusterConfig(
     coordinator=f"localhost:{PORT}", num_processes=NPROC, process_id=PID,
     local_device_count=NDEV // NPROC))
+
+if CHAOS and FT_PHASE == "resume":
+    assert faults.counters().get("retries", 0) >= 1, \
+        "handshake flake was armed but init_cluster never retried"
+    faults.set_active(None)
+    print(f"[p{PID}] chaos: flaky coordinator handshake absorbed by "
+          f"retry ({faults.counters()['retries']} attempts)", flush=True)
 
 import jax                                    # noqa: E402  (backend now up)
 import numpy as np                            # noqa: E402
@@ -132,12 +159,52 @@ if FT:
         return state, out
 
     if FT_PHASE == "crash":
+        if CHAOS:
+            # Chaos crash: the round loop runs under the collective
+            # watchdog. Round 0 warms the jit cache OUTSIDE the
+            # deadline (compile time must not trip it); every later
+            # round beats. When p1 SIGKILLs itself, p0 strands in the
+            # merge ppermute — Python cannot interrupt the gloo C call,
+            # so the guaranteed outcome is the TYPED exit: watchdog →
+            # heartbeat "timeout" → exit 17. Some gloo versions raise
+            # instead of stranding; that surfaces the same typed way.
+            import json                       # noqa: E402
+            hb = os.path.join(FT_DIR, f"hb_p{PID}.json")
+            state, _ = run(fn.init_sv(S, D), 0, 1, checkpoint=True)
+            try:
+                with faults.CollectiveWatchdog(
+                        60.0, heartbeat_path=hb, layer="transport",
+                        cause=f"p{PID} ring merge collective") as wd:
+                    for t in range(1, ROUNDS):
+                        state, _ = run(state, t, t + 1, checkpoint=True)
+                        wd.beat()
+            except BaseException as e:        # raised, not stranded
+                tmp = hb + ".tmp"
+                with open(tmp, "w") as f:
+                    json.dump({"status": "detected",
+                               "layer": "transport",
+                               "cause": f"{type(e).__name__}: {e}"}, f)
+                os.replace(tmp, hb)
+                print(f"FaultDetected[transport]: peer loss surfaced "
+                      f"as {type(e).__name__} — restart from the last "
+                      "checkpoint generation", flush=True)
+                sys.exit(faults.WATCHDOG_EXIT_CODE)
+            raise SystemExit(
+                "chaos crash phase completed — process 1 never died")
         run(fn.init_sv(S, D), 0, ROUNDS, checkpoint=True)
         raise SystemExit("crash phase completed — process 1 never died")
 
     # resume: pick up the interrupted run from the durable state…
+    # (chaos: the parent corrupted the newest generation's medium, so
+    # the crc walk must land one generation EARLIER — and count it)
     t0 = latest_step(FT_DIR)
-    assert t0 == KILL_ROUND - 1, (t0, KILL_ROUND)
+    want = KILL_ROUND - 2 if CHAOS else KILL_ROUND - 1
+    assert t0 == want, (t0, want, KILL_ROUND)
+    if CHAOS:
+        assert faults.counters().get("ckpt_fallbacks", 0) >= 1, \
+            "corrupt newest generation was not skipped via crc"
+        print(f"[p{PID}] chaos: newest snapshot generation corrupt — "
+              f"resuming from intact generation {t0}", flush=True)
     state = restore_sweep_state(latest_path(FT_DIR), cfg, S, D, NDEV, per)
     state_r, out_r = run(state, t0 + 1, ROUNDS)
     # …and land bit-for-bit where an uninterrupted run lands.
@@ -150,7 +217,7 @@ if FT:
     print(f"[p{PID}] ft: resumed sweep ≡ uninterrupted sweep "
           f"(killed mid-round {KILL_ROUND}, {ROUNDS} rounds, "
           f"{len(leaves_r)} leaves bit-for-bit)", flush=True)
-    print("MP_FT_OK", flush=True)
+    print("MP_CHAOS_OK" if CHAOS else "MP_FT_OK", flush=True)
     sys.exit(0)
 
 for shuffle in ("allgather", "ring"):

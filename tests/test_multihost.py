@@ -63,13 +63,13 @@ def test_two_process_round_matches_functional():
 
 
 def _launch_ft(port: int, ckpt_dir: str, phase: str,
-               rounds: int = 4, kill_round: int = 2):
+               rounds: int = 4, kill_round: int = 2, kind: str = "ft"):
     env = subprocess_env(PYTHONPATH=str(REPO / "src"))
     return [
         subprocess.Popen(
             [sys.executable, str(REPO / "tests" / "mp_worker.py"),
              str(pid), "2", str(port), str(rounds),
-             "ft", ckpt_dir, str(kill_round), phase],
+             kind, ckpt_dir, str(kill_round), phase],
             stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
             text=True, env=env)
         for pid in range(2)
@@ -126,3 +126,76 @@ def test_kill_worker_midwave_restart_converges(tmp_path):
     for pid, (p, out) in enumerate(zip(procs, outs)):
         assert p.returncode == 0, f"restarted process {pid} failed:\n{out}"
         assert "MP_FT_OK" in out, f"restarted process {pid}:\n{out}"
+
+
+@pytest.mark.slow
+def test_chaos_kill_corrupt_restart_converges(tmp_path):
+    """The 2-process chaos leg (ISSUE 9): peer loss AND checkpoint
+    corruption, both detected and named — never a hang, never a silent
+    wrong answer. Phase A SIGKILLs process 1 mid-wave; the stranded
+    process 0 must EXIT with the watchdog's typed transport diagnosis
+    (code 17, heartbeat file flipped to timeout/detected) instead of
+    hanging in gloo. This test then flips one byte mid-file in the
+    newest snapshot generation; phase B restarts both processes through
+    a flaky (retried) coordinator handshake, restores from the previous
+    INTACT generation, and still lands bit-for-bit on the uninterrupted
+    model."""
+    import json
+    import os
+
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.faults import WATCHDOG_EXIT_CODE
+
+    kill_round = 2
+    ckpt_dir = str(tmp_path / "chaos_ckpt")
+    (tmp_path / "chaos_ckpt").mkdir()
+
+    # Phase A — crash under the watchdog.
+    procs = _launch_ft(_free_port(), ckpt_dir, "crash",
+                       kill_round=kill_round, kind="chaos")
+    try:
+        assert procs[1].wait(timeout=600) == -signal.SIGKILL
+        # p0 strands in the merge collective → the watchdog (or a gloo
+        # error) must convert that into a typed exit, not a hang.
+        rc0 = procs[0].wait(timeout=300)
+        assert rc0 == WATCHDOG_EXIT_CODE, rc0
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+        outs = [p.communicate()[0] for p in procs]
+    assert "transport" in outs[0], outs[0]
+    with open(os.path.join(ckpt_dir, "hb_p0.json")) as f:
+        hb = json.load(f)
+    assert hb["status"] in ("timeout", "detected"), hb
+
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.ckpt.checkpoint import latest_path, latest_step
+    assert latest_step(ckpt_dir) == kill_round - 1
+
+    # Corrupt the newest generation's medium: one flipped byte
+    # mid-file. The crc walk must now land one generation earlier.
+    newest = latest_path(ckpt_dir)
+    with open(newest, "r+b") as f:
+        f.seek(os.path.getsize(newest) // 2)
+        byte = f.read(1)
+        f.seek(-1, 1)
+        f.write(bytes([byte[0] ^ 0x40]))
+    assert latest_step(ckpt_dir) == kill_round - 2
+
+    # Phase B — restart through a flaky handshake, restore from the
+    # intact generation, converge bit-for-bit.
+    procs = _launch_ft(_free_port(), ckpt_dir, "resume",
+                       kill_round=kill_round, kind="chaos")
+    outs = []
+    try:
+        for p in procs:
+            out, _ = p.communicate(timeout=900)
+            outs.append(out)
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    for pid, (p, out) in enumerate(zip(procs, outs)):
+        assert p.returncode == 0, f"restarted process {pid} failed:\n{out}"
+        assert "MP_CHAOS_OK" in out, f"restarted process {pid}:\n{out}"
