@@ -21,7 +21,17 @@ host mesh:
   permute synchronously — this container's CPU — the probe instead
   checks compute ops are scheduled between consecutive permutes, the
   order the TPU latency-hiding scheduler overlaps) and comparing wire
-  bytes per round.
+  bytes per round;
+* ``shuffle_hier_*``   — the topology-aware two-level transport
+  (ISSUE 10): classifies every collective-permute send in the compiled
+  round by whether it crosses the simulated host boundary
+  (``device // devices_per_host``) and gates the inter-host wire-byte
+  ratio vs the flat ring. At H hosts × P devices the flat ring ships
+  H·(P−1) inter-host sends per merge while hier's host-slice exchange
+  ships (H−1)·P — the measured 8-device/2-host ratio is
+  H(P−1)/((H−1)P) = 1.75×, asymptoting to H/(H−1) = 2× as P grows
+  (DESIGN.md §16). Hier's intra-host legs lower to grouped all-gathers
+  whose replica groups must stay within one host.
 
 The bench asserts the ring round is NO SLOWER than the all-gather
 round and that both converge to the same risks.
@@ -310,8 +320,117 @@ def shuffle_hlo_probe(n: int = 1024, d: int = 256, cap: int = 256,
     return out
 
 
+def _interhost_cp_stats(hlo_text, hosts: int, ndev: int) -> dict:
+    """Inter-host traffic of one compiled round's collective-permutes.
+
+    A send ``src → tgt`` crosses hosts when ``src // dl != tgt // dl``
+    (``dl`` devices per host, the process-major mesh layout
+    ``resolve_topology`` guarantees). Per-send payload is the permute
+    operand's per-device byte size from the HLO type string.
+    """
+    from repro.analysis.hlo import parse_collective_ops
+    dl = ndev // hosts
+    stats = {"cp_stages": 0, "sends": 0, "inter_sends": 0,
+             "inter_bytes": 0, "send_nbytes": set(), "intra_ag": 0,
+             "ag_cross_host": 0}
+    for op in parse_collective_ops(hlo_text):
+        if op.is_done:
+            continue
+        if op.kind == "collective-permute" and op.source_target_pairs:
+            crossing = [(s, t) for s, t in op.source_target_pairs
+                        if s // dl != t // dl]
+            stats["cp_stages"] += 1
+            stats["sends"] += len(op.source_target_pairs)
+            stats["inter_sends"] += len(crossing)
+            stats["inter_bytes"] += len(crossing) * op.max_nbytes
+            stats["send_nbytes"].add(op.max_nbytes)
+        elif op.kind == "all-gather" and op.replica_groups:
+            within = all(len({dev // dl for dev in g}) == 1
+                         for g in op.replica_groups)
+            stats["intra_ag" if within else "ag_cross_host"] += 1
+    return stats
+
+
+def shuffle_hier_probe(n: int = 1024, d: int = 256, cap: int = 256,
+                       epochs: int = 2, hosts: int = 2) -> List[str]:
+    """Two-level hier vs flat ring: inter-host wire bytes + hop count.
+
+    Both transports run the same f32 wire so every collective-permute
+    send carries identical payload and the byte ratio is purely the
+    hop schedule — a structural (deterministic) ratio, safe to CI-gate
+    via ``x=`` unlike the load-noisy wall-time rows.
+    """
+    import dataclasses as dc
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro import compat
+    from repro.core.mapreduce_svm import build_sharded_round, init_sv_buffer
+
+    ndev = len(jax.devices())
+    if ndev < NDEV:
+        return [f"shuffle_hier,0,SKIP:needs_{NDEV}_devices_have_{ndev}"]
+    X, y = _problem(n, d, seed=3)
+    mask = jnp.ones((n,))
+    cfg_a, _ = _cfgs(cap, epochs)
+    cfg_r = dc.replace(cfg_a, shuffle_impl="ring",
+                       shuffle_wire_dtype="float32")
+    cfg_h = dc.replace(cfg_r, shuffle_impl="hier", hier_num_hosts=hosts)
+    mesh = compat.make_mesh((NDEV,), ("data",))
+    sv0 = init_sv_buffer(cap, d)
+    fr = build_sharded_round(mesh, ("data",), cfg_r, n // NDEV)
+    fh = build_sharded_round(mesh, ("data",), cfg_h, n // NDEV)
+
+    # identical model output first — the schedule change must be free
+    svr, rr, _, _ = fr(X, y, mask, sv0)
+    svh, rh, _, _ = fh(X, y, mask, sv0)
+    np.testing.assert_allclose(np.asarray(rr), np.asarray(rh),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(svr.ids), np.asarray(svh.ids))
+
+    st = {}
+    for name, fn in (("ring", fr), ("hier", fh)):
+        hlo = jax.jit(fn).lower(X, y, mask, sv0).compile().as_text()
+        st[name] = _interhost_cp_stats(hlo, hosts, NDEV)
+    # flat ring: P-1 full-permutation hops, each crossing every one of
+    # the H contiguous host boundaries once
+    assert st["ring"]["cp_stages"] == NDEV - 1, st["ring"]
+    assert st["ring"]["inter_sends"] == hosts * (NDEV - 1), st["ring"]
+    # hier: H-1 host-slice exchange hops in which EVERY device sends
+    # across (all P pairs crossing), intra-host legs as grouped
+    # all-gathers confined to one host each
+    assert st["hier"]["cp_stages"] == hosts - 1, st["hier"]
+    assert st["hier"]["inter_sends"] == st["hier"]["sends"] \
+        == (hosts - 1) * NDEV, st["hier"]
+    assert st["hier"]["intra_ag"] > 0 and \
+        st["hier"]["ag_cross_host"] == 0, st["hier"]
+    # same packed wire format → identical per-send payload both sides
+    assert st["ring"]["send_nbytes"] == st["hier"]["send_nbytes"], \
+        (st["ring"]["send_nbytes"], st["hier"]["send_nbytes"])
+
+    ratio = st["ring"]["inter_bytes"] / max(st["hier"]["inter_bytes"], 1)
+    analytic = hosts * (NDEV - 1) / ((hosts - 1) * NDEV)
+    assert abs(ratio - analytic) < 1e-9, (ratio, analytic)
+    assert ratio >= 1.7, f"hier inter-host saving collapsed: {ratio:.2f}"
+    return [
+        f"shuffle_hier_ring_interhost,0,cp_stages={st['ring']['cp_stages']}"
+        f" inter_sends={st['ring']['inter_sends']}"
+        f" inter_bytes={st['ring']['inter_bytes']}"
+        f" merge_stages={NDEV} (=num_devices)",
+        f"shuffle_hier_interhost,0,cp_stages={st['hier']['cp_stages']}"
+        f" inter_sends={st['hier']['inter_sends']}"
+        f" inter_bytes={st['hier']['inter_bytes']}"
+        f" merge_stages={hosts} (=num_processes)"
+        f" intra_host_allgathers={st['hier']['intra_ag']}",
+        f"hier_vs_ring_wire_bytes,0,x={ratio:.2f}"
+        f" analytic_H(P-1)/((H-1)P)={analytic:.2f} asymptote=2.0"
+        f" hosts={hosts} ndev={NDEV}",
+    ]
+
+
 def shuffle_overlap_bench() -> List[str]:
-    return shuffle_single() + shuffle_sweep() + shuffle_hlo_probe()
+    return (shuffle_single() + shuffle_sweep() + shuffle_hlo_probe()
+            + shuffle_hier_probe())
 
 
 def main():

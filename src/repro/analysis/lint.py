@@ -1,9 +1,9 @@
 """`make lint-jax` — run the invariant rules against the real programs.
 
 Matrix (static rules): every SVM step builder — ``build_svm_round_step``,
-``build_svm_sweep_step``, ``build_svm_serve_step`` — under both shuffle
-transports (``allgather``/``ring``) and both row formats
-(``dense``/``sparse_csr``) on an 8-device host mesh:
+``build_svm_sweep_step``, ``build_svm_serve_step`` — under every shuffle
+transport in ``SHUFFLE_IMPLS`` (``allgather``/``ring``/``hier``) and
+both row formats (``dense``/``sparse_csr``) on an 8-device host mesh:
 
 * host-sync: the traced program contains no host-callback primitive;
 * dtype-drift: solver-state leaves (y/α) never downcast outside the
@@ -147,13 +147,14 @@ def _report(rep) -> None:
 
 def run_matrix() -> int:
     from repro import analysis
+    from repro.core.mapreduce_svm import SHUFFLE_IMPLS
     from repro.launch.mesh import make_host_mesh
 
     mesh = make_host_mesh(data=8)
     failures = 0
     for row_format in ("dense", "sparse_csr"):
         cfg = _lint_cfg(row_format)
-        for shuffle in ("allgather", "ring"):
+        for shuffle in SHUFFLE_IMPLS:
             for kind in ("round", "sweep", "serve"):
                 name = f"{kind}/{shuffle}/{row_format}"
                 print(f"program {name}")
@@ -360,6 +361,21 @@ ENTRY %main () -> f32[8] {
     failures += _expect("collective-schedule",
                         lambda: analysis.check_schedule(bad_ring,
                                                         "self-test ring"))
+
+    # collective-schedule (hier): the two-level schedule mixes a grouped
+    # all-gather with an inter-host collective-permute per stage — a
+    # malformed host grouping that places device 3 in two host groups
+    # breaks the disjoint-partition invariant the hier transport needs
+    bad_hier = """\
+ENTRY %main () -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  %cp = f32[8]{0} collective-permute(%p), channel_id=1, source_target_pairs={{0,4},{1,5},{2,6},{3,7},{4,0},{5,1},{6,2},{7,3}}
+  ROOT %ag = f32[32]{0} all-gather(%cp), channel_id=2, replica_groups={{0,1,2,3},{3,4,5,6,7}}, dimensions={0}
+}
+"""
+    failures += _expect("collective-schedule",
+                        lambda: analysis.check_schedule(bad_hier,
+                                                        "self-test hier"))
 
     # schedule agreement: one participant truncates the sequence
     good = analysis.collective_schedule("""\

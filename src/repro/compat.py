@@ -246,6 +246,21 @@ def all_gather(x, axis_names, *, axis: int = 0, tiled: bool = False):
     return jax.lax.all_gather(x, name, axis=axis, tiled=tiled)
 
 
+def all_gather_groups(x, axis_names, groups, *, axis: int = 0,
+                      tiled: bool = False):
+    """Grouped ``all_gather``: each device gathers only within its row
+    of ``groups`` — lists of row-major FLATTENED indices over
+    ``axis_names`` (matching :func:`axis_index`) that must partition
+    the devices. The intra-host leg of the two-level hier shuffle
+    (DESIGN.md §16): group = the devices of one host, so the gather
+    rides the fast local interconnect and never crosses the network.
+    """
+    name = tuple(axis_names) if not isinstance(axis_names, str) \
+        else axis_names
+    return jax.lax.all_gather(x, name, axis=axis, tiled=tiled,
+                              axis_index_groups=[list(g) for g in groups])
+
+
 def axis_size(axis_names) -> int:
     """Product of the named manual-axis sizes (trace-time constant)."""
     if isinstance(axis_names, str):

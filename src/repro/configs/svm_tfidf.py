@@ -24,5 +24,14 @@ class SVMTfidfConfig:
     #                                None = the d/256 density default
     citation: str = "Çatak 2014 (the reproduced paper)"
 
+    def __post_init__(self):
+        # Same source of truth as MRSVMConfig: a transport added there
+        # can't silently miss this layer.
+        from repro.core.mapreduce_svm import SHUFFLE_IMPLS
+        if self.shuffle_impl not in SHUFFLE_IMPLS:
+            raise ValueError(
+                f"shuffle_impl must be one of {SHUFFLE_IMPLS}, "
+                f"got {self.shuffle_impl!r}")
+
 
 CONFIG = SVMTfidfConfig()

@@ -3,11 +3,13 @@ from repro.core.kernel_fns import KernelConfig, apply_kernel
 from repro.core.svm import (BinarySVM, SolverParams, SVMConfig,
                             decision_kernel, decision_linear, fit_binary,
                             support_mask)
-from repro.core.mapreduce_svm import (MapReduceSVM, MRSVMConfig, RoundResult,
-                                      SVBuffer, decision_values,
-                                      fit_mapreduce, init_sv_buffer,
-                                      make_sharded_round, mapreduce_round,
-                                      predict, update_mapreduce)
+from repro.core.mapreduce_svm import (CONVERGE_IMPLS, PACKED_SHUFFLES,
+                                      SHUFFLE_IMPLS, MapReduceSVM,
+                                      MRSVMConfig, RoundResult, SVBuffer,
+                                      decision_values, fit_mapreduce,
+                                      init_sv_buffer, make_sharded_round,
+                                      mapreduce_round, predict,
+                                      resolve_topology, update_mapreduce)
 from repro.core.multiclass import (OneVsOneSVM, OneVsRestSVM,
                                    confusion_matrix, fit_one_vs_one,
                                    fit_one_vs_rest)
@@ -25,7 +27,9 @@ from repro.core.sweep import (DedupChunk, ShardedSweep, SweepOneVsRest,
 __all__ = [
     "KernelConfig", "apply_kernel", "BinarySVM", "SolverParams", "SVMConfig",
     "decision_kernel", "decision_linear", "fit_binary", "support_mask",
+    "CONVERGE_IMPLS", "PACKED_SHUFFLES", "SHUFFLE_IMPLS",
     "MapReduceSVM", "MRSVMConfig", "RoundResult", "SVBuffer",
+    "resolve_topology",
     "decision_values", "fit_mapreduce", "init_sv_buffer",
     "make_sharded_round", "mapreduce_round", "predict",
     "update_mapreduce",

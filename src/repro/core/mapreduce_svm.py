@@ -23,10 +23,11 @@ TPU-native adaptations (see DESIGN.md §2):
     reducers run under `vmap`. Used by tests, benchmarks, examples.
   - **sharded** (`make_sharded_round`): partitions = devices of the
     ``("data",)`` / ``("pod", "data")`` mesh axes under `shard_map`;
-    the merge — the ICI analogue of the Hadoop shuffle — is either a
-    tiled `lax.all_gather` or the ring-pipelined `ppermute` transport
-    (``MRSVMConfig.shuffle_impl``, DESIGN.md §10). Used by the
-    launcher and the multi-pod dry-run.
+    the merge — the ICI analogue of the Hadoop shuffle — is a tiled
+    `lax.all_gather`, the ring-pipelined `ppermute` transport, or the
+    topology-aware two-level hier transport (``MRSVMConfig.
+    shuffle_impl``, DESIGN.md §10/§16). Used by the launcher and the
+    multi-pod dry-run.
 """
 from __future__ import annotations
 
@@ -45,6 +46,19 @@ from repro.analysis.hostsync import allowed_host_sync
 from repro.core import risk as risk_lib
 from repro.core.svm import (BinarySVM, SolverParams, SVMConfig,
                             decision_kernel, decision_linear, fit_binary)
+
+# Single source of truth for the merge-collective transports of the
+# sharded mode (DESIGN.md §10, §16) and the eq. 8 convergence-readback
+# collectives (§16). Config validation, ``configs/svm_tfidf.py``, the
+# ``--shuffle`` CLI choices and the lint matrix all derive from these
+# tuples, so a new transport cannot silently miss a layer.
+SHUFFLE_IMPLS = ("allgather", "ring", "hier")
+CONVERGE_IMPLS = ("psum", "tree")
+
+# The transports whose wire format is the coalesced packed f32 message
+# (ring stages or hier host-stages) — they share the hop engine
+# (:func:`_merge_hops`) and, on sweeps, the dedup state layout.
+PACKED_SHUFFLES = ("ring", "hier")
 
 
 class SVBuffer(NamedTuple):
@@ -77,24 +91,41 @@ class MRSVMConfig:
       over ``ppermute``, double-buffered so stage t's permute is in
       flight while stage t-1's chunk is consumed (buffer assembly +
       eq. 7 hypothesis scoring overlap the collective), with feature
-      rows shipped in ``shuffle_wire_dtype`` (f32 α/ids sideband).
+      rows shipped in ``shuffle_wire_dtype`` (f32 α/ids sideband);
+    * ``"hier"`` — the topology-aware two-level transport (§16): the
+      flat ring's ``num_devices`` stages collapse to ``num_hosts``
+      host-stages — per stage ONE inter-host ``ppermute`` (each device
+      forwards its slice of the in-flight host super-message, so only
+      the bytes a host has never seen cross the network) expanded by an
+      intra-host grouped ``all_gather`` (fast local interconnect) into
+      the arrived host's messages, still overlapping eq. 7 scoring.
+      ``hier_num_hosts`` pins the host-group count for simulated
+      topologies; ``None`` reads the real process count at build time.
 
-    Both transports converge to the same model; the ring additionally
-    dedups cross-config SV rows on the sweep axis (``sweep_dedup``,
-    :mod:`repro.core.sweep`): ``dedup_max_unique`` caps the unique-row
-    slots a device ships per round — ``None`` means ``min(S·k, per)``,
-    which can never drop a live row (lossless) while shrinking the S×
-    payload whenever configs share rows or ``per < S·k``.
+    All transports converge to the same model; the packed transports
+    (ring, hier) additionally dedup cross-config SV rows on the sweep
+    axis (``sweep_dedup``, :mod:`repro.core.sweep`):
+    ``dedup_max_unique`` caps the unique-row slots a device ships per
+    round — ``None`` means ``min(S·k, per)``, which can never drop a
+    live row (lossless) while shrinking the S× payload whenever configs
+    share rows or ``per < S·k``.
+
+    ``converge_impl`` selects the eq. 8 convergence-readback collective
+    (the global risk mean): ``"psum"`` is the flat all-reduce,
+    ``"tree"`` the log2(P) recursive-doubling (binomial-tree) exchange
+    over XOR-partner ``ppermute`` stages (power-of-two device counts).
     """
     sv_capacity: int = 256
     svm: SVMConfig = SVMConfig()
     gamma: float = 1e-3          # eq. 8 convergence tolerance on R_emp
     max_rounds: int = 10
     risk_loss: str = "hinge"     # 'hinge' (used in eq. 6) or 'zero_one'
-    shuffle_impl: str = "allgather"       # 'allgather' | 'ring'
-    shuffle_wire_dtype: str = "bfloat16"  # ring: SV feature-row wire dtype
-    sweep_dedup: bool = True              # ring sweep: cross-config dedup
+    shuffle_impl: str = "allgather"       # one of SHUFFLE_IMPLS
+    shuffle_wire_dtype: str = "bfloat16"  # packed: feature-row wire dtype
+    sweep_dedup: bool = True              # packed sweep: cross-config dedup
     dedup_max_unique: Optional[int] = None  # unique slots/chunk; None=lossless
+    hier_num_hosts: Optional[int] = None  # hier: host groups; None=processes
+    converge_impl: str = "psum"           # one of CONVERGE_IMPLS
     # Ring wire-integrity check (DESIGN.md §15): each hop's coalesced
     # message carries one extra f32 lane holding the int32 wrap-sum of
     # its bitcast payload; a receiver-side mismatch poisons the round's
@@ -105,10 +136,17 @@ class MRSVMConfig:
     shuffle_wire_check: bool = False
 
     def __post_init__(self):
-        if self.shuffle_impl not in ("allgather", "ring"):
+        if self.shuffle_impl not in SHUFFLE_IMPLS:
             raise ValueError(
-                f"shuffle_impl must be 'allgather' or 'ring', "
+                f"shuffle_impl must be one of {SHUFFLE_IMPLS}, "
                 f"got {self.shuffle_impl!r}")
+        if self.converge_impl not in CONVERGE_IMPLS:
+            raise ValueError(
+                f"converge_impl must be one of {CONVERGE_IMPLS}, "
+                f"got {self.converge_impl!r}")
+        if self.hier_num_hosts is not None and self.hier_num_hosts < 1:
+            raise ValueError(
+                f"hier_num_hosts must be >= 1, got {self.hier_num_hosts}")
         wdt = jnp.dtype(self.shuffle_wire_dtype)
         if wdt.itemsize not in (2, 4) or \
                 not jnp.issubdtype(wdt, jnp.floating):
@@ -422,8 +460,17 @@ def _round_candidates(Xl, yl, ml, sv: SVBuffer, cfg: MRSVMConfig,
     return cand, res.w, res.b
 
 
-def _device_risks(scores, yl, ml, cfg: MRSVMConfig, axes):
-    """eq. 7 empirical risks from per-device (per, ndev) scores."""
+def _device_risks(scores, yl, ml, cfg: MRSVMConfig, axes, ndev: int):
+    """eq. 7 empirical risks from per-device (per, ndev) scores.
+
+    The global (Σ loss)/(Σ count) is the eq. 8 convergence-readback
+    collective: ``converge_impl="psum"`` is the flat all-reduce;
+    ``"tree"`` runs log2(ndev) recursive-doubling (binomial-tree)
+    stages over XOR-partner ``ppermute``s — partial risks and the row
+    count ride ONE combined vector, so each stage is a single wire
+    message and the reduction finishes in log2(ndev) hops instead of
+    the flat all-reduce's implementation-chosen schedule (§16).
+    """
     if cfg.risk_loss == "hinge":
         per_ex = jnp.maximum(0.0, 1.0 - yl[:, None] * scores)
     else:
@@ -433,6 +480,14 @@ def _device_risks(scores, yl, ml, cfg: MRSVMConfig, axes):
             scores.dtype)
     part = jnp.sum(per_ex * ml[:, None], axis=0)
     cnt = jnp.sum(ml)
+    if cfg.converge_impl == "tree":
+        vec = jnp.concatenate([part, cnt.reshape(1).astype(part.dtype)])
+        s = 1
+        while s < ndev:                  # power of two — build-time checked
+            vec = vec + compat.ppermute(
+                vec, axes, [(i, i ^ s) for i in range(ndev)])
+            s <<= 1
+        return vec[:-1] / jnp.maximum(vec[-1], 1.0)
     return compat.psum(part, axes) / jnp.maximum(
         compat.psum(cnt, axes), 1.0)
 
@@ -500,21 +555,139 @@ def unpack_wire_rows(flat, n: int, d: int, wire_dt, wslots: int,
     return _unpack_lanes(arr, d, wire_dt)
 
 
-def _ring_merge(cand: SVBuffer, w, b, Xl, cfg: MRSVMConfig, axes,
-                ndev: int, k: int):
-    """Ring-pipelined merge + eq. 7 scoring (DESIGN.md §10).
+class _HopPlan(NamedTuple):
+    """Transport parameterization of the hop engine (:func:`_merge_hops`):
+    ``num_stages`` hops of the ``shift`` permutation, each expanded by
+    the ``expand`` group collective into ``m`` arrived messages; ``gi``
+    is this device's (traced) origin-group index for the assembly roll.
+    """
+    num_stages: int   # hops of the merge (ring: ndev, hier: num_hosts)
+    m: int            # messages consumed per stage (ring: 1, hier: ndev/H)
+    gi: jax.Array     # this device's origin-group index (traced)
+    shift: object     # hop permutation: in-flight (L,) msg -> next group
+    expand: object    # group collective: (L,) msg -> (m, L) arrived block
 
-    The monolithic all_gather is split into ``ndev`` ring stages: at
-    stage t each device consumes the chunk that originated at device
-    ``(idx - t) mod ndev`` — writing it into the assembling buffer and
-    scoring that origin's hypothesis on the local rows — while the
-    ``ppermute`` carrying stage t+1's chunk is already in flight
-    (XLA's collective-permute-start/done pair brackets the stage's
-    compute, so the wire time hides behind it). Feature rows travel in
-    ``cfg.shuffle_wire_dtype`` (bf16 halves the dominant payload,
-    matching the bf16-feature convention of :mod:`repro.core.svm`);
-    α/ids/y/mask and the (w, b) hypotheses stay a full-precision
-    sideband — solver state is never quantized.
+
+def resolve_topology(cfg: MRSVMConfig, num_devices: int) -> int:
+    """Build-time topology facts: the hier host-group count, plus the
+    static validation the collectives need.
+
+    ``cfg.hier_num_hosts`` pins the host count (simulated topologies,
+    dry-runs); ``None`` reads the real process count — the process-major
+    device order of ``launch.mesh.make_cluster_mesh`` guarantees
+    host = flat_index // local_device_count, which is exactly the
+    grouping the hier plan's groups/permutation assume. One host
+    degenerates to a single grouped all_gather (zero inter-host hops);
+    hosts == num_devices degenerates to the flat ring.
+    """
+    if cfg.converge_impl == "tree" and (num_devices & (num_devices - 1)):
+        raise ValueError(
+            "converge_impl='tree' (recursive doubling) needs a "
+            f"power-of-two device count, got {num_devices}")
+    if cfg.shuffle_impl != "hier":
+        return 1
+    hosts = cfg.hier_num_hosts or max(compat.process_count(), 1)
+    if num_devices % hosts:
+        raise ValueError(
+            f"hier shuffle needs the device count ({num_devices}) "
+            f"divisible by the host count ({hosts}); pin "
+            "MRSVMConfig.hier_num_hosts for simulated topologies")
+    return hosts
+
+
+def _hop_plan(cfg: MRSVMConfig, axes, ndev: int, idx,
+              hosts: int) -> _HopPlan:
+    """The (group collective, hop permutation, messages-per-hop) triple
+    of each packed transport (DESIGN.md §16).
+
+    * ``ring``: ndev stages of the flattened-ring shift, one message
+      per stage, no group collective (``expand`` is a reshape).
+    * ``hier``: ``hosts`` host-stages. Device (h, l) = flat h·Dl+l
+      forwards its (L,)-slice of the in-flight host super-message to
+      device (h+1, l) — a FULL permutation whose every pair crosses a
+      host boundary, so per stage exactly Dl·L values (the bytes the
+      next host has never seen — the information floor) cross the
+      network. The intra-host grouped all_gather then reassembles the
+      arrived host's Dl messages on the local interconnect for scoring
+      and assembly. The ppermute chain forwards the cp INPUT, not the
+      gather output, so stage t+1's wire time overlaps stage t's
+      expand+consume exactly like the flat ring's double buffering.
+    """
+    if cfg.shuffle_impl == "ring":
+        return _HopPlan(
+            num_stages=ndev, m=1, gi=idx,
+            shift=lambda c: compat.ring_shift(c, axes),
+            expand=lambda c: c[None, :])
+    Dl = ndev // hosts
+    groups = [[h * Dl + l for l in range(Dl)] for h in range(hosts)]
+    perm = [(h * Dl + l, ((h + 1) % hosts) * Dl + l)
+            for h in range(hosts) for l in range(Dl)]
+    return _HopPlan(
+        num_stages=hosts, m=Dl, gi=idx // Dl,
+        shift=lambda c: compat.ppermute(c, axes, perm),
+        expand=lambda c: compat.all_gather_groups(c, axes, groups))
+
+
+def _merge_hops(side, plan: _HopPlan, consume):
+    """The transport-generic hop engine every packed transport shares
+    (DESIGN.md §16): ``plan.num_stages`` iterations, each launching the
+    NEXT stage's ``shift`` (the wire permutation) before expanding the
+    current in-flight message with the ``expand`` group collective into
+    the (m, L) block that ARRIVED this stage and handing it to
+    ``consume`` (the overlapped eq. 7 work) — XLA's
+    collective-permute-start/done pair brackets the stage's compute, so
+    the wire time hides behind it. ``allgather`` is the degenerate
+    num_stages=1, m=ndev parameterization of the same loop; the
+    baseline transport realizes it per-leaf in exact dtype instead
+    (see :func:`make_sharded_round`).
+
+    Stage t carries origin group ``(gi - t) mod num_stages``, so the
+    REVERSED arrival list is origin groups gi+1, gi+2, … (contiguous
+    mod the group count) and ONE roll of ``(gi + 1)`` group blocks is
+    the origin-device-order layout — a per-stage dynamic-update-slice
+    chain would rewrite the whole buffer every hop, costing
+    num_stages× the assembly traffic.
+
+    Returns ``(M, ordered)``: the (ndev, L) device-order message
+    matrix and the per-stage ``consume`` outputs concatenated into
+    device order along their leading (m,) axis.
+    """
+    L = side.shape[0]
+    msgs, parts = [], []
+    cur = side
+    for t in range(plan.num_stages):
+        # faults.garble_wire is the trace-time chaos seam: a no-op
+        # (bit-identical program) unless a ring_garble plan is armed
+        # while this round is being BUILT.
+        nxt = (faults.garble_wire(plan.shift(cur), hop=t)
+               if t < plan.num_stages - 1 else None)
+        blk = plan.expand(cur)                 # (m, L) arrived messages
+        msgs.append(blk.reshape(plan.m * L))
+        parts.append(consume(blk))             # eq. 7 stage
+        cur = nxt
+    ndev = plan.num_stages * plan.m
+    M = jnp.roll(jnp.concatenate(msgs[::-1]),
+                 (plan.gi + 1) * (plan.m * L)).reshape(ndev, L)
+    ordered = jnp.roll(jnp.concatenate(parts[::-1], axis=0),
+                       (plan.gi + 1) * plan.m, axis=0)
+    return M, ordered
+
+
+def _packed_merge(cand: SVBuffer, w, b, Xl, cfg: MRSVMConfig, axes,
+                  ndev: int, k: int, hosts: int = 1):
+    """Packed-wire merge + eq. 7 scoring (DESIGN.md §10, §16) — the
+    ring and hier transports over the shared hop engine.
+
+    The monolithic all_gather is split into hop-engine stages (ring:
+    ``ndev`` single-message stages; hier: ``hosts`` host-stages of
+    ``ndev // hosts`` messages): at each stage a device consumes the
+    arrived origin chunks — writing them into the assembling buffer and
+    scoring those origins' hypotheses on the local rows — while the
+    permutation carrying the next stage's payload is already in flight.
+    Feature rows travel in ``cfg.shuffle_wire_dtype`` (bf16 halves the
+    dominant payload, matching the bf16-feature convention of
+    :mod:`repro.core.svm`); α/ids/y/mask and the (w, b) hypotheses stay
+    a full-precision sideband — solver state is never quantized.
 
     Every device applies the identical wire round-trip to every chunk
     (including its own), so the assembled buffer is bit-identical and
@@ -528,6 +701,7 @@ def _ring_merge(cand: SVBuffer, w, b, Xl, cfg: MRSVMConfig, axes,
     f32 = jnp.float32
     nnzc = cand.x.nnz_cap if sparse_rows.is_sparse(cand.x) else None
     idx = compat.axis_index(axes)
+    plan = _hop_plan(cfg, axes, ndev, idx, hosts)
 
     # ONE coalesced f32 message per hop: the wire-dtype feature rows
     # (bf16 pairs bitcast into f32 lanes) followed by the packed
@@ -551,27 +725,13 @@ def _ring_merge(cand: SVBuffer, w, b, Xl, cfg: MRSVMConfig, axes,
         side = jnp.concatenate(
             [side, jax.lax.bitcast_convert_type(csum.reshape(1), f32)])
     L = side.shape[0]
-    msgs = []
-    part_scores = []
-    cur = side
-    for t in range(ndev):
-        # faults.garble_wire is the trace-time chaos seam: a no-op
-        # (bit-identical program) unless a ring_garble plan is armed
-        # while this round is being BUILT.
-        nxt = (faults.garble_wire(compat.ring_shift(cur, axes), hop=t)
-               if t < ndev - 1 else None)
-        msgs.append(cur)
-        wt, bt = cur[o_w:o_w + d], cur[o_w + d]
-        part_scores.append((Xl @ wt + bt).astype(w.dtype))  # eq. 7 stage
-        cur = nxt
-    # Reorder arrivals back to device order in ONE roll — stage t
-    # carried origin (idx-t) mod ndev, so the REVERSED arrival list is
-    # origins idx+1, idx+2, … (contiguous mod ndev) and rolling by
-    # (idx+1) message blocks is the device-order layout. A per-stage
-    # dynamic-update-slice chain would rewrite the whole buffer every
-    # hop, costing ndev× the assembly traffic.
-    M = jnp.roll(jnp.concatenate(msgs[::-1]),
-                 (idx + 1) * L).reshape(ndev, L)
+
+    def consume(blk):                  # (m, L) arrived → (m, per) scores
+        Wt = blk[:, o_w:o_w + d]
+        Bt = blk[:, o_w + d]
+        return (Xl @ Wt.T + Bt[None, :]).astype(w.dtype).T
+
+    M, ordered = _merge_hops(side, plan, consume)
     col = lambda a, b2: M[:, o_x + a * k:o_x + b2 * k].reshape(ndev * k)
     bt_ = Xl.dtype
     sv_acc = SVBuffer(
@@ -583,7 +743,7 @@ def _ring_merge(cand: SVBuffer, w, b, Xl, cfg: MRSVMConfig, axes,
         mask=col(2, 3).astype(bt_))
     W = M[:, o_w:o_w + d]                            # (ndev, d)
     B = M[:, o_w + d]                                # (ndev,)
-    scores = jnp.roll(jnp.stack(part_scores[::-1]), idx + 1, axis=0).T
+    scores = ordered.T                               # (per, ndev)
     if cfg.shuffle_wire_check:
         got = jax.lax.bitcast_convert_type(M[:, L - 1], jnp.int32)
         want = jnp.sum(
@@ -608,17 +768,26 @@ def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
     * ``"allgather"``: one tiled `all_gather` of the candidate chunks
       over ``axis_names``; hypothesis selection (eq. 7) all-gathers the
       per-device (w, b) and psums partial risks afterwards — reducer-
-      side compute waits on the full collective.
-    * ``"ring"``: :func:`_ring_merge` — the chunk exchange is pipelined
-      into ``num_devices`` `ppermute` stages, double-buffered so buffer
-      assembly and the eq. 7 scoring of each arrived hypothesis overlap
-      the next stage's wire time, with feature rows shipped in
-      ``cfg.shuffle_wire_dtype``.
+      side compute waits on the full collective. This is the hop
+      engine's degenerate num_stages=1, m=ndev parameterization,
+      realized per-leaf in exact dtype (no wire pack) so the baseline
+      stays the bit-exact f32 oracle.
+    * ``"ring"``: :func:`_packed_merge` — the chunk exchange is
+      pipelined into ``num_devices`` `ppermute` stages, double-buffered
+      so buffer assembly and the eq. 7 scoring of each arrived
+      hypothesis overlap the next stage's wire time, with feature rows
+      shipped in ``cfg.shuffle_wire_dtype``.
+    * ``"hier"``: :func:`_packed_merge` over the two-level hop plan —
+      ``num_hosts`` host-stages (one inter-host slice permutation +
+      one intra-host grouped all_gather each), so only
+      (hosts−1)·ndev·L values ever cross the network: the information
+      floor, vs the flat ring's hosts·(ndev−1)·L (DESIGN.md §16).
 
-    Both transports produce the same converged model (the ring is
-    bit-identical up to the wire-dtype round-trip of the feature rows;
-    exactly identical when ``shuffle_wire_dtype`` matches the data
-    dtype) — enforced by ``tests/test_sharded_round.py``.
+    All transports produce the same converged model (the packed
+    transports are bit-identical up to the wire-dtype round-trip of
+    the feature rows; exactly identical when ``shuffle_wire_dtype``
+    matches the data dtype) — enforced by
+    ``tests/test_sharded_round.py``.
 
     The body takes an optional trailing ``params`` (a replicated traced
     :class:`~repro.core.svm.SolverParams`); the sweep subsystem vmaps
@@ -631,15 +800,16 @@ def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
         raise ValueError("sv_capacity must divide the data-parallel size")
     k = cap // num_devices
     per = rows_per_device
+    hosts = resolve_topology(cfg, num_devices)
 
     def round_body(Xl, yl, ml, sv: SVBuffer,
                    params: Optional[SolverParams] = None):
         idx = compat.axis_index(axes)           # flattened device index
         cand, w, b = _round_candidates(Xl, yl, ml, sv, cfg, axes, idx,
                                        k, per, params)
-        if cfg.shuffle_impl == "ring":
-            new_sv, W, B, scores, wire_ok = _ring_merge(
-                cand, w, b, Xl, cfg, axes, num_devices, k)
+        if cfg.shuffle_impl in PACKED_SHUFFLES:
+            new_sv, W, B, scores, wire_ok = _packed_merge(
+                cand, w, b, Xl, cfg, axes, num_devices, k, hosts)
         else:
             new_sv = compat.tree_map(
                 lambda a: compat.all_gather(a, axes, tiled=True), cand)
@@ -648,7 +818,7 @@ def make_sharded_round(cfg: MRSVMConfig, axis_names: Sequence[str],
             B = compat.all_gather(b, axes)                  # (ndev,)
             scores = Xl @ W.T + B[None, :]                  # (per, ndev)
             wire_ok = None
-        risks = _device_risks(scores, yl, ml, cfg, axes)
+        risks = _device_risks(scores, yl, ml, cfg, axes, num_devices)
         if wire_ok is not None:
             # wire-checksum sentinel: the host driver's eq. 8 readback
             # sees +inf and raises FaultDetected("transport", ...)

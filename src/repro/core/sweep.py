@@ -49,11 +49,12 @@ from repro import compat, faults
 from repro.analysis.hostsync import allowed_host_sync
 from repro.analysis.retrace import no_retrace
 from repro import sparse as sparse_rows
-from repro.core.mapreduce_svm import (MRSVMConfig, SVBuffer,
-                                      _device_risks, _round_candidates,
+from repro.core.mapreduce_svm import (PACKED_SHUFFLES, MRSVMConfig,
+                                      SVBuffer, _device_risks, _hop_plan,
+                                      _merge_hops, _round_candidates,
                                       init_sv_buffer, make_sharded_round,
                                       mapreduce_round, pack_wire_rows,
-                                      unpack_wire_rows)
+                                      resolve_topology, unpack_wire_rows)
 from repro.core.svm import (BinarySVM, SolverParams, SVMConfig,
                             decision_kernel, fit_binary)
 
@@ -490,11 +491,13 @@ def expand_chunk(chunk: DedupChunk, buf_dtype=jnp.float32) -> SVBuffer:
 def uses_dedup_state(cfg: MRSVMConfig, per_config_data: bool) -> bool:
     """True when the sharded sweep's SV state IS the dedup wire format.
 
-    Per-config-data waves (streams with distinct rows) keep per-config
-    buffers — their global ids index different datasets, so cross-config
-    dedup has no shared rows to collapse.
+    Both packed transports (ring and hier) ship and store the shared
+    rows once — the dedup layout is a property of the wire format, not
+    of the hop schedule. Per-config-data waves (streams with distinct
+    rows) keep per-config buffers — their global ids index different
+    datasets, so cross-config dedup has no shared rows to collapse.
     """
-    return (cfg.shuffle_impl == "ring" and cfg.sweep_dedup
+    return (cfg.shuffle_impl in PACKED_SHUFFLES and cfg.sweep_dedup
             and not per_config_data)
 
 
@@ -504,10 +507,10 @@ def init_sharded_sweep_sv(cfg: MRSVMConfig, num_configs: int, d: int,
     """Empty round-0 SV state of the sharded sweep.
 
     Allgather rounds carry the (S, cap, …) :class:`SVBuffer`; the dedup
-    ring carries the shared-row :class:`DedupChunk` state directly —
-    the expanded per-config buffer never materializes between rounds
-    (DESIGN.md §10); the per-config-data ring keeps per-config buffers
-    with wire-dtype feature rows.
+    packed transports (ring/hier) carry the shared-row
+    :class:`DedupChunk` state directly — the expanded per-config buffer
+    never materializes between rounds (DESIGN.md §10); per-config-data
+    packed rounds keep per-config buffers with wire-dtype feature rows.
     """
     cap = cfg.sv_capacity
     nnzc = (cfg.svm.nnz_cap if cfg.svm.row_format == "sparse_csr"
@@ -531,7 +534,7 @@ def init_sharded_sweep_sv(cfg: MRSVMConfig, num_configs: int, d: int,
             alpha=jnp.zeros((num_configs, cap), dtype),
             mask=jnp.zeros((num_configs, cap), dtype))
     sv0 = init_sv_buffer(cap, d, dtype, nnz_cap=nnzc)
-    if cfg.shuffle_impl == "ring":
+    if cfg.shuffle_impl in PACKED_SHUFFLES:
         sv0 = sv0._replace(
             x=sv0.x.astype(jnp.dtype(cfg.shuffle_wire_dtype)))
     return compat.tree_map(
@@ -559,27 +562,33 @@ def _state_views(state: DedupChunk, buf_dt):
     return view
 
 
-def _make_ring_sweep_body(cfg: MRSVMConfig, axes, ndev: int, per: int,
-                          per_config_data: bool):
-    """Ring-pipelined sweep round: one transport for all S configs.
+def _make_packed_sweep_body(cfg: MRSVMConfig, axes, ndev: int, per: int,
+                            per_config_data: bool):
+    """Packed-wire sweep round: one transport for all S configs.
 
     The per-config solve/top-k (vmapped :func:`_round_candidates`) is
-    followed by ONE ring over the round's wire payload — stage t's
-    ppermute is in flight while stage t-1's chunk is written into the
-    assembling state and its S hypotheses are scored (eq. 7). On
-    shared-data sweeps the SV state IS the cross-config dedup format
-    (:class:`DedupChunk` with ptr rebased to the global slot axis):
-    unique rows are shipped AND stored once, so neither the wire nor
-    the replicated round state scales in duplicated rows — the
-    (S, cap, d) per-config buffer exists only as transient per-config
-    gathers inside the reducer augment. Per-config-data waves (streams
-    with distinct rows — ids aren't comparable) keep per-config buffers
-    and ship the plain chunk with wire-dtype feature rows.
+    followed by ONE pass of the shared hop engine
+    (:func:`repro.core.mapreduce_svm._merge_hops`) over the round's
+    wire payload — the stage's permutation is in flight while the
+    arrived chunks are written into the assembling state and their S
+    hypotheses are scored (eq. 7). The hop schedule is the transport's
+    (ring: ndev single-message stages; hier: host-stages of
+    ndev//hosts messages, DESIGN.md §16) — the wire format is the
+    same. On shared-data sweeps the SV state IS the cross-config dedup
+    format (:class:`DedupChunk` with ptr rebased to the global slot
+    axis): unique rows are shipped AND stored once, so neither the
+    wire nor the replicated round state scales in duplicated rows —
+    the (S, cap, d) per-config buffer exists only as transient
+    per-config gathers inside the reducer augment. Per-config-data
+    waves (streams with distinct rows — ids aren't comparable) keep
+    per-config buffers and ship the plain chunk with wire-dtype
+    feature rows.
     """
     cap = cfg.sv_capacity
     k = cap // ndev
     wire_dt = jnp.dtype(cfg.shuffle_wire_dtype)
     dedup = uses_dedup_state(cfg, per_config_data)
+    hosts = resolve_topology(cfg, ndev)
 
     def sweep_body(Xl, yl, ml, sv_state, params_b: SolverParams):
         idx = compat.axis_index(axes)
@@ -600,7 +609,7 @@ def _make_ring_sweep_body(cfg: MRSVMConfig, axes, ndev: int, per: int,
             cand_b, w_b, b_b = jax.vmap(
                 lambda sv, p: comp(Xl, yl, ml, sv, p))(sv_state, params_b)
 
-        # The wire payload stays in chunk format through the ring —
+        # The wire payload stays in chunk format through the hops —
         # each stage's consumption is the eq. 7 scoring of the arrived
         # hypotheses; the state is assembled AFTER the last hop with
         # one roll (a per-stage dynamic-update-slice chain would
@@ -636,32 +645,30 @@ def _make_ring_sweep_body(cfg: MRSVMConfig, axes, ndev: int, per: int,
                 w_b.astype(f32).reshape(-1), b_b.astype(f32)])
             o_w = S * k * wslots + 4 * S * k
         o_x = n_rows * wslots
-        L = side0.shape[0]
-        msgs = []
-        part_scores = []
-        cur = side0
-        for t in range(ndev):
-            nxt = compat.ring_shift(cur, axes) if t < ndev - 1 else None
-            msgs.append(cur)
-            wt = cur[o_w:o_w + S * d].reshape(S, d)
-            bt = cur[o_w + S * d:]
+        plan = _hop_plan(cfg, axes, ndev, idx, hosts)
+        m = plan.m
+
+        def consume(blk):         # (m, L) arrived → (m, S, per) eq. 7
+            wt = blk[:, o_w:o_w + S * d].reshape(m, S, d)
+            bt = blk[:, o_w + S * d:].reshape(m, S)
             if per_config_data:
                 if nnzc is not None:
-                    s = jax.vmap(lambda xs, w1: xs @ w1)(Xl, wt) \
-                        + bt[:, None]
+                    s = jax.vmap(lambda w1: jax.vmap(
+                        lambda xs, w2: xs @ w2)(Xl, w1))(wt) \
+                        + bt[:, :, None]
                 else:
-                    s = jnp.einsum("spd,sd->sp", Xl, wt) + bt[:, None]
+                    s = jnp.einsum("spd,msd->msp", Xl, wt) \
+                        + bt[:, :, None]
             elif nnzc is not None:
-                s = (Xl @ wt.T).T + bt[:, None]
+                s = (Xl @ wt.reshape(m * S, d).T).T.reshape(m, S, per) \
+                    + bt[:, :, None]
             else:
-                s = jnp.einsum("pd,sd->sp", Xl, wt) + bt[:, None]
-            part_scores.append(s.astype(w_b.dtype))
-            cur = nxt
+                s = jnp.einsum("pd,msd->msp", Xl, wt) + bt[:, :, None]
+            return s.astype(w_b.dtype)
 
-        # Stage t carried origin (idx-t) mod ndev → device order is ONE
-        # roll of the reversed-arrival concat (see _ring_merge's note).
-        M = jnp.roll(jnp.concatenate(msgs[::-1]),
-                     (idx + 1) * L).reshape(ndev, L)
+        # Stage t carried origin group (gi-t) → device order is ONE
+        # roll of the reversed-arrival concat (see _merge_hops's note).
+        M, ordered = _merge_hops(side0, plan, consume)
         xs = unpack_wire_rows(M[:, :o_x], ndev * n_rows, d, wire_dt,
                               wslots, nnz_cap=nnzc)
         if not dedup:
@@ -670,17 +677,16 @@ def _make_ring_sweep_body(cfg: MRSVMConfig, axes, ndev: int, per: int,
         acc = _assemble_chunks(xs, M, o_x, dedup, ndev, U, k, S, buf_dt)
         W = jnp.swapaxes(M[:, o_w:o_w + S * d].reshape(ndev, S, d), 0, 1)
         B = M[:, o_w + S * d:].T                     # (S, ndev)
-        scores = jnp.transpose(
-            jnp.roll(jnp.stack(part_scores[::-1]), idx + 1, axis=0),
-            (1, 2, 0))                               # (S, per, ndev)
+        scores = jnp.transpose(ordered, (1, 2, 0))   # (S, per, ndev)
 
         if per_config_data:
             risks = jax.vmap(
-                lambda sc, y1, m1: _device_risks(sc, y1, m1, cfg, axes))(
-                    scores, yl, ml)
+                lambda sc, y1, m1: _device_risks(
+                    sc, y1, m1, cfg, axes, ndev))(scores, yl, ml)
         else:
             risks = jax.vmap(
-                lambda sc: _device_risks(sc, yl, ml, cfg, axes))(scores)
+                lambda sc: _device_risks(
+                    sc, yl, ml, cfg, axes, ndev))(scores)
         l_star = jnp.argmin(risks, axis=1)                   # (S,)
         w_sel = jnp.take_along_axis(W, l_star[:, None, None], axis=1)[:, 0]
         b_sel = jnp.take_along_axis(B, l_star[:, None], axis=1)[:, 0]
@@ -752,16 +758,17 @@ def make_sharded_sweep_round(cfg: MRSVMConfig, axis_names: Sequence[str],
     :func:`make_sharded_round`'s body in an inner ``vmap`` over the
     leading config axis of ``(sv, params)``; the shuffle becomes S
     all-gathers batched into one collective per buffer leaf. With
-    ``"ring"`` the transport is the ring-pipelined, cross-config-
-    deduplicated merge of :func:`_make_ring_sweep_body`. With
-    ``per_config_data`` the rows/labels/mask also carry the (S,) job
-    axis — S *streams* with distinct data updating in one device pass
-    (the multi-tenant streaming wave, :mod:`repro.serving.svm_stream`).
+    ``"ring"`` or ``"hier"`` the transport is the packed,
+    cross-config-deduplicated merge of :func:`_make_packed_sweep_body`
+    over that transport's hop schedule. With ``per_config_data`` the
+    rows/labels/mask also carry the (S,) job axis — S *streams* with
+    distinct data updating in one device pass (the multi-tenant
+    streaming wave, :mod:`repro.serving.svm_stream`).
     """
     axes = tuple(axis_names)
-    if cfg.shuffle_impl == "ring":
-        return _make_ring_sweep_body(cfg, axes, num_devices,
-                                     rows_per_device, per_config_data)
+    if cfg.shuffle_impl in PACKED_SHUFFLES:
+        return _make_packed_sweep_body(cfg, axes, num_devices,
+                                       rows_per_device, per_config_data)
     body = make_sharded_round(cfg, axis_names, num_devices, rows_per_device)
 
     def sweep_body(Xl, yl, ml, sv_b: SVBuffer, params_b: SolverParams):

@@ -96,6 +96,15 @@ class Ctx:
                           shuffle_wire_dtype="float32",
                           shuffle_wire_check=wire_check)
 
+    def hier_cfg(self, wire_check: bool):
+        """Two-level transport at the simulated 2-host × 4-local
+        topology (DESIGN.md §16)."""
+        import dataclasses as dc
+        return dc.replace(self.cfg(), shuffle_impl="hier",
+                          shuffle_wire_dtype="float32",
+                          hier_num_hosts=2,
+                          shuffle_wire_check=wire_check)
+
     def mesh(self):
         if "mesh" not in self._cache:
             from repro import compat
@@ -213,6 +222,96 @@ def scenario_ring_garble(seed: int, ctx: Ctx) -> str:
                 f"[{e.layer}] wire checksum sentinel")
     raise AssertionError(
         "garbled wire produced FINITE risks — silent corruption")
+
+
+def scenario_hier_transient(seed: int, ctx: Ctx) -> str:
+    """delay_round + transport_exc over the HIER transport → SURVIVED:
+    a slow hop and 1-2 transient merge failures are absorbed by the
+    same host-driver seams the flat transports use (the two-level
+    schedule changes the collective, not the hardening), and the
+    sharded hier rounds stay bit-identical to the fault-free run."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.mapreduce_svm import (build_sharded_round,
+                                          init_sv_buffer)
+    from repro.faults.plan import TransientFault, maybe_raise, maybe_sleep
+    from repro.faults.retry import retry_with_backoff
+
+    X, y = ctx.problem()
+    n, d = X.shape
+    mask = jnp.ones((n,))
+    cfg = ctx.hier_cfg(True)
+    fn = build_sharded_round(ctx.mesh(), ("data",), cfg, n // NDEV)
+
+    def drive():
+        """The production driver loop's transport seams (DESIGN.md §15)
+        around the sharded hier round."""
+        sv = init_sv_buffer(cfg.sv_capacity, d)
+        for t in range(3):
+            maybe_sleep("transport.round", when=t)
+
+            def run_round():
+                maybe_raise("transport.merge", kinds=("transport_exc",),
+                            when=t)
+                return fn(X, y, mask, sv)
+
+            sv, risks, w, b = retry_with_backoff(
+                run_round, attempts=3, base_s=0.01,
+                retry_on=TransientFault, layer="transport",
+                cause=f"hier merge collective at round {t}")
+        return np.asarray(risks), np.asarray(sv.ids), np.asarray(sv.x), \
+            np.asarray(w)
+
+    clean = drive()                     # no plan armed: the oracle
+    plan = FaultPlan(seed=seed,
+                     specs=(FaultPlan.single("delay_round", seed).specs
+                            + FaultPlan.single("transport_exc", seed).specs))
+    before = counters().get("retries", 0)
+    with inject(plan) as armed:
+        chaos = drive()
+    assert armed.fired, "neither transport fault fired over hier"
+    assert sum(armed.remaining) == 0, "injected failures not all raised"
+    retried = counters().get("retries", 0) - before
+    for a, b2 in zip(chaos, clean):
+        assert np.array_equal(a, b2), \
+            "hier rounds under transient faults are NOT bit-identical"
+    return (f"slow hop at round {plan.specs[0].when} + {retried} merge "
+            "retries absorbed, hier rounds bit-identical")
+
+
+def scenario_hier_garble(seed: int, ctx: Ctx) -> str:
+    """ring_garble over the HIER transport → DETECTED: a mantissa bit
+    flipped on the inter-host slice exchange is caught by the same wire
+    checksum lane as the flat ring. At 2 simulated hosts only hop 0
+    shifts, so the spec pins ``when=None`` (first opportunity) rather
+    than ``FaultPlan.single``'s 1..6 draw."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.mapreduce_svm import (build_sharded_round,
+                                          init_sv_buffer)
+    from repro.faults.plan import FaultSpec, check_finite_risks
+    X, y = ctx.problem()
+    n, d = X.shape
+    mask = jnp.ones((n,))
+    cfg = ctx.hier_cfg(True)
+    param = int(np.random.default_rng([seed, 1093]).integers(0, 1 << 30))
+    plan = FaultPlan(seed=seed,
+                     specs=(FaultSpec("ring_garble", when=None, count=1,
+                                      param=param),))
+    with inject(plan) as armed:
+        # trace-time seam: arm while the hier program is built
+        fn = build_sharded_round(ctx.mesh(), ("data",), cfg, n // NDEV)
+        sv = init_sv_buffer(cfg.sv_capacity, d)
+        sv, risks, w, b = fn(X, y, mask, sv)
+    assert armed.fired, "the garble never baked into the hier trace"
+    try:
+        check_finite_risks(risks, where="garbled hier round")
+    except FaultDetected as e:
+        assert e.layer == "transport", f"wrong layer {e.layer!r}"
+        return ("inter-host hop garble caught: "
+                f"[{e.layer}] wire checksum sentinel")
+    raise AssertionError(
+        "garbled hier wire produced FINITE risks — silent corruption")
 
 
 def scenario_stall(seed: int, ctx: Ctx) -> str:
@@ -390,6 +489,8 @@ SCENARIOS = [
     ("transport_exc", "survived", scenario_transport_exc),
     ("wire_check_clean", "survived", scenario_wire_check_clean),
     ("ring_garble", "detected", scenario_ring_garble),
+    ("hier_transient", "survived", scenario_hier_transient),
+    ("hier_garble", "detected", scenario_hier_garble),
     ("stall", "detected", scenario_stall),
     ("ckpt_write_fail", "survived", scenario_ckpt_write_fail),
     ("ckpt_corrupt", "detected", scenario_ckpt_corrupt),

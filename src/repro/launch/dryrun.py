@@ -235,8 +235,9 @@ def main():
                                   "svm_serve")))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--rules", default="baseline")
+    from repro.core.mapreduce_svm import SHUFFLE_IMPLS
     ap.add_argument("--shuffle", default=None,
-                    choices=("allgather", "ring"),
+                    choices=SHUFFLE_IMPLS,
                     help="svm family: SV merge transport (default: the "
                          "arch config's shuffle_impl)")
     ap.add_argument("--processes", type=int, default=1,

@@ -61,6 +61,25 @@ def make_host_mesh(data: int = 1, model: int = 1, cluster=None):
     return compat.make_mesh((data, model), ("data", "model"))
 
 
+def simulated_hier_hosts(ndev: int):
+    """Host count for ``shuffle_impl="hier"`` launch configs.
+
+    On a real multi-process run returns ``None`` so the round builder
+    resolves the host count from ``compat.process_count()`` (the actual
+    topology). Single-process — the simulated case every CI/dryrun
+    program runs in — picks a non-degenerate two-level split so the
+    hier schedule actually exercises both legs: ``ndev // 8`` hosts
+    (one simulated host per 8 locals, e.g. 512 devices → 64 hosts),
+    falling back to 2, and only degenerating to 1 when ``ndev`` is odd.
+    """
+    if compat.process_count() > 1:
+        return None
+    for hosts in (max(2, ndev // 8), 2):
+        if hosts <= ndev and ndev % hosts == 0:
+            return hosts
+    return 1
+
+
 def batch_axes(mesh) -> tuple:
     """Mesh axes the batch dim shards over."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

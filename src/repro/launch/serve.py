@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.launch.cluster import (add_cluster_flags, cluster_config_from_args,
                                   init_cluster)
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, simulated_hier_hosts
 from repro.launch.steps import InputShape, build_serve_step
 from repro.models.config import smoke_variant
 
@@ -52,8 +52,10 @@ def serve_svm(svm_cfg, args, cluster) -> None:
     rows = svm_cfg.stream_rows_per_wave
     L = args.data_par if args.data_par > 1 else 8   # partitions (default 8)
     shuffle = args.shuffle or getattr(svm_cfg, "shuffle_impl", "allgather")
+    hosts = simulated_hier_hosts(L) if shuffle == "hier" else None
     cfg = MRSVMConfig(sv_capacity=svm_cfg.sv_capacity, gamma=1e-4,
                       max_rounds=3, shuffle_impl=shuffle,
+                      hier_num_hosts=hosts,
                       svm=SVMConfig(C=svm_cfg.C,
                                     max_epochs=svm_cfg.max_epochs))
     dt = jnp.dtype(svm_cfg.dtype)
@@ -144,8 +146,9 @@ def main():
                     help="svm family: tenant streams served")
     ap.add_argument("--waves", type=int, default=3,
                     help="svm family: update waves to run")
+    from repro.core.mapreduce_svm import SHUFFLE_IMPLS
     ap.add_argument("--shuffle", default=None,
-                    choices=("allgather", "ring"),
+                    choices=SHUFFLE_IMPLS,
                     help="svm family: SV merge transport of the sharded "
                          "fold programs (default: the arch config's)")
     ap.add_argument("--checkpoint-dir", default=None,

@@ -249,6 +249,23 @@ def _svm_shuffle(svm_cfg, shuffle_impl: Optional[str]) -> str:
         else getattr(svm_cfg, "shuffle_impl", "allgather")
 
 
+def _svm_mr_cfg(svm_cfg, shuffle_impl: Optional[str], ndev: int):
+    """MRSVMConfig for a launch step. For the two-level hier transport
+    the host count comes from the real process topology when there is
+    one, else from ``simulated_hier_hosts`` so single-process dry-runs
+    still lower a non-degenerate two-level schedule (DESIGN.md §16)."""
+    from repro.core.mapreduce_svm import MRSVMConfig
+    from repro.launch.mesh import simulated_hier_hosts
+
+    shuffle = _svm_shuffle(svm_cfg, shuffle_impl)
+    hosts = simulated_hier_hosts(ndev) if shuffle == "hier" else None
+    return MRSVMConfig(
+        sv_capacity=svm_cfg.sv_capacity,
+        shuffle_impl=shuffle,
+        hier_num_hosts=hosts,
+        svm=_svm_solver_cfg(svm_cfg))
+
+
 def _svm_solver_cfg(svm_cfg):
     """Reducer SVMConfig from the workload config, carrying the row
     format (DESIGN.md §12) so the whole sharded program — SV buffers,
@@ -280,17 +297,13 @@ def build_svm_round_step(svm_cfg, mesh,
     (pod,)data; the SV merge 'shuffle' is the all-gather or the
     ring-pipelined transport per ``shuffle_impl`` (DESIGN.md §2/§10)."""
     import numpy as np
-    from repro.core.mapreduce_svm import (MRSVMConfig, SVBuffer,
-                                          make_sharded_round)
+    from repro.core.mapreduce_svm import SVBuffer, make_sharded_round
 
     axes = batch_axes(mesh)
     ndev = int(np.prod([mesh.shape[a] for a in axes]))
     per = svm_cfg.rows_per_device
     n, d = ndev * per, svm_cfg.num_features
-    mr_cfg = MRSVMConfig(
-        sv_capacity=svm_cfg.sv_capacity,
-        shuffle_impl=_svm_shuffle(svm_cfg, shuffle_impl),
-        svm=_svm_solver_cfg(svm_cfg))
+    mr_cfg = _svm_mr_cfg(svm_cfg, shuffle_impl, ndev)
     body = make_sharded_round(mr_cfg, axes, ndev, per)
     row_spec = P(axes if len(axes) > 1 else axes[0])
     rep = SVBuffer(x=P(), y=P(), alpha=P(), ids=P(), mask=P())
@@ -326,7 +339,6 @@ def build_svm_sweep_step(svm_cfg, mesh, num_configs: int,
     transport the S buffers additionally ride the cross-config dedup
     wire format (DESIGN.md §10)."""
     import numpy as np
-    from repro.core.mapreduce_svm import MRSVMConfig
     from repro.core.svm import SolverParams
     from repro.core.sweep import init_sharded_sweep_sv, sharded_sweep_program
 
@@ -336,10 +348,7 @@ def build_svm_sweep_step(svm_cfg, mesh, num_configs: int,
     n, d = ndev * per, svm_cfg.num_features
     S = num_configs
     cap = svm_cfg.sv_capacity
-    mr_cfg = MRSVMConfig(
-        sv_capacity=cap,
-        shuffle_impl=_svm_shuffle(svm_cfg, shuffle_impl),
-        svm=_svm_solver_cfg(svm_cfg))
+    mr_cfg = _svm_mr_cfg(svm_cfg, shuffle_impl, ndev)
     fn, in_specs, out_specs = sharded_sweep_program(mesh, axes, mr_cfg, per)
 
     dt = jnp.dtype(svm_cfg.dtype)
@@ -372,7 +381,6 @@ def build_svm_serve_step(svm_cfg, mesh, num_streams: int = 4,
     Rows per stream = stream_rows_per_wave new messages + the carried
     SV capacity, sharded over the data axes."""
     import numpy as np
-    from repro.core.mapreduce_svm import MRSVMConfig
     from repro.core.svm import SolverParams
     from repro.core.sweep import init_sharded_sweep_sv, sharded_sweep_program
 
@@ -383,10 +391,7 @@ def build_svm_serve_step(svm_cfg, mesh, num_streams: int = 4,
     per = -(-wave_rows // ndev)
     n, d = ndev * per, svm_cfg.num_features
     S = num_streams
-    mr_cfg = MRSVMConfig(
-        sv_capacity=cap,
-        shuffle_impl=_svm_shuffle(svm_cfg, shuffle_impl),
-        svm=_svm_solver_cfg(svm_cfg))
+    mr_cfg = _svm_mr_cfg(svm_cfg, shuffle_impl, ndev)
     fn, in_specs, out_specs = sharded_sweep_program(
         mesh, axes, mr_cfg, per, per_config_data=True)
 

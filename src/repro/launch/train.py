@@ -34,7 +34,7 @@ from repro.configs import get_config
 from repro.data import DataConfig, lm_batch_at, svm_rows_shard
 from repro.launch.cluster import (add_cluster_flags, cluster_config_from_args,
                                   init_cluster)
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, simulated_hier_hosts
 from repro.launch.steps import InputShape, build_train_step
 from repro.models.config import smoke_variant
 
@@ -67,8 +67,11 @@ def train_svm(svm_cfg, args, cluster) -> None:
     n, d = ndev * per, svm_cfg.num_features
     mesh = make_host_mesh(ndev, 1, cluster=cluster)
     rounds = max(1, args.rounds)
+    shuffle = args.shuffle or getattr(svm_cfg, "shuffle_impl", "allgather")
+    hosts = simulated_hier_hosts(ndev) if shuffle == "hier" else None
     cfg = MRSVMConfig(sv_capacity=svm_cfg.sv_capacity,
                       gamma=1e-4, max_rounds=rounds,
+                      shuffle_impl=shuffle, hier_num_hosts=hosts,
                       svm=SVMConfig(C=svm_cfg.C,
                                     max_epochs=svm_cfg.max_epochs))
 
@@ -143,6 +146,11 @@ def main():
                     help="svm family: MapReduce rounds")
     ap.add_argument("--rows-per-device", type=int, default=0,
                     help="svm family: override rows per device")
+    from repro.core.mapreduce_svm import SHUFFLE_IMPLS
+    ap.add_argument("--shuffle", default=None,
+                    choices=SHUFFLE_IMPLS,
+                    help="svm family: SV merge transport (default: the "
+                         "arch config's shuffle_impl)")
     add_cluster_flags(ap)
     args = ap.parse_args()
 

@@ -203,7 +203,9 @@ class StreamingSVMService:
                  heartbeat_path: Optional[str] = None,
                  watchdog_handler=None):
         # ``shuffle_impl`` overrides the SV merge transport of the
-        # config (DESIGN.md §10). The functional folds this host-local
+        # config — any of SHUFFLE_IMPLS, including the two-level
+        # "hier" schedule (DESIGN.md §10/§16). The functional folds
+        # this host-local
         # service runs have no collective, but the config is the single
         # source of truth for any sharded program derived from the
         # service (launch.steps.build_svm_serve_step / dryrun

@@ -11,7 +11,9 @@ Each process:
   2. loads ONLY its disjoint TF×IDF row shard (svm_rows_shard) and
      assembles the global arrays with Cluster.make_global_array;
   3. runs the sharded MapReduce-SVM round — build_sharded_round
-     UNCHANGED, under both merge transports — over the global mesh;
+     UNCHANGED, under every merge transport (allgather / ring / the
+     two-level hier, whose host count comes from the real process
+     topology) — over the global mesh;
   4. checks the result against the single-process functional reference
      (mapreduce_round over the full dataset, recomputed locally).
 
@@ -220,9 +222,12 @@ if FT:
     print("MP_CHAOS_OK" if CHAOS else "MP_FT_OK", flush=True)
     sys.exit(0)
 
-for shuffle in ("allgather", "ring"):
-    # f32 wire keeps the ring bit-exact so the functional reference
-    # stays the strict oracle (same convention as test_sharded_round)
+for shuffle in ("allgather", "ring", "hier"):
+    # f32 wire keeps the packed transports bit-exact so the functional
+    # reference stays the strict oracle (same convention as
+    # test_sharded_round). hier resolves its host count from the REAL
+    # process topology here (hier_num_hosts=None → process_count): the
+    # 2-process × 4-local run is the genuine two-level schedule.
     cfg = MRSVMConfig(sv_capacity=64, svm=SVMConfig(C=1.0, max_epochs=15),
                       shuffle_impl=shuffle, shuffle_wire_dtype="float32")
     fn = build_sharded_round(mesh, ("data",), cfg, per)
@@ -268,7 +273,7 @@ Xsp = sparse.SparseRows(
                               (N_ROWS, CAP)),
     D)
 
-for shuffle in ("allgather", "ring"):
+for shuffle in ("allgather", "ring", "hier"):
     cfg_d = MRSVMConfig(sv_capacity=64, svm=SVMConfig(C=1.0, max_epochs=15),
                         shuffle_impl=shuffle, shuffle_wire_dtype="float32")
     cfg_s = dc.replace(cfg_d, svm=dc.replace(

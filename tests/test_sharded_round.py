@@ -45,19 +45,21 @@ def _functional_reference(X, y, mask, cfg, rounds):
 
 
 def _assert_round_equivalence(mesh_shape, mesh_axes, rounds=3,
-                              shuffle_impl="allgather"):
+                              shuffle_impl="allgather",
+                              hier_num_hosts=None):
     from repro import compat
     from repro.core import MRSVMConfig, SVMConfig
     from repro.core.mapreduce_svm import build_sharded_round, init_sv_buffer
 
     X, y, mask = _problem()
     n, d = X.shape
-    # ring: wire dtype = data dtype so the transport is bit-exact and
-    # the functional reference stays the strict oracle (the bf16 wire
-    # is exercised separately with bf16-representable data)
+    # ring/hier: wire dtype = data dtype so the transport is bit-exact
+    # and the functional reference stays the strict oracle (the bf16
+    # wire is exercised separately with bf16-representable data)
     cfg = MRSVMConfig(sv_capacity=64, svm=SVMConfig(C=1.0, max_epochs=15),
                       shuffle_impl=shuffle_impl,
-                      shuffle_wire_dtype="float32")
+                      shuffle_wire_dtype="float32",
+                      hier_num_hosts=hier_num_hosts)
 
     mesh = compat.make_mesh(mesh_shape, mesh_axes)
     data_axes = tuple(a for a in mesh_axes if a != "model")
@@ -180,9 +182,11 @@ def _check_ring_fallback_pod_2d():
         _lax.ppermute = orig
 
 
-def _check_ring_bf16_wire(rounds=3):
+def _check_ring_bf16_wire(rounds=3, shuffle_impl="ring",
+                          hier_num_hosts=None):
     """The production wire dtype: with bf16-representable rows the wire
-    round-trip is lossless, so ring ≡ allgather stays strict."""
+    round-trip is lossless, so the packed transport ≡ allgather stays
+    strict."""
     import dataclasses as dc
 
     import jax.numpy as jnp
@@ -195,7 +199,8 @@ def _check_ring_bf16_wire(rounds=3):
     y = jnp.sign(X @ jax.random.normal(jax.random.PRNGKey(1), (X.shape[1],)))
     n, d = X.shape
     cfg_a = MRSVMConfig(sv_capacity=64, svm=SVMConfig(C=1.0, max_epochs=15))
-    cfg_r = dc.replace(cfg_a, shuffle_impl="ring")   # bf16 wire default
+    cfg_r = dc.replace(cfg_a, shuffle_impl=shuffle_impl,   # bf16 wire default
+                       hier_num_hosts=hier_num_hosts)
     mesh = compat.make_mesh((NDEV,), ("data",))
     fa = build_sharded_round(mesh, ("data",), cfg_a, n // NDEV)
     fr = build_sharded_round(mesh, ("data",), cfg_r, n // NDEV)
@@ -217,7 +222,8 @@ def _check_ring_bf16_wire(rounds=3):
 
 
 def _assert_sparse_round_equivalence(shuffle_impl: str, rounds=3,
-                                     n=512, d=64, nnz=8, cap=16):
+                                     n=512, d=64, nnz=8, cap=16,
+                                     hier_num_hosts=None):
     """ISSUE 6 tentpole invariant: the blocked-CSR sharded round — SV
     buffer, shuffle wire and all — must reproduce the DENSE functional
     reference at matched data (sparse rows densified for the oracle).
@@ -239,7 +245,8 @@ def _assert_sparse_round_equivalence(shuffle_impl: str, rounds=3,
 
     cfg_d = MRSVMConfig(sv_capacity=64, svm=SVMConfig(C=1.0, max_epochs=15),
                         shuffle_impl=shuffle_impl,
-                        shuffle_wire_dtype="float32")
+                        shuffle_wire_dtype="float32",
+                        hier_num_hosts=hier_num_hosts)
     cfg_s = dc.replace(cfg_d, svm=dc.replace(
         cfg_d.svm, row_format="sparse_csr", nnz_cap=cap))
 
@@ -306,6 +313,57 @@ def _assert_sparse_gram_round_equivalence(rounds=2, n=256, d=32,
                                rtol=1e-4, atol=1e-5)
 
 
+def _check_hier_1d():
+    # ISSUE 10 tentpole: the two-level hier merge (2 simulated hosts ×
+    # 4 locals) must reproduce the functional round exactly (f32 wire)
+    _assert_round_equivalence((NDEV,), ("data",), shuffle_impl="hier",
+                              hier_num_hosts=2)
+
+
+def _check_hier_pod_2d():
+    # hier over the flattened ("pod", "data") index — multi-axis
+    # grouped all_gather + slice-exchange ppermute
+    _assert_round_equivalence((2, NDEV // 2), ("pod", "data"),
+                              shuffle_impl="hier", hier_num_hosts=2)
+
+
+def _check_hier_bf16_wire():
+    _check_ring_bf16_wire(shuffle_impl="hier", hier_num_hosts=2)
+
+
+def _check_tree_converge():
+    """converge_impl="tree" (recursive-doubling readback) ≡ the flat
+    psum readback, transport-independent, on 8 devices. Summation
+    order differs (log-depth pairwise vs backend reduce) so risks get
+    a float tolerance; everything downstream of the argmin-selected
+    hypothesis must agree exactly."""
+    import dataclasses as dc
+
+    from repro import compat
+    from repro.core import MRSVMConfig, SVMConfig
+    from repro.core.mapreduce_svm import build_sharded_round, init_sv_buffer
+
+    X, y, mask = _problem()
+    n, d = X.shape
+    cfg_p = MRSVMConfig(sv_capacity=64, svm=SVMConfig(C=1.0, max_epochs=15),
+                        shuffle_impl="hier", hier_num_hosts=2,
+                        shuffle_wire_dtype="float32")
+    cfg_t = dc.replace(cfg_p, converge_impl="tree")
+    mesh = compat.make_mesh((NDEV,), ("data",))
+    fp = build_sharded_round(mesh, ("data",), cfg_p, n // NDEV)
+    ft = build_sharded_round(mesh, ("data",), cfg_t, n // NDEV)
+    sv_p = init_sv_buffer(cfg_p.sv_capacity, d)
+    sv_t = init_sv_buffer(cfg_t.sv_capacity, d)
+    for _ in range(3):
+        sv_p, risks_p, w_p, b_p = fp(X, y, mask, sv_p)
+        sv_t, risks_t, w_t, b_t = ft(X, y, mask, sv_t)
+    np.testing.assert_allclose(np.asarray(risks_p), np.asarray(risks_t),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(sv_p.ids), np.asarray(sv_t.ids))
+    np.testing.assert_array_equal(np.asarray(sv_p.x), np.asarray(sv_t.x))
+    np.testing.assert_array_equal(np.asarray(w_p), np.asarray(w_t))
+
+
 def _check_gram_xla():
     _assert_gram_round_equivalence("xla")
 
@@ -320,6 +378,10 @@ def _check_sparse_1d():
 
 def _check_sparse_ring_1d():
     _assert_sparse_round_equivalence("ring")
+
+
+def _check_sparse_hier_1d():
+    _assert_sparse_round_equivalence("hier", hier_num_hosts=2)
 
 
 def _check_sparse_gram_pallas():
@@ -373,6 +435,41 @@ def test_ring_round_bf16_wire_matches_allgather():
         _check_ring_bf16_wire()
     else:
         _in_subprocess("_check_ring_bf16_wire")
+
+
+def test_hier_round_matches_functional():
+    if len(jax.devices()) >= NDEV:
+        _check_hier_1d()
+    else:
+        _in_subprocess("_check_hier_1d")
+
+
+def test_hier_round_matches_functional_pod_mesh():
+    if len(jax.devices()) >= NDEV:
+        _check_hier_pod_2d()
+    else:
+        _in_subprocess("_check_hier_pod_2d")
+
+
+def test_hier_round_bf16_wire_matches_allgather():
+    if len(jax.devices()) >= NDEV:
+        _check_hier_bf16_wire()
+    else:
+        _in_subprocess("_check_hier_bf16_wire")
+
+
+def test_tree_converge_matches_psum():
+    if len(jax.devices()) >= NDEV:
+        _check_tree_converge()
+    else:
+        _in_subprocess("_check_tree_converge")
+
+
+def test_sparse_hier_round_matches_dense_functional():
+    if len(jax.devices()) >= NDEV:
+        _check_sparse_hier_1d()
+    else:
+        _in_subprocess("_check_sparse_hier_1d")
 
 
 def test_ring_round_single_axis_ppermute_fallback():

@@ -294,6 +294,85 @@ print("RING_SWEEP_OK")
 """
 
 
+_HIER_SWEEP_SCRIPT = """
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses as dc
+import jax, jax.numpy as jnp, numpy as np
+from repro import compat
+from repro.core import (MRSVMConfig, SVMConfig, sweep_grid, DedupChunk,
+                        build_sharded_sweep_round, run_sharded_sweep,
+                        fit_mapreduce_sweep, save_sweep_state,
+                        restore_sweep_state)
+
+n, d = 512, 12
+X = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+w = jax.random.normal(jax.random.PRNGKey(1), (d,))
+y = jnp.sign(X @ w)
+cfg_a = MRSVMConfig(sv_capacity=64, gamma=5e-3, max_rounds=6,
+                    svm=SVMConfig(C=1.0, max_epochs=15))
+# 2 simulated hosts x 4 locals: the two-level schedule, f32 wire so the
+# allgather run stays the strict oracle
+cfg_h = dc.replace(cfg_a, shuffle_impl="hier", shuffle_wire_dtype="float32",
+                   hier_num_hosts=2)
+params = sweep_grid(cfg_a.svm, C=[1e-4, 0.5, 1.0, 5.0])
+
+mesh = compat.make_mesh((8,), ("data",))
+fa = build_sharded_sweep_round(mesh, ("data",), cfg_a, n // 8)
+fh = build_sharded_sweep_round(mesh, ("data",), cfg_h, n // 8)
+assert isinstance(fh.init_sv(4, d), DedupChunk)   # shared-row dedup state
+sa = run_sharded_sweep(fa, X, y, None, cfg_a, params)
+sh = run_sharded_sweep(fh, X, y, None, cfg_h, params)
+
+np.testing.assert_array_equal(sa.rounds, sh.rounds)
+np.testing.assert_allclose(np.asarray(sa.risks), np.asarray(sh.risks),
+                           rtol=1e-6)
+np.testing.assert_allclose(np.asarray(sa.ws), np.asarray(sh.ws), rtol=1e-6)
+np.testing.assert_array_equal(np.asarray(sa.sv.ids), np.asarray(sh.sv.ids))
+np.testing.assert_allclose(np.asarray(sa.sv.x), np.asarray(sh.sv.x),
+                           rtol=1e-6)
+np.testing.assert_allclose(np.asarray(sa.sv.alpha), np.asarray(sh.sv.alpha),
+                           rtol=1e-6)
+assert sa.best == sh.best
+
+fres = fit_mapreduce_sweep(X, y, 8, cfg_a, params)
+np.testing.assert_allclose(np.asarray(sh.risks), np.asarray(fres.risks),
+                           rtol=1e-4, atol=1e-5)
+
+# dedup state round-trip: the DedupChunk wire layout is a property of
+# the packed wire format, not the hop schedule — a hier round state
+# must survive save_sweep_state/restore_sweep_state and resume
+# bit-for-bit (the mid-training recovery path of DESIGN.md §13)
+mask = jnp.ones((n,))
+state = fh.init_sv(4, d)
+for t in range(2):
+    state, risks, ws, bs = fh(X, y, mask, state, params)
+ckpt_dir = tempfile.mkdtemp(prefix="hier_sweep_")
+save_sweep_state(os.path.join(ckpt_dir, "sweep_1.npz"), state, step=1)
+state_r = restore_sweep_state(os.path.join(ckpt_dir, "sweep_1.npz"),
+                              cfg_h, 4, d, 8, n // 8)
+out_r = fh(X, y, mask, state_r, params)
+out_u = fh(X, y, mask, state, params)
+for a, b in zip(jax.tree_util.tree_leaves(out_r),
+                jax.tree_util.tree_leaves(out_u)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("HIER_SWEEP_OK")
+"""
+
+
+def test_hier_sweep_matches_allgather_and_functional():
+    """ISSUE 10 tentpole: the two-level hier sweep transport (dedup
+    wire over the hier hop schedule) must converge to the same models
+    as the allgather sweep AND the functional sweep, and its DedupChunk
+    round state must round-trip through save/restore_sweep_state
+    bit-for-bit."""
+    from conftest import subprocess_env
+    r = subprocess.run([sys.executable, "-c", _HIER_SWEEP_SCRIPT],
+                       capture_output=True, text=True, timeout=600,
+                       env=subprocess_env(PYTHONPATH=str(REPO / "src")))
+    assert "HIER_SWEEP_OK" in r.stdout, r.stdout + r.stderr
+
+
 def test_ring_sweep_matches_allgather_and_functional():
     """ISSUE 4 tentpole: the ring-pipelined, cross-config-deduplicated
     sweep transport must converge to the same models as the allgather
